@@ -1,0 +1,58 @@
+//! Regenerate the paper's tables/figures at a reduced scale (fast
+//! preview of what `cargo bench` produces at full scale) and print them
+//! as markdown. Writes results/*.md + *.csv.
+//!
+//! Run: `cargo run --release --example paper_tables`
+
+use mli::algorithms::logreg::Backend;
+use mli::bench_harness::{
+    als_scaling, logreg_scaling, AlsBenchConfig, LogregBenchConfig, ScalingMode,
+};
+use mli::bench_harness::loc;
+use mli::data::netflix::NetflixConfig;
+
+fn main() -> mli::Result<()> {
+    // Fig 2a / 3a: lines of code
+    let t2a = loc::fig2a();
+    println!("{}", t2a.to_markdown());
+    t2a.save("fig2a_loc")?;
+    let t3a = loc::fig3a();
+    println!("{}", t3a.to_markdown());
+    t3a.save("fig3a_loc")?;
+
+    // Fig 2b/2c preview (reduced scale; benches run the full version)
+    let cfg = LogregBenchConfig {
+        machines: vec![1, 2, 4, 8],
+        rows: 512,
+        d: 64,
+        iters: 5,
+        backend: Backend::Xla,
+        seed: 42,
+        reps: 1,
+    };
+    let t = logreg_scaling(&cfg, ScalingMode::Weak)?;
+    println!("{}", t.to_markdown());
+    t.save("fig2bc_preview")?;
+
+    // Fig 3b/3c preview
+    let acfg = AlsBenchConfig {
+        machines: vec![1, 4, 9],
+        base: NetflixConfig {
+            users: 512,
+            items: 48,
+            mean_nnz_per_user: 8,
+            max_nnz_per_user: 20,
+            ..Default::default()
+        },
+        iters: 3,
+        use_xla: true,
+        reps: 1,
+        ..Default::default()
+    };
+    let t = als_scaling(&acfg, ScalingMode::Weak)?;
+    println!("{}", t.to_markdown());
+    t.save("fig3bc_preview")?;
+
+    println!("paper_tables OK (full-scale versions: `cargo bench`)");
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! Perf probe for the §Perf pass (EXPERIMENTS.md): times every
+//! `local_sgd_epoch` artifact of a given shape through the PJRT runtime.
+//! Point MLI_ARTIFACTS at an experimental artifact dir to compare
+//! alternative lowerings (block sizes, pallas-vs-jnp).
+//!
+//! Run: `cargo run --release --example perf_probe`
+
+use mli::runtime::{Runtime, Tensor};
+use mli::util::{median, timer};
+
+fn main() -> mli::Result<()> {
+    let rt = Runtime::new(Runtime::artifact_dir())?;
+    let (n, d) = (2048usize, 512usize);
+    let x = Tensor::F32(vec![0.1; n * d], vec![n, d]);
+    let y = Tensor::F32(vec![0.0; n], vec![n]);
+    let w = Tensor::F32(vec![0.0; d], vec![d]);
+    let lr = Tensor::Scalar(0.01);
+    let mut variants: Vec<_> = rt.manifest().clone().artifacts;
+    variants.retain(|a| a.entry == "local_sgd_epoch" && a.inputs[0].shape == vec![n, d]);
+    for a in &variants {
+        let args = [x.clone(), y.clone(), w.clone(), lr.clone()];
+        let _ = rt.execute(&a.entry, &a.variant, &args)?;
+        let s = timer::sample(1, 8, || rt.execute(&a.entry, &a.variant, &args).unwrap());
+        let ms = median(&s) * 1e3;
+        let gflops = 4.0 * (n * d) as f64 / (ms / 1e3) / 1e9;
+        println!(
+            "{:<28} block={:<5} {:>8.2} ms  {:>6.2} GFLOP/s",
+            a.variant,
+            a.block.map(|b| b.to_string()).unwrap_or_else(|| "?".into()),
+            ms,
+            gflops
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Quickstart: the MLI workflow end to end on a small CSV —
+//! load semi-structured data, featurize, train logistic regression on the
+//! simulated cluster (XLA-compiled hot path), and predict.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::rc::Rc;
+
+use mli::algorithms::logreg::{Backend, LogRegParams, LogisticRegression};
+use mli::algorithms::{Algorithm, Model};
+use mli::cluster::SimCluster;
+use mli::engine::EngineContext;
+use mli::features::standard_scale;
+use mli::mltable::csv_from_str;
+use mli::optim::SgdParams;
+use mli::util::rng::Rng;
+
+fn main() -> mli::Result<()> {
+    // 1. "Load" a CSV (here: synthesized in-memory; swap for
+    //    csv_from_file on real data). Schema: label, then 8 features.
+    let mut rng = Rng::new(7);
+    let mut csv = String::from("label,f0,f1,f2,f3,f4,f5,f6,f7\n");
+    for _ in 0..512 {
+        let x: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
+        let margin = 2.0 * x[0] - 1.5 * x[3] + 0.5 * x[7];
+        let y = i32::from(rng.f64() < 1.0 / (1.0 + (-margin).exp()));
+        csv.push_str(&format!(
+            "{y},{}\n",
+            x.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>().join(",")
+        ));
+    }
+
+    let ctx = EngineContext::new();
+    let table = csv_from_str(&ctx, &csv, true, 4)?;
+    println!(
+        "loaded MLTable: {} rows x {} cols over {} partitions",
+        table.num_rows()?,
+        table.num_cols(),
+        table.num_partitions()
+    );
+
+    // 2. featurize: standardize the feature columns (label col skipped)
+    let numeric = standard_scale(&table.to_numeric()?, 1)?;
+
+    // 3. train on a simulated 4-machine cluster; local SGD epochs run as
+    //    AOT-compiled XLA programs via PJRT (python never runs here)
+    let cluster = SimCluster::ec2(4);
+    let algo = LogisticRegression::new(LogRegParams {
+        sgd: SgdParams {
+            learning_rate: 0.05,
+            iters: 15,
+            track_loss: true,
+            ..Default::default()
+        },
+        backend: Backend::Xla,
+    });
+    let model = algo.train(&numeric, &cluster)?;
+
+    println!("loss curve: {:?}", model.loss_history);
+    println!(
+        "simulated walltime: {:.3}s (compute measured, network modelled)",
+        model.sim_seconds
+    );
+
+    // 4. predict + report training accuracy
+    let rows = numeric.table().collect()?;
+    let mut correct = 0;
+    for r in &rows {
+        let v = r.to_vector()?;
+        let p = model.predict(&v.slice(1, v.len()))?;
+        if (p > 0.5) == (v[0] > 0.5) {
+            correct += 1;
+        }
+    }
+    println!(
+        "training accuracy: {:.1}% ({} / {})",
+        100.0 * correct as f64 / rows.len() as f64,
+        correct,
+        rows.len()
+    );
+    assert!(correct as f64 / rows.len() as f64 > 0.7);
+    println!("quickstart OK");
+    Ok(())
+}
+
+// Rc is used by library internals; silence the unused-import lint if the
+// example stops needing it.
+#[allow(unused)]
+fn _keep(_: Rc<()>) {}

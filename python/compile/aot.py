@@ -1,0 +1,180 @@
+"""AOT compile path: lower every L2 entry point to HLO text artifacts.
+
+Run once by ``make artifacts`` (and never at serve time):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one ``<entry>__<variant>.hlo.txt`` per (entry point, shape variant)
+plus a ``manifest.json`` the rust runtime uses to locate artifacts and
+validate argument shapes.
+
+Interchange format is HLO *text*, NOT ``lowered.compile()`` /
+``.serialize()``: jax >= 0.5 emits HloModuleProtos with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md). We lower to stablehlo first and
+convert via xla_client so we can force ``return_tuple=True`` - the rust
+side then always unwraps a tuple regardless of output arity.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+F32 = jnp.float32
+
+
+def spec(*shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _entries():
+    """(name, variant, fn, example_args) for every artifact we ship.
+
+    Shape variants:
+      * ``small``  - fast shapes for tests and the quickstart example.
+      * ``bench``  - default benchmark shapes (d scaled down from the
+        paper's 160K dense features; DESIGN.md §3 substitutions).
+      * ``wide``   - a wider-d variant to let benches sweep feature count.
+    ALS ranks follow the paper (k=10) plus a small test rank.
+    """
+    e = []
+
+    # NOTE: entries are (name, variant, fn, specs) or
+    # (name, variant, fn, specs, aux) where aux keys are copied into the
+    # manifest record (e.g. the SGD minibatch block, which the rust
+    # fallback must match for bit-compatible differential tests).
+    # -- logistic regression ------------------------------------------------
+    for variant, n, d, b in [
+        ("small", 256, 64, 64),
+        ("bench", 2048, 512, 256),
+        ("wide", 1024, 2048, 256),
+        # strong-scaling ladder: fixed total data spread over more
+        # machines => fewer rows per partition; these variants keep the
+        # XLA work proportional to *real* rows instead of padding waste
+        ("strong256", 256, 512, 256),
+        ("strong512", 512, 512, 256),
+        ("strong1024", 1024, 512, 256),
+    ]:
+        sgd = lambda x, y, w, lr, _b=b: model.local_sgd_epoch(x, y, w, lr, block_n=_b)
+        e.append(
+            (
+                "local_sgd_epoch",
+                variant,
+                sgd,
+                (spec(n, d), spec(n), spec(d), spec()),
+                {"block": b},
+            )
+        )
+        grad = lambda x, y, w, _b=b: model.logreg_grad_batch(x, y, w)
+        e.append(
+            ("logreg_grad_batch", variant, grad, (spec(n, d), spec(n), spec(d)))
+        )
+        e.append(
+            ("logreg_predict", variant, model.logreg_predict, (spec(n, d), spec(d)))
+        )
+
+    # -- ALS ------------------------------------------------------------
+    for variant, u, m, k in [
+        ("small", 32, 64, 8),
+        ("bench", 256, 128, 10),
+    ]:
+        e.append(
+            (
+                "als_solve_batch",
+                variant,
+                model.als_solve_batch,
+                (spec(u, m, k), spec(u, m), spec(u, m), spec()),
+            )
+        )
+        # gram-only variant: entities whose rating count exceeds m are
+        # chunked into m-wide slots; grams are additive, so the rust side
+        # sums chunk grams and does the tiny k x k solve itself.
+        from compile.kernels import als_gram as _ag
+
+        e.append(
+            (
+                "als_gram_batch",
+                variant,
+                _ag.als_gram,
+                (spec(u, m, k), spec(u, m), spec(u, m)),
+            )
+        )
+        e.append(
+            (
+                "als_rmse_batch",
+                variant,
+                model.als_rmse_batch,
+                (spec(u, m, k), spec(u, m), spec(u, m), spec(u, k)),
+            )
+        )
+
+    # -- K-means ----------------------------------------------------------
+    for variant, n, d, c in [("small", 256, 64, 8), ("bench", 2048, 512, 50)]:
+        e.append(
+            ("kmeans_step", variant, model.kmeans_step, (spec(n, d), spec(c, d)))
+        )
+
+    return e
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation (return_tuple=True) -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-sep entry name filter")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"format": "hlo-text", "artifacts": []}
+    for entry in _entries():
+        name, variant, fn, specs = entry[:4]
+        aux = entry[4] if len(entry) > 4 else {}
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}__{variant}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        out_info = lowered.out_info
+        outs = jax.tree_util.tree_leaves(out_info)
+        manifest["artifacts"].append(
+            {
+                **aux,
+                "entry": name,
+                "variant": variant,
+                "file": fname,
+                "inputs": [
+                    {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+                ],
+                "outputs": [
+                    {"shape": [int(x) for x in o.shape], "dtype": str(o.dtype)}
+                    for o in outs
+                ],
+            }
+        )
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

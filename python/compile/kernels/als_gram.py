@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: batched ALS normal-equation assembly.
+
+The hot spot of the paper's `localALS` (Fig. A9) is, per user (or item) q:
+
+    A_q = Y_q^T Y_q + lambda*I      (k x k gram matrix over rated items)
+    b_q = Y_q^T r_q                 (k,)  right-hand side
+
+followed by solving A_q x = b_q. With rank k ~= 10 the solve is tiny; the
+cost is assembling A_q/b_q from the rated rows. We batch users: the L3
+coordinator gathers, for each user in a partition, its rated item factors
+into a dense (batch, max_nnz, k) tensor with a 0/1 validity mask (rows
+beyond the user's nnz are zero), and this kernel computes all gram
+matrices + rhs in one MXU-friendly pass.
+
+TPU mapping: one grid step per user-tile; a (bu, m, k) slab of factors is
+staged into VMEM and contracted on the MXU as batched (k,m)x(m,k) matmuls.
+For bu=8, m=128, k=16 the tile is 64 KiB - tiny; the real win on TPU is
+keeping the factor slab resident while both the gram and the rhs
+contraction read it.
+
+The k x k solve itself stays in L2 jax (jnp.linalg.solve) - it is O(k^3)
+with k<=32 and gains nothing from a custom kernel.
+
+interpret=True as required for CPU PJRT (see logreg_grad.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_U = 8
+
+
+def _gram_kernel(yf_ref, r_ref, mask_ref, a_ref, b_ref):
+    """One grid step: gram + rhs for a tile of users.
+
+    yf_ref:   (bu, m, k) gathered item factors per user (rows >= nnz are 0)
+    r_ref:    (bu, m)    ratings per user (0 beyond nnz)
+    mask_ref: (bu, m)    1.0 for valid rows
+    a_ref:    (bu, k, k) output gram matrices (without the lambda ridge)
+    b_ref:    (bu, k)    output right-hand sides
+    """
+    yf = yf_ref[...]
+    mask = mask_ref[...]
+    ym = yf * mask[..., None]
+    # batched gram: (bu,k,k) = ym^T ym per user, one einsum -> MXU
+    a_ref[...] = jnp.einsum("umk,uml->ukl", ym, ym)
+    b_ref[...] = jnp.einsum("umk,um->uk", ym, r_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_u",))
+def als_gram(factors, ratings, mask, *, block_u=DEFAULT_BLOCK_U):
+    """Batched gram-matrix assembly for ALS.
+
+    factors: (u, m, k) float32 - per-user gathered item factors
+    ratings: (u, m)    float32 - per-user ratings, 0-padded
+    mask:    (u, m)    float32 - 1.0 where the slot is a real rating
+    returns (grams, rhs): (u, k, k), (u, k)
+    """
+    u, m, k = factors.shape
+    assert u % block_u == 0, f"u={u} not divisible by block_u={block_u}"
+    grid = (u // block_u,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_u, m, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_u, m), lambda i: (i, 0)),
+            pl.BlockSpec((block_u, m), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_u, k, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_u, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((u, k, k), factors.dtype),
+            jax.ShapeDtypeStruct((u, k), factors.dtype),
+        ],
+        interpret=True,
+    )(factors, ratings, mask)

@@ -1,0 +1,115 @@
+"""L1 Pallas kernel: tiled logistic-regression gradient.
+
+Computes  grad = X^T (sigmoid(X w) - y)  for a partition-local minibatch.
+This is the compute hot-spot of the paper's `localSGD` inner loop
+(Fig. A4): every SGD step evaluates the gradient of the negative
+log-likelihood on a (mini)batch that lives in one MLTable partition.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the batch matrix X is tiled
+row-wise HBM->VMEM with a BlockSpec over the n dimension; each grid step
+computes a partial X_tile^T (sigmoid(X_tile w) - y_tile) on the MXU and
+accumulates into the output block, which stays resident in VMEM across the
+grid (out index_map is constant). d is kept whole per tile: for the default
+d=2048, a (128, 2048) f32 tile is 1 MiB of VMEM, and the running (2048,)
+accumulator is 8 KiB - comfortably inside the ~16 MiB VMEM budget with
+double buffering.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered through the interpreter to plain HLO
+(see /opt/xla-example/README.md). Correctness is pinned against the
+pure-jnp oracle in ref.py by python/tests/test_kernel.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile size along the batch dimension. 256 measured fastest on the
+# CPU-PJRT path (EXPERIMENTS.md §Perf: 128->256 = +11%, 512 flat, 1024+
+# regress); it also matches a (256, d) f32 VMEM tile = 0.5 MiB at d=512 on
+# the TPU mental model.
+DEFAULT_BLOCK_N = 256
+
+
+def _grad_kernel(x_ref, y_ref, w_ref, o_ref):
+    """One grid step: accumulate the gradient of one row-tile.
+
+    x_ref: (bn, d) tile of the design matrix (VMEM)
+    y_ref: (bn,)   tile of labels in {0,1}
+    w_ref: (d,)    full weight vector (broadcast to every grid step)
+    o_ref: (d,)    gradient accumulator (same block every step)
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    # margin: (bn,) = X_tile @ w  -- MXU matvec
+    margin = x @ w_ref[...]
+    resid = jax.nn.sigmoid(margin) - y_ref[...]
+    # partial gradient: (d,) = X_tile^T @ resid -- second MXU pass
+    o_ref[...] += x.T @ resid
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def logreg_grad(x, y, w, *, block_n=DEFAULT_BLOCK_N):
+    """Pallas logistic gradient: X^T (sigmoid(Xw) - y).
+
+    x: (n, d) float32, y: (n,) float32 in {0,1}, w: (d,) float32.
+    n must be divisible by block_n (callers pad; aot.py fixes shapes).
+    """
+    n, d = x.shape
+    assert n % block_n == 0, f"n={n} not divisible by block_n={block_n}"
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((d,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d,), x.dtype),
+        interpret=True,
+    )(x, y, w)
+
+
+def _loss_kernel(x_ref, y_ref, w_ref, o_ref):
+    """Accumulate the negative log-likelihood of one row-tile."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    margin = x_ref[...] @ w_ref[...]
+    y = y_ref[...]
+    # numerically-stable log(1+exp(-z)) formulation
+    nll = jnp.sum(jax.nn.softplus(margin) - y * margin)
+    o_ref[...] += nll[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def logreg_loss(x, y, w, *, block_n=DEFAULT_BLOCK_N):
+    """Pallas negative log-likelihood, tiled like logreg_grad."""
+    n, d = x.shape
+    assert n % block_n == 0
+    grid = (n // block_n,)
+    out = pl.pallas_call(
+        _loss_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), x.dtype),
+        interpret=True,
+    )(x, y, w)
+    return out[0]

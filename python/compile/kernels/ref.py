@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every kernel in this package must
+match its oracle to float32 tolerance across the hypothesis shape/dtype
+sweep in python/tests/test_kernel.py, and the L2 model functions are built
+so a pallas<->ref swap is a one-line change (model.py takes the kernel impl
+as a parameter for exactly that reason).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def logreg_grad_ref(x, y, w):
+    """grad = X^T (sigmoid(Xw) - y); the paper's Eq. (1)."""
+    return x.T @ (jax.nn.sigmoid(x @ w) - y)
+
+
+def logreg_loss_ref(x, y, w):
+    """Negative log-likelihood, stable softplus form."""
+    margin = x @ w
+    return jnp.sum(jax.nn.softplus(margin) - y * margin)
+
+
+def als_gram_ref(factors, ratings, mask):
+    """Per-user gram matrices and right-hand sides.
+
+    factors: (u, m, k); ratings, mask: (u, m).
+    Returns ((u,k,k), (u,k)) matching als_gram.als_gram.
+    """
+    ym = factors * mask[..., None]
+    grams = jnp.einsum("umk,uml->ukl", ym, ym)
+    rhs = jnp.einsum("umk,um->uk", ym, ratings)
+    return grams, rhs
+
+
+def als_solve_ref(factors, ratings, mask, lam):
+    """Full per-user ALS update: solve (Y^T Y + lam*I) x = Y^T r.
+
+    Matches the paper's objective (2): plain L2 ridge, lambda fixed.
+    """
+    grams, rhs = als_gram_ref(factors, ratings, mask)
+    k = factors.shape[-1]
+    ridge = lam * jnp.eye(k, dtype=factors.dtype)
+    return jnp.linalg.solve(grams + ridge[None], rhs[..., None])[..., 0]
+
+
+def local_sgd_epoch_ref(x, y, w0, lr, block_n):
+    """Oracle for model.local_sgd_epoch: sequential minibatch SGD.
+
+    Walks the partition in minibatches of block_n rows, applying
+    w -= lr * grad(minibatch) - the paper's localSGD (Fig. A4, bottom).
+    """
+    n = x.shape[0]
+    w = w0
+    for s in range(0, n, block_n):
+        xs, ys = x[s : s + block_n], y[s : s + block_n]
+        w = w - lr * logreg_grad_ref(xs, ys, w)
+    return w

@@ -1,0 +1,186 @@
+"""L2: the paper's per-partition compute graphs, written in jax.
+
+These are the functions the rust L3 coordinator calls on the request path
+(after AOT lowering by aot.py - python itself never runs at serve time):
+
+* ``local_sgd_epoch``  - the paper's localSGD (Fig. A4 bottom): sequential
+  minibatch SGD over one MLTable partition, gradient per minibatch computed
+  by the L1 pallas kernel. One call per worker per round; L3 averages the
+  returned weight vectors (the MapReduce gather/broadcast step).
+* ``logreg_grad_batch`` - full-partition gradient + loss for the
+  gradient-descent variant (the MATLAB baseline) and for loss logging.
+* ``logreg_predict``   - sigmoid margins for a partition (Model.predict).
+* ``als_solve_batch``  - the paper's localALS (Fig. A9): per-user normal
+  equations via the L1 gram kernel, then a batched SPD solve.
+* ``kmeans_step``      - assignment + per-centroid sums/counts for one
+  partition (the Fig. A2 pipeline's learner); L3 sums across partitions.
+
+AOT constraint: everything here must lower to *pure HLO math ops*. In
+particular jnp.linalg.solve / lax.linalg.cholesky lower to LAPACK
+custom-calls on CPU jaxlib, which the standalone xla_extension 0.5.1
+runtime the rust side uses cannot resolve. ``spd_solve`` below is therefore
+a hand-unrolled Cholesky + triangular solve over the static rank k (k<=32),
+emitting only adds/muls/divs/sqrts.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import als_gram as _als
+from compile.kernels import logreg_grad as _lr
+
+
+# --------------------------------------------------------------------------
+# Pure-HLO batched SPD solve (no LAPACK custom-calls)
+# --------------------------------------------------------------------------
+
+def spd_solve(a, b):
+    """Solve a @ x = b for SPD a, batched over leading dims.
+
+    a: (..., k, k) symmetric positive definite; b: (..., k).
+    Unrolled Cholesky (a = L L^T) + two triangular solves. k is a static
+    trace-time constant so the python loops unroll into straight-line HLO;
+    for k <= 32 this is ~k^3/3 fused mul-adds per matrix and beats any
+    custom-call roundtrip.
+    """
+    k = a.shape[-1]
+    # Cholesky: build L column by column. rows[i][j] holds L[..., i, j].
+    rows = [[None] * k for _ in range(k)]
+    for j in range(k):
+        s = a[..., j, j]
+        for p in range(j):
+            s = s - rows[j][p] * rows[j][p]
+        # clamp for numerical safety: padded all-zero entities would
+        # otherwise hit sqrt(0) and poison the batch with NaNs
+        diag = jnp.sqrt(jnp.maximum(s, 1e-30))
+        rows[j][j] = diag
+        for i in range(j + 1, k):
+            s = a[..., i, j]
+            for p in range(j):
+                s = s - rows[i][p] * rows[j][p]
+            rows[i][j] = s / diag
+    # forward solve L z = b
+    z = [None] * k
+    for i in range(k):
+        s = b[..., i]
+        for p in range(i):
+            s = s - rows[i][p] * z[p]
+        z[i] = s / rows[i][i]
+    # backward solve L^T x = z
+    x = [None] * k
+    for i in reversed(range(k)):
+        s = z[i]
+        for p in range(i + 1, k):
+            s = s - rows[p][i] * x[p]
+        x[i] = s / rows[i][i]
+    return jnp.stack(x, axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Logistic regression (paper §IV-A)
+# --------------------------------------------------------------------------
+
+def logreg_grad_batch(x, y, w, *, grad_impl=None, loss_impl=None):
+    """Full-partition gradient and NLL: one GD round's local contribution.
+
+    Returns (grad, loss[1]). L3 sums grads and losses across partitions
+    (the paper's master-side average is sum/num_partitions).
+    """
+    grad_impl = grad_impl or _lr.logreg_grad
+    loss_impl = loss_impl or _lr.logreg_loss
+    g = grad_impl(x, y, w)
+    l = loss_impl(x, y, w)
+    return g, jnp.reshape(l, (1,))
+
+
+def local_sgd_epoch(x, y, w0, lr, *, block_n=None, grad_impl=None):
+    """localSGD (Fig. A4): sequential minibatch passes over a partition.
+
+    x: (n, d), y: (n,), w0: (d,), lr: () learning rate (traced, so the
+    rust side can anneal it without recompiling).
+
+    Implemented as a lax.scan over n/block_n minibatches - scan (not
+    unroll) keeps the lowered HLO size O(1) in n (DESIGN.md §Perf L2).
+    Each scan step invokes the pallas gradient kernel with grid=1 on its
+    (block_n, d) slice.
+    """
+    n, d = x.shape
+    block_n = block_n or _lr.DEFAULT_BLOCK_N
+    assert n % block_n == 0
+    grad_impl = grad_impl or functools.partial(_lr.logreg_grad, block_n=block_n)
+    steps = n // block_n
+    xs = x.reshape(steps, block_n, d)
+    ys = y.reshape(steps, block_n)
+
+    def step(w, xy):
+        xb, yb = xy
+        g = grad_impl(xb, yb, w)
+        return w - lr * g, None
+
+    w, _ = jax.lax.scan(step, w0, (xs, ys))
+    return w
+
+
+def logreg_predict(x, w):
+    """Sigmoid margins for a partition: (n,) probabilities."""
+    return jax.nn.sigmoid(x @ w)
+
+
+# --------------------------------------------------------------------------
+# ALS (paper §IV-B)
+# --------------------------------------------------------------------------
+
+def als_solve_batch(factors, ratings, mask, lam, *, gram_impl=None):
+    """localALS: updated factor rows for a batch of users (or items).
+
+    factors: (u, m, k) gathered counterpart factors per entity,
+    ratings/mask: (u, m), lam: () ridge strength (traced).
+    Returns (u, k) solved factor rows. Entities with zero ratings get
+    ~zero vectors (their gram is lam*I and rhs is 0), matching the
+    cold-start convention of the reference MATLAB code.
+    """
+    gram_impl = gram_impl or _als.als_gram
+    grams, rhs = gram_impl(factors, ratings, mask)
+    k = factors.shape[-1]
+    ridge = lam * jnp.eye(k, dtype=factors.dtype)
+    return spd_solve(grams + ridge[None], rhs)
+
+
+def als_rmse_batch(factors, ratings, mask, rows):
+    """Partition-local sum of squared residuals + count, for RMSE logging.
+
+    rows: (u, k) current factors of the entities being evaluated.
+    Returns ([sse], [count]).
+    """
+    pred = jnp.einsum("umk,uk->um", factors, rows)
+    resid = (pred - ratings) * mask
+    return jnp.reshape(jnp.sum(resid * resid), (1,)), jnp.reshape(
+        jnp.sum(mask), (1,)
+    )
+
+
+# --------------------------------------------------------------------------
+# K-means (Fig. A2 pipeline learner)
+# --------------------------------------------------------------------------
+
+def kmeans_step(x, centroids):
+    """One Lloyd iteration's partition-local statistics.
+
+    x: (n, d), centroids: (c, d).
+    Returns (sums (c, d), counts (c,), sse (1,)). L3 sums all three across
+    partitions and forms new centroids = sums / counts.
+    """
+    # squared distances via the expansion ||x||^2 - 2 x.c + ||c||^2;
+    # the x.c term is the MXU matmul that dominates.
+    xc = x @ centroids.T  # (n, c)
+    cn = jnp.sum(centroids * centroids, axis=1)  # (c,)
+    xn = jnp.sum(x * x, axis=1)  # (n,)
+    d2 = xn[:, None] - 2.0 * xc + cn[None, :]
+    assign = jnp.argmin(d2, axis=1)  # (n,)
+    onehot = jax.nn.one_hot(assign, centroids.shape[0], dtype=x.dtype)
+    sums = onehot.T @ x  # (c, d)
+    counts = jnp.sum(onehot, axis=0)  # (c,)
+    sse = jnp.sum(jnp.min(d2, axis=1))
+    return sums, counts, jnp.reshape(sse, (1,))

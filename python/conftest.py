@@ -1,0 +1,6 @@
+# Ensures python/ (this directory) is on sys.path so `compile.*` imports
+# resolve when pytest is invoked from anywhere in the repo.
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,153 @@
+"""Kernel-vs-oracle correctness: the CORE numeric signal of the repo.
+
+Every Pallas kernel must match its pure-jnp oracle (kernels/ref.py) to
+float32 tolerance, across a hypothesis sweep of shapes and data scales.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import als_gram, logreg_grad, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+RTOL, ATOL = 1e-4, 1e-5
+
+
+def _rand(key, *shape, scale=1.0):
+    return scale * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+class TestLogregGrad:
+    def test_matches_ref_basic(self):
+        k = jax.random.PRNGKey(0)
+        k1, k2, k3 = jax.random.split(k, 3)
+        x = _rand(k1, 256, 32)
+        y = (jax.random.uniform(k2, (256,)) > 0.5).astype(jnp.float32)
+        w = _rand(k3, 32)
+        got = logreg_grad.logreg_grad(x, y, w, block_n=64)
+        want = ref.logreg_grad_ref(x, y, w)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_single_block(self):
+        k = jax.random.PRNGKey(1)
+        k1, k2, k3 = jax.random.split(k, 3)
+        x, w = _rand(k1, 64, 16), _rand(k3, 16)
+        y = (jax.random.uniform(k2, (64,)) > 0.5).astype(jnp.float32)
+        got = logreg_grad.logreg_grad(x, y, w, block_n=64)
+        np.testing.assert_allclose(
+            got, ref.logreg_grad_ref(x, y, w), rtol=RTOL, atol=ATOL
+        )
+
+    def test_zero_weights_gradient_direction(self):
+        # at w=0, sigmoid=0.5 so grad = X^T (0.5 - y)
+        x = jnp.ones((64, 8), dtype=jnp.float32)
+        y = jnp.ones((64,), dtype=jnp.float32)
+        w = jnp.zeros((8,), dtype=jnp.float32)
+        got = logreg_grad.logreg_grad(x, y, w, block_n=64)
+        np.testing.assert_allclose(got, -0.5 * 64 * jnp.ones(8), rtol=RTOL)
+
+    def test_rejects_misaligned_block(self):
+        x = jnp.zeros((100, 8), dtype=jnp.float32)
+        y = jnp.zeros((100,), dtype=jnp.float32)
+        w = jnp.zeros((8,), dtype=jnp.float32)
+        with pytest.raises(AssertionError):
+            logreg_grad.logreg_grad(x, y, w, block_n=64)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        blocks=st.integers(1, 5),
+        bn=st.sampled_from([8, 16, 32]),
+        d=st.integers(1, 48),
+        scale=st.sampled_from([0.01, 1.0, 10.0]),
+        seed=st.integers(0, 2**30),
+    )
+    def test_matches_ref_sweep(self, blocks, bn, d, scale, seed):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        n = blocks * bn
+        x = _rand(k1, n, d, scale=scale)
+        y = (jax.random.uniform(k2, (n,)) > 0.5).astype(jnp.float32)
+        w = _rand(k3, d, scale=scale)
+        got = logreg_grad.logreg_grad(x, y, w, block_n=bn)
+        want = ref.logreg_grad_ref(x, y, w)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3 * scale)
+
+
+class TestLogregLoss:
+    def test_matches_ref(self):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
+        x = _rand(k1, 128, 16)
+        y = (jax.random.uniform(k2, (128,)) > 0.5).astype(jnp.float32)
+        w = _rand(k3, 16)
+        got = logreg_grad.logreg_loss(x, y, w, block_n=32)
+        np.testing.assert_allclose(
+            got, ref.logreg_loss_ref(x, y, w), rtol=RTOL, atol=ATOL
+        )
+
+    def test_loss_at_zero_weights(self):
+        # NLL at w=0 is n*log(2)
+        x = _rand(jax.random.PRNGKey(3), 64, 8)
+        y = jnp.zeros((64,), dtype=jnp.float32)
+        w = jnp.zeros((8,), dtype=jnp.float32)
+        got = logreg_grad.logreg_loss(x, y, w, block_n=64)
+        np.testing.assert_allclose(got, 64 * np.log(2), rtol=1e-5)
+
+    def test_extreme_margins_finite(self):
+        # softplus form must not overflow for large margins
+        x = 100.0 * jnp.ones((32, 4), dtype=jnp.float32)
+        y = jnp.ones((32,), dtype=jnp.float32)
+        w = 10.0 * jnp.ones((4,), dtype=jnp.float32)
+        got = logreg_grad.logreg_loss(x, y, w, block_n=32)
+        assert np.isfinite(float(got))
+
+
+class TestAlsGram:
+    def _mk(self, seed, u, m, k, frac=0.5):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        f = _rand(k1, u, m, k)
+        r = _rand(k2, u, m)
+        mask = (jax.random.uniform(k3, (u, m)) < frac).astype(jnp.float32)
+        return f * mask[..., None], r * mask, mask
+
+    def test_matches_ref_basic(self):
+        f, r, mask = self._mk(0, 16, 32, 8)
+        ga, gb = als_gram.als_gram(f, r, mask, block_u=8)
+        wa, wb = ref.als_gram_ref(f, r, mask)
+        np.testing.assert_allclose(ga, wa, rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(gb, wb, rtol=RTOL, atol=ATOL)
+
+    def test_gram_symmetry(self):
+        f, r, mask = self._mk(1, 8, 16, 4)
+        ga, _ = als_gram.als_gram(f, r, mask, block_u=8)
+        np.testing.assert_allclose(ga, np.swapaxes(np.asarray(ga), 1, 2), rtol=1e-6)
+
+    def test_gram_psd_diagonal_nonneg(self):
+        f, r, mask = self._mk(2, 8, 16, 4)
+        ga, _ = als_gram.als_gram(f, r, mask, block_u=8)
+        diag = np.diagonal(np.asarray(ga), axis1=1, axis2=2)
+        assert (diag >= -1e-6).all()
+
+    def test_empty_user_all_zero(self):
+        f, r, _ = self._mk(3, 8, 16, 4)
+        mask = jnp.zeros((8, 16), dtype=jnp.float32)
+        ga, gb = als_gram.als_gram(f * 0, r * 0, mask, block_u=8)
+        np.testing.assert_allclose(ga, 0.0)
+        np.testing.assert_allclose(gb, 0.0)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        ub=st.integers(1, 3),
+        m=st.sampled_from([8, 24, 40]),
+        k=st.integers(2, 12),
+        frac=st.floats(0.1, 1.0),
+        seed=st.integers(0, 2**30),
+    )
+    def test_matches_ref_sweep(self, ub, m, k, frac, seed):
+        f, r, mask = self._mk(seed, ub * 8, m, k, frac)
+        ga, gb = als_gram.als_gram(f, r, mask, block_u=8)
+        wa, wb = ref.als_gram_ref(f, r, mask)
+        np.testing.assert_allclose(ga, wa, rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(gb, wb, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,203 @@
+"""L2 model-level tests: spd_solve, local_sgd_epoch, als_solve, kmeans.
+
+These validate the graphs that actually get AOT-lowered, including the
+pure-HLO Cholesky solve that replaces LAPACK custom-calls.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestSpdSolve:
+    def _spd(self, seed, b, k):
+        a = jax.random.normal(jax.random.PRNGKey(seed), (b, k, k), dtype=jnp.float32)
+        return jnp.einsum("bij,bkj->bik", a, a) + 0.1 * jnp.eye(k)[None]
+
+    def test_matches_linalg_solve(self):
+        a = self._spd(0, 4, 10)
+        b = jax.random.normal(jax.random.PRNGKey(1), (4, 10), dtype=jnp.float32)
+        got = model.spd_solve(a, b)
+        want = jnp.linalg.solve(a, b[..., None])[..., 0]
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_identity(self):
+        eye = jnp.eye(6, dtype=jnp.float32)[None].repeat(3, 0)
+        b = jax.random.normal(jax.random.PRNGKey(2), (3, 6), dtype=jnp.float32)
+        np.testing.assert_allclose(model.spd_solve(eye, b), b, rtol=1e-6)
+
+    def test_residual_small(self):
+        a = self._spd(3, 8, 16)
+        b = jax.random.normal(jax.random.PRNGKey(4), (8, 16), dtype=jnp.float32)
+        x = model.spd_solve(a, b)
+        resid = jnp.einsum("bij,bj->bi", a, x) - b
+        assert float(jnp.max(jnp.abs(resid))) < 1e-2
+
+    def test_unbatched(self):
+        a = self._spd(5, 1, 4)[0]
+        b = jnp.ones((4,), dtype=jnp.float32)
+        x = model.spd_solve(a, b)
+        np.testing.assert_allclose(a @ x, b, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(k=st.integers(1, 20), b=st.integers(1, 6), seed=st.integers(0, 2**30))
+    def test_solve_sweep(self, k, b, seed):
+        a = self._spd(seed, b, k)
+        rhs = jax.random.normal(jax.random.PRNGKey(seed + 1), (b, k), dtype=jnp.float32)
+        x = model.spd_solve(a, rhs)
+        resid = jnp.einsum("bij,bj->bi", a, x) - rhs
+        scale = float(jnp.max(jnp.abs(rhs))) + 1.0
+        assert float(jnp.max(jnp.abs(resid))) < 1e-2 * scale
+
+
+class TestLocalSgdEpoch:
+    def _data(self, seed, n, d):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = jax.random.normal(k1, (n, d), dtype=jnp.float32)
+        y = (jax.random.uniform(k2, (n,)) > 0.5).astype(jnp.float32)
+        w = 0.1 * jax.random.normal(k3, (d,), dtype=jnp.float32)
+        return x, y, w
+
+    def test_matches_sequential_oracle(self):
+        x, y, w0 = self._data(0, 128, 16)
+        got = model.local_sgd_epoch(x, y, w0, jnp.float32(0.05), block_n=32)
+        want = ref.local_sgd_epoch_ref(x, y, w0, 0.05, 32)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+    def test_zero_lr_identity(self):
+        x, y, w0 = self._data(1, 64, 8)
+        got = model.local_sgd_epoch(x, y, w0, jnp.float32(0.0), block_n=32)
+        np.testing.assert_allclose(got, w0, rtol=1e-6)
+
+    def test_decreases_loss(self):
+        x, y, w0 = self._data(2, 256, 8)
+        # learnable labels: plant a weight vector
+        w_true = jnp.ones((8,), dtype=jnp.float32)
+        y = (x @ w_true > 0).astype(jnp.float32)
+        w1 = model.local_sgd_epoch(x, y, w0, jnp.float32(0.02), block_n=64)
+        l0 = ref.logreg_loss_ref(x, y, w0)
+        l1 = ref.logreg_loss_ref(x, y, w1)
+        assert float(l1) < float(l0)
+
+    def test_grad_batch_outputs(self):
+        # n must be a multiple of the kernel's DEFAULT_BLOCK_N (256)
+        x, y, w = self._data(3, 256, 16)
+        g, l = model.logreg_grad_batch(x, y, w)
+        assert g.shape == (16,) and l.shape == (1,)
+        np.testing.assert_allclose(g, ref.logreg_grad_ref(x, y, w), rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(l[0], ref.logreg_loss_ref(x, y, w), rtol=1e-4)
+
+
+class TestAlsSolveBatch:
+    def _mk(self, seed, u, m, k, frac=0.6):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        mask = (jax.random.uniform(k3, (u, m)) < frac).astype(jnp.float32)
+        f = jax.random.normal(k1, (u, m, k), dtype=jnp.float32) * mask[..., None]
+        r = jax.random.normal(k2, (u, m), dtype=jnp.float32) * mask
+        return f, r, mask
+
+    def test_matches_ref_solver(self):
+        f, r, mask = self._mk(0, 16, 32, 8)
+        got = model.als_solve_batch(f, r, mask, jnp.float32(0.01))
+        want = ref.als_solve_ref(f, r, mask, 0.01)
+        np.testing.assert_allclose(got, want, rtol=1e-2, atol=1e-2)
+
+    def test_normal_equation_residual(self):
+        f, r, mask = self._mk(1, 8, 16, 4)
+        lam = 0.01
+        x = model.als_solve_batch(f, r, mask, jnp.float32(lam))
+        grams, rhs = ref.als_gram_ref(f, r, mask)
+        a = grams + lam * jnp.eye(4)[None]
+        resid = jnp.einsum("uij,uj->ui", a, x) - rhs
+        assert float(jnp.max(jnp.abs(resid))) < 1e-3
+
+    def test_cold_user_near_zero(self):
+        f, r, _ = self._mk(2, 8, 16, 4)
+        mask = jnp.zeros((8, 16), dtype=jnp.float32)
+        x = model.als_solve_batch(f * 0, r * 0, mask, jnp.float32(0.01))
+        np.testing.assert_allclose(x, 0.0, atol=1e-5)
+
+    def test_rmse_batch(self):
+        f, r, mask = self._mk(3, 8, 16, 4)
+        rows = jax.random.normal(jax.random.PRNGKey(9), (8, 4), dtype=jnp.float32)
+        sse, cnt = model.als_rmse_batch(f, r, mask, rows)
+        pred = jnp.einsum("umk,uk->um", f, rows)
+        want = jnp.sum(((pred - r) * mask) ** 2)
+        np.testing.assert_allclose(sse[0], want, rtol=1e-4)
+        np.testing.assert_allclose(cnt[0], jnp.sum(mask), rtol=1e-6)
+
+    def test_als_iteration_decreases_objective(self):
+        # alternate U and V updates on a small planted low-rank problem and
+        # check the regularized objective (paper Eq. 2) is monotone.
+        rng = np.random.default_rng(0)
+        m, n, k = 24, 16, 4
+        u_true = rng.normal(size=(m, k)).astype(np.float32)
+        v_true = rng.normal(size=(n, k)).astype(np.float32)
+        mask_np = (rng.random((m, n)) < 0.7).astype(np.float32)
+        ratings = (u_true @ v_true.T) * mask_np
+        lam = 0.01
+
+        u = rng.normal(size=(m, k)).astype(np.float32) * 0.1
+        v = rng.normal(size=(n, k)).astype(np.float32) * 0.1
+
+        def objective(u, v):
+            resid = (u @ v.T - ratings) * mask_np
+            return (
+                float(np.sum(resid**2))
+                + lam * (float(np.sum(u**2)) + float(np.sum(v**2)))
+            )
+
+        objs = [objective(u, v)]
+        for _ in range(3):
+            # update U: for each user, gather v rows
+            fu = np.broadcast_to(v[None], (m, n, k)) * mask_np[..., None]
+            u = np.asarray(
+                model.als_solve_batch(
+                    jnp.asarray(fu), jnp.asarray(ratings), jnp.asarray(mask_np), jnp.float32(lam)
+                )
+            )
+            fv = np.broadcast_to(u[None], (n, m, k)) * mask_np.T[..., None]
+            v = np.asarray(
+                model.als_solve_batch(
+                    jnp.asarray(fv), jnp.asarray(ratings.T), jnp.asarray(mask_np.T), jnp.float32(lam)
+                )
+            )
+            objs.append(objective(u, v))
+        assert objs[-1] < objs[0]
+        assert all(objs[i + 1] <= objs[i] + 1e-3 for i in range(len(objs) - 1))
+
+
+class TestKmeansStep:
+    def test_statistics_correct(self):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        x = jax.random.normal(k1, (64, 8), dtype=jnp.float32)
+        c = jax.random.normal(k2, (4, 8), dtype=jnp.float32)
+        sums, counts, sse = model.kmeans_step(x, c)
+        d2 = ((np.asarray(x)[:, None] - np.asarray(c)[None]) ** 2).sum(-1)
+        assign = d2.argmin(1)
+        for j in range(4):
+            np.testing.assert_allclose(
+                sums[j], np.asarray(x)[assign == j].sum(0), rtol=1e-4, atol=1e-4
+            )
+            assert int(counts[j]) == int((assign == j).sum())
+        np.testing.assert_allclose(sse[0], d2.min(1).sum(), rtol=1e-4)
+
+    def test_counts_sum_to_n(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (128, 16), dtype=jnp.float32)
+        c = jax.random.normal(jax.random.PRNGKey(2), (8, 16), dtype=jnp.float32)
+        _, counts, _ = model.kmeans_step(x, c)
+        assert int(jnp.sum(counts)) == 128
+
+    def test_converged_centroids_fixed_point(self):
+        # points exactly at centroids -> sums/counts reproduce centroids
+        c = jnp.asarray([[0.0, 0.0], [10.0, 10.0]], dtype=jnp.float32)
+        x = jnp.concatenate([jnp.tile(c[0], (5, 1)), jnp.tile(c[1], (7, 1))])
+        sums, counts, sse = model.kmeans_step(x, c)
+        np.testing.assert_allclose(sums / counts[:, None], c, atol=1e-6)
+        assert float(sse[0]) < 1e-6

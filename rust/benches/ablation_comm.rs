@@ -1,0 +1,135 @@
+//! Ablation: gather/broadcast (MLI) vs AllReduce tree (VW) — the paper's
+//! own open question ("We are unsure whether this is due to our simpler
+//! (broadcast/gather) communication paradigm", §IV-A). Sweeps machines x
+//! model size and reports the per-round aggregate time of each topology,
+//! locating the crossover.
+//!
+//! Also ablates: local-SGD averaging frequency and dense-vs-CSR ALS
+//! storage (DESIGN.md §6).
+
+use mli::cluster::{CommTopology, NetworkModel};
+use mli::data::netflix::{self, NetflixConfig};
+use mli::localmatrix::{CsrMatrix, DenseMatrix};
+use mli::metrics::Table;
+use mli::util::timer;
+
+fn comm_crossover() -> Table {
+    let mut t = Table::new(
+        "Ablation: star gather/broadcast vs AllReduce tree (s/round)",
+        &["machines", "model_KB", "star_s", "tree_s", "winner"],
+    );
+    let net = NetworkModel::ec2_2013();
+    for &m in &[2usize, 4, 8, 16, 32, 64] {
+        for &kb in &[4u64, 64, 640, 2560] {
+            let bytes = kb * 1024;
+            let star = CommTopology::StarGatherBroadcast.allreduce_time(&net, m, bytes);
+            let tree = CommTopology::AllReduceTree.allreduce_time(&net, m, bytes);
+            t.row(vec![
+                m.to_string(),
+                kb.to_string(),
+                format!("{star:.5}"),
+                format!("{tree:.5}"),
+                if star <= tree { "star" } else { "tree" }.into(),
+            ]);
+        }
+    }
+    t
+}
+
+fn dense_vs_csr_als_storage() -> Table {
+    // the gather step of ALS per round: iterate each user's rated items.
+    // CSR iterates nnz; dense scans the full row. This is the §IV-B
+    // "support for CSR-compressed sparse representations" design choice.
+    let mut t = Table::new(
+        "Ablation: ALS ratings storage — CSR vs dense row scan",
+        &["users", "items", "nnz", "csr_ms", "dense_ms", "speedup"],
+    );
+    for &(users, items) in &[(512usize, 64usize), (2048, 128), (4096, 256)] {
+        let data = netflix::generate(&NetflixConfig {
+            users,
+            items,
+            mean_nnz_per_user: 12,
+            max_nnz_per_user: 25,
+            ..Default::default()
+        });
+        let csr: &CsrMatrix = &data.ratings;
+        let dense: DenseMatrix = csr.to_dense();
+        let csr_s = timer::sample(1, 5, || {
+            let mut acc = 0.0f64;
+            for u in 0..users {
+                for (i, r) in csr.row_iter(u) {
+                    acc += r * (i as f64 + 1.0);
+                }
+            }
+            acc
+        });
+        let dense_s = timer::sample(1, 5, || {
+            let mut acc = 0.0f64;
+            for u in 0..users {
+                for (i, &r) in dense.row(u).iter().enumerate() {
+                    if r != 0.0 {
+                        acc += r * (i as f64 + 1.0);
+                    }
+                }
+            }
+            acc
+        });
+        let (c, d) = (mli::util::median(&csr_s), mli::util::median(&dense_s));
+        t.row(vec![
+            users.to_string(),
+            items.to_string(),
+            csr.nnz().to_string(),
+            format!("{:.3}", c * 1e3),
+            format!("{:.3}", d * 1e3),
+            format!("{:.1}x", d / c.max(1e-12)),
+        ]);
+    }
+    t
+}
+
+fn averaging_frequency() -> Table {
+    // local-SGD averaging frequency: average every epoch (paper) vs every
+    // minibatch (communication-heavy, Mahout-SGD-like). Time per data
+    // pass = rounds * comm; quality explored in integration tests.
+    let mut t = Table::new(
+        "Ablation: parameter-averaging frequency (comm s per data pass)",
+        &["machines", "avg_per", "allreduces", "comm_s"],
+    );
+    let net = NetworkModel::ec2_2013();
+    let model_bytes = 512 * 4u64;
+    let minibatches_per_epoch = 16u64;
+    for &m in &[4usize, 16, 32] {
+        for (name, count) in [("epoch", 1u64), ("minibatch", minibatches_per_epoch)] {
+            let per = CommTopology::StarGatherBroadcast.allreduce_time(&net, m, model_bytes);
+            t.row(vec![
+                m.to_string(),
+                name.into(),
+                count.to_string(),
+                format!("{:.5}", per * count as f64),
+            ]);
+        }
+    }
+    t
+}
+
+fn main() {
+    for table in [comm_crossover(), dense_vs_csr_als_storage(), averaging_frequency()] {
+        println!("{}", table.to_markdown());
+        let stem = table
+            .title
+            .chars()
+            .filter_map(|c| {
+                if c.is_alphanumeric() {
+                    Some(c.to_ascii_lowercase())
+                } else if c == ' ' {
+                    Some('_')
+                } else {
+                    None
+                }
+            })
+            .take(40)
+            .collect::<String>();
+        table.save(&format!("ablation_{stem}")).expect("save");
+    }
+    println!("ablation_comm OK");
+}

@@ -1,0 +1,39 @@
+//! Fig. 2b + 2c: logistic regression **weak scaling** — execution time and
+//! relative walltime for MLI vs VW vs MATLAB as data grows with machines
+//! (paper: n ∝ machines, d = 160K, ~200 GB at 32 nodes; here n_part=2048,
+//! d=512 per DESIGN.md §3 scaling).
+//!
+//! Expected shape (paper §IV-A): VW ~0.65-1x of MLI, never 2x faster;
+//! MATLAB beaten at moderate scale and DNF (OOM) at the largest point.
+
+use mli::algorithms::logreg::Backend;
+use mli::bench_harness::{logreg_scaling, LogregBenchConfig, ScalingMode};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = if quick {
+        LogregBenchConfig {
+            machines: vec![1, 2, 4],
+            rows: 512,
+            d: 64,
+            iters: 3,
+            backend: Backend::Xla,
+            seed: 42,
+            reps: 1,
+        }
+    } else {
+        LogregBenchConfig {
+            machines: vec![1, 2, 4, 8, 16, 32],
+            rows: 2048,
+            d: 512,
+            iters: 10,
+            backend: Backend::Xla,
+            seed: 42,
+            reps: 3,
+        }
+    };
+    let table = logreg_scaling(&cfg, ScalingMode::Weak).expect("fig2 bench failed");
+    println!("{}", table.to_markdown());
+    table.save("fig2bc_logreg_weak").expect("save results");
+    println!("saved results/fig2bc_logreg_weak.{{md,csv}}");
+}

@@ -1,0 +1,37 @@
+//! Fig. 3b + 3c: ALS **weak scaling** — Netflix-surrogate tiled by the
+//! machine count (1x..25x), rank 10, lambda .01, 10 iterations (the
+//! paper's exact hyper-parameters), MLI vs GraphLab vs Mahout vs MATLAB
+//! vs MATLAB-mex.
+//!
+//! Expected shape (paper §IV-B): MLI within 4x of GraphLab with a similar
+//! scaling pattern; Mahout slowest (HDFS per-iteration overhead); both
+//! MATLABs OOM at 16x/25x.
+
+use mli::bench_harness::{als_scaling, AlsBenchConfig, ScalingMode};
+use mli::data::netflix::NetflixConfig;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = if quick {
+        AlsBenchConfig {
+            machines: vec![1, 4],
+            base: NetflixConfig {
+                users: 256,
+                items: 32,
+                mean_nnz_per_user: 8,
+                max_nnz_per_user: 20,
+                ..Default::default()
+            },
+            iters: 2,
+            use_xla: true,
+            reps: 1,
+            ..Default::default()
+        }
+    } else {
+        AlsBenchConfig::default() // 1,4,9,16,25 machines; full base config
+    };
+    let table = als_scaling(&cfg, ScalingMode::Weak).expect("fig3 bench failed");
+    println!("{}", table.to_markdown());
+    table.save("fig3bc_als_weak").expect("save results");
+    println!("saved results/fig3bc_als_weak.{{md,csv}}");
+}

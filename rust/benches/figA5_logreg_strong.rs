@@ -1,0 +1,38 @@
+//! Fig. A5 + A6: logistic regression **strong scaling** — fixed dataset
+//! (paper: 5% of the weak-scaling base), machines 1..32.
+//!
+//! Expected shape (paper §IV-A): "our solution actually outperforms VW in
+//! raw time to train a model on a fixed dataset size when using 16 and 32
+//! machines, and exhibits better strong scaling properties."
+
+use mli::algorithms::logreg::Backend;
+use mli::bench_harness::{logreg_scaling, LogregBenchConfig, ScalingMode};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = if quick {
+        LogregBenchConfig {
+            machines: vec![1, 2, 4],
+            rows: 1024,
+            d: 64,
+            iters: 3,
+            backend: Backend::Xla,
+            seed: 43,
+            reps: 1,
+        }
+    } else {
+        LogregBenchConfig {
+            machines: vec![1, 2, 4, 8, 16, 32],
+            rows: 8192, // total rows, fixed across machine counts
+            d: 512,
+            iters: 10,
+            backend: Backend::Xla,
+            seed: 43,
+            reps: 3,
+        }
+    };
+    let table = logreg_scaling(&cfg, ScalingMode::Strong).expect("figA5 bench failed");
+    println!("{}", table.to_markdown());
+    table.save("figA5A6_logreg_strong").expect("save results");
+    println!("saved results/figA5A6_logreg_strong.{{md,csv}}");
+}

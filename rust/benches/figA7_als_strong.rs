@@ -1,0 +1,39 @@
+//! Fig. A7 + A8: ALS **strong scaling** — fixed 9x-Netflix dataset,
+//! machines 1..25.
+//!
+//! Expected shape (paper §IV-B): "MATLAB running out of memory before
+//! completing on the 9x Netflix dataset, and GraphLab outperforming MLI
+//! by less than a factor of 4x."
+
+use mli::bench_harness::{als_scaling, AlsBenchConfig, ScalingMode};
+use mli::data::netflix::NetflixConfig;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = if quick {
+        AlsBenchConfig {
+            machines: vec![1, 4],
+            strong_tile: 4,
+            base: NetflixConfig {
+                users: 256,
+                items: 32,
+                mean_nnz_per_user: 8,
+                max_nnz_per_user: 20,
+                ..Default::default()
+            },
+            iters: 2,
+            use_xla: true,
+            reps: 1,
+            ..Default::default()
+        }
+    } else {
+        AlsBenchConfig {
+            strong_tile: 9,
+            ..Default::default()
+        }
+    };
+    let table = als_scaling(&cfg, ScalingMode::Strong).expect("figA7 bench failed");
+    println!("{}", table.to_markdown());
+    table.save("figA7A8_als_strong").expect("save results");
+    println!("saved results/figA7A8_als_strong.{{md,csv}}");
+}

@@ -1,0 +1,115 @@
+//! Microbenchmarks for the L3 hot paths (DESIGN.md §7 Perf): engine op
+//! dispatch, partition materialization, XLA execution overhead vs compute,
+//! LocalMatrix matmul, CSR ops, and the GLM rust inner loop. These are the
+//! profile targets of EXPERIMENTS.md §Perf.
+
+use mli::engine::EngineContext;
+use mli::localmatrix::{CsrMatrix, DenseMatrix};
+use mli::metrics::Table;
+use mli::runtime::{Runtime, Tensor};
+use mli::util::rng::Rng;
+use mli::util::timer;
+use mli::util::median;
+
+fn bench(name: &str, iters: usize, f: impl FnMut() -> ()) -> (String, f64) {
+    let mut f = f;
+    let samples = timer::sample(2, iters, || f());
+    (name.to_string(), median(&samples))
+}
+
+fn main() {
+    let mut t = Table::new("L3 microbenchmarks", &["name", "median", "unit"]);
+    let mut rng = Rng::new(1);
+
+    // engine: per-op dispatch overhead (map over tiny partitions)
+    let ctx = EngineContext::new();
+    let ds = ctx.parallelize((0..1024i64).collect(), 8);
+    let (name, s) = bench("engine map+collect 1024 elems x 8 parts", 50, || {
+        let _ = ds.map(|x| x + 1).collect().unwrap();
+    });
+    t.row(vec![name, format!("{:.1}", s * 1e6), "us".into()]);
+
+    // engine: cached partition access
+    let cached = ds.map(|x| x * 2).cache();
+    cached.materialize().unwrap();
+    let (name, s) = bench("engine cached partition fetch", 200, || {
+        let _ = cached.partition(3).unwrap();
+    });
+    t.row(vec![name, format!("{:.2}", s * 1e9), "ns".into()]);
+
+    // localmatrix: matmul 128x128
+    let a = DenseMatrix::randn(128, 128, &mut rng);
+    let b = DenseMatrix::randn(128, 128, &mut rng);
+    let (name, s) = bench("dense matmul 128x128", 20, || {
+        let _ = a.matmul(&b).unwrap();
+    });
+    t.row(vec![
+        name,
+        format!("{:.2}", 2.0 * 128f64.powi(3) / s / 1e9),
+        "GFLOP/s".into(),
+    ]);
+
+    // CSR transpose
+    let dense_src = DenseMatrix::randn(512, 256, &mut rng).map(|x| if x > 1.0 { x } else { 0.0 });
+    let csr = CsrMatrix::from_dense(&dense_src);
+    let (name, s) = bench("csr transpose 512x256", 50, || {
+        let _ = csr.transpose();
+    });
+    t.row(vec![name, format!("{:.1}", s * 1e6), "us".into()]);
+
+    // runtime: XLA dispatch overhead (tiny grad) vs real compute
+    if let Ok(rt) = Runtime::global() {
+        let n = 256;
+        let d = 64;
+        let x = Tensor::F32(vec![0.1; n * d], vec![n, d]);
+        let y = Tensor::F32(vec![0.0; n], vec![n]);
+        let w = Tensor::F32(vec![0.0; d], vec![d]);
+        // warm the executable cache
+        let _ = rt
+            .execute("logreg_grad_batch", "small", &[x.clone(), y.clone(), w.clone()])
+            .unwrap();
+        let (name, s) = bench("XLA logreg_grad_batch small (256x64)", 50, || {
+            let _ = rt
+                .execute("logreg_grad_batch", "small", &[x.clone(), y.clone(), w.clone()])
+                .unwrap();
+        });
+        t.row(vec![name, format!("{:.1}", s * 1e6), "us".into()]);
+
+        let nb = 2048;
+        let db = 512;
+        let xb = Tensor::F32(vec![0.1; nb * db], vec![nb, db]);
+        let yb = Tensor::F32(vec![0.0; nb], vec![nb]);
+        let wb = Tensor::F32(vec![0.0; db], vec![db]);
+        let lr = Tensor::Scalar(0.01);
+        let _ = rt
+            .execute(
+                "local_sgd_epoch",
+                "bench",
+                &[xb.clone(), yb.clone(), wb.clone(), lr.clone()],
+            )
+            .unwrap();
+        let (name, s) = bench("XLA local_sgd_epoch bench (2048x512)", 20, || {
+            let _ = rt
+                .execute(
+                    "local_sgd_epoch",
+                    "bench",
+                    &[xb.clone(), yb.clone(), wb.clone(), lr.clone()],
+                )
+                .unwrap();
+        });
+        t.row(vec![name, format!("{:.2}", s * 1e3), "ms".into()]);
+        // effective flops of the epoch: 2 passes (fwd+grad) * 2*n*d per block pass
+        let flops = 4.0 * nb as f64 * db as f64;
+        t.row(vec![
+            "  -> epoch effective".into(),
+            format!("{:.2}", flops / s / 1e9),
+            "GFLOP/s".into(),
+        ]);
+    } else {
+        eprintln!("warning: artifacts missing, skipping XLA microbenches");
+    }
+
+    println!("{}", t.to_markdown());
+    t.save("microbench").expect("save");
+    println!("microbench OK");
+}

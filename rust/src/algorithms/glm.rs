@@ -1,0 +1,455 @@
+//! Generalized linear model machinery shared by logistic regression,
+//! linear regression and linear SVM: partitioned (label | features) data
+//! prepared once into padded f32 tensors, plus the two
+//! [`LocalStepProvider`] backends — XLA (AOT artifacts on the PJRT
+//! runtime, logistic only) and pure rust (any [`GlmGradient`]).
+
+use std::rc::Rc;
+
+use crate::error::{Error, Result};
+use crate::mltable::MLNumericTable;
+use crate::optim::LocalStepProvider;
+use crate::runtime::{Runtime, Tensor};
+
+/// Which GLM loss a rust-backed provider optimizes. The paper's point —
+/// "simply changing the expression of the gradient function" — is this
+/// enum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GlmGradient {
+    /// sigmoid(x.w) - y residual (negative log-likelihood).
+    Logistic,
+    /// x.w - y residual (squared loss / 2).
+    Squared,
+    /// Hinge: subgradient -y*x when y*(x.w) < 1, labels in {-1, +1}
+    /// (converted from {0,1} at prep time).
+    Hinge,
+}
+
+impl GlmGradient {
+    /// Per-example residual factor r such that grad = r * x, plus loss.
+    #[inline]
+    pub fn residual_and_loss(&self, margin: f64, y: f64) -> (f64, f64) {
+        match self {
+            GlmGradient::Logistic => {
+                let p = 1.0 / (1.0 + (-margin).exp());
+                // stable softplus(margin) - y*margin
+                let sp = if margin > 30.0 {
+                    margin
+                } else if margin < -30.0 {
+                    0.0
+                } else {
+                    (1.0 + margin.exp()).ln()
+                };
+                (p - y, sp - y * margin)
+            }
+            GlmGradient::Squared => {
+                let r = margin - y;
+                (r, 0.5 * r * r)
+            }
+            GlmGradient::Hinge => {
+                let ypm = if y > 0.5 { 1.0 } else { -1.0 };
+                if ypm * margin < 1.0 {
+                    (-ypm, 1.0 - ypm * margin)
+                } else {
+                    (0.0, 0.0)
+                }
+            }
+        }
+    }
+}
+
+/// One prepared partition: padded, split into features/labels, f32.
+struct PreparedPartition {
+    /// (n_pad * d_pad) row-major features.
+    x: Vec<f32>,
+    /// (n_pad) labels.
+    y: Vec<f32>,
+    rows: usize,
+}
+
+/// Data prepared for GLM training: label column 0 split off, features
+/// zero-padded to (n_pad, d_pad). Built once; reused every round.
+pub struct GlmData {
+    parts: Vec<PreparedPartition>,
+    pub d: usize,
+    pub n_pad: usize,
+    pub d_pad: usize,
+    pub block_n: usize,
+}
+
+impl GlmData {
+    /// Prepare from a numeric table (col 0 = label). `n_pad`/`d_pad` are
+    /// the target tensor shape — for the XLA backend these must equal the
+    /// artifact's input shape; the rust backend accepts any padding
+    /// (including none).
+    pub fn prepare(
+        data: &MLNumericTable,
+        n_pad: usize,
+        d_pad: usize,
+        block_n: usize,
+    ) -> Result<GlmData> {
+        let d = data
+            .num_cols()
+            .checked_sub(1)
+            .ok_or_else(|| Error::Schema("GLM data needs >= 2 columns (label + features)".into()))?;
+        if d > d_pad {
+            return Err(Error::Shape(format!(
+                "feature dim {d} exceeds padded dim {d_pad}"
+            )));
+        }
+        let mut parts = Vec::with_capacity(data.num_partitions());
+        for p in 0..data.num_partitions() {
+            let m = data.partition_matrix(p)?;
+            if m.rows > n_pad {
+                return Err(Error::Shape(format!(
+                    "partition {p} has {} rows, exceeds padded rows {n_pad}",
+                    m.rows
+                )));
+            }
+            let mut x = vec![0.0f32; n_pad * d_pad];
+            let mut y = vec![0.0f32; n_pad];
+            for r in 0..m.rows {
+                y[r] = m.get(r, 0) as f32;
+                for c in 0..d {
+                    x[r * d_pad + c] = m.get(r, c + 1) as f32;
+                }
+            }
+            parts.push(PreparedPartition { x, y, rows: m.rows });
+        }
+        Ok(GlmData { parts, d, n_pad, d_pad, block_n })
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.parts.len()
+    }
+
+    pub fn rows(&self, p: usize) -> usize {
+        self.parts[p].rows
+    }
+
+    pub fn total_rows(&self) -> usize {
+        self.parts.iter().map(|p| p.rows).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// XLA-backed provider (logistic regression; §IV-A hot path)
+// ---------------------------------------------------------------------------
+
+/// The production path: local SGD epochs and batch gradients execute as
+/// AOT-compiled XLA programs (Pallas kernel inside, see
+/// python/compile/model.py). One `Tensor` per partition is built at
+/// construction; per-round marshalling is just the weight vector.
+pub struct XlaLogregStep {
+    data: Rc<GlmData>,
+    rt: Rc<Runtime>,
+    variant: String,
+    /// Device-resident (x, y) buffers per partition: transferred once at
+    /// construction, reused every round (zero per-round marshalling of
+    /// the big tensors — EXPERIMENTS.md §Perf L3 iterations 4-5).
+    buffers: Vec<(crate::runtime::DeviceTensor, crate::runtime::DeviceTensor)>,
+}
+
+impl XlaLogregStep {
+    /// Build over prepared data; verifies the artifact shapes match.
+    pub fn new(data: Rc<GlmData>, rt: Rc<Runtime>, variant: &str) -> Result<XlaLogregStep> {
+        let spec = rt
+            .manifest()
+            .find("local_sgd_epoch", variant)
+            .ok_or_else(|| Error::Runtime(format!("no local_sgd_epoch variant '{variant}'")))?;
+        let (n_art, d_art) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+        if (data.n_pad, data.d_pad) != (n_art, d_art) {
+            return Err(Error::Shape(format!(
+                "GlmData padded to ({}, {}) but artifact '{variant}' expects ({n_art}, {d_art})",
+                data.n_pad, data.d_pad
+            )));
+        }
+        let epoch_exe = rt.executable("local_sgd_epoch", variant)?;
+        let buffers = data
+            .parts
+            .iter()
+            .map(|p| {
+                let x = epoch_exe
+                    .to_device(&Tensor::F32(p.x.clone(), vec![data.n_pad, data.d_pad]))?;
+                let y = epoch_exe.to_device(&Tensor::F32(p.y.clone(), vec![data.n_pad]))?;
+                Ok((x, y))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        // warm up NOW: XLA JIT compilation AND one untimed execution
+        // (first-touch page faults, thread-pool spin-up) are one-time
+        // setup costs that must not be charged to the first training
+        // round's simulated compute
+        rt.executable("logreg_grad_batch", variant)?;
+        let step = XlaLogregStep {
+            data,
+            rt,
+            variant: variant.to_string(),
+            buffers,
+        };
+        if step.data.num_partitions() > 0 {
+            let w0 = vec![0.0f32; step.data.d_pad];
+            let _ = step.local_epoch(0, &w0, 0.0)?;
+        }
+        Ok(step)
+    }
+
+    /// Pick the smallest artifact variant that fits (n_part, d).
+    pub fn pick_variant(rt: &Runtime, n_part: usize, d: usize) -> Result<(String, usize, usize)> {
+        let mut best: Option<(usize, usize, String)> = None;
+        for a in rt.manifest().variants("local_sgd_epoch") {
+            let (n, dd) = (a.inputs[0].shape[0], a.inputs[0].shape[1]);
+            if n >= n_part && dd >= d {
+                let cost = n * dd;
+                if best.as_ref().map(|(c, _, _)| cost < *c).unwrap_or(true) {
+                    best = Some((cost, n, a.variant.clone()));
+                }
+            }
+        }
+        match best {
+            Some((_, n, v)) => {
+                let a = rt.manifest().find("local_sgd_epoch", &v).unwrap();
+                Ok((v, n, a.inputs[0].shape[1]))
+            }
+            None => Err(Error::Runtime(format!(
+                "no local_sgd_epoch artifact fits n={n_part}, d={d}"
+            ))),
+        }
+    }
+}
+
+impl LocalStepProvider for XlaLogregStep {
+    fn dim(&self) -> usize {
+        self.data.d_pad
+    }
+
+    fn num_partitions(&self) -> usize {
+        self.data.num_partitions()
+    }
+
+    fn partition_weight(&self, p: usize) -> f64 {
+        self.data.rows(p) as f64
+    }
+
+    fn local_epoch(&self, p: usize, w: &[f32], lr: f32) -> Result<Vec<f32>> {
+        let (x, y) = &self.buffers[p];
+        let exe = self.rt.executable("local_sgd_epoch", &self.variant)?;
+        self.rt.count_exec("local_sgd_epoch", &self.variant);
+        let w_buf = exe.to_device(&Tensor::F32(w.to_vec(), vec![self.data.d_pad]))?;
+        let lr_buf = exe.to_device(&Tensor::Scalar(lr))?;
+        let out = exe.run_buffers(&[
+            x.buffer(),
+            y.buffer(),
+            w_buf.buffer(),
+            lr_buf.buffer(),
+        ])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    fn local_grad(&self, p: usize, w: &[f32]) -> Result<(Vec<f32>, f64, f64)> {
+        let (x, y) = &self.buffers[p];
+        let exe = self.rt.executable("logreg_grad_batch", &self.variant)?;
+        self.rt.count_exec("logreg_grad_batch", &self.variant);
+        let w_buf = exe.to_device(&Tensor::F32(w.to_vec(), vec![self.data.d_pad]))?;
+        let out = exe.run_buffers(&[x.buffer(), y.buffer(), w_buf.buffer()])?;
+        let mut it = out.into_iter();
+        let grad = it.next().unwrap();
+        let raw_loss = it.next().unwrap()[0] as f64;
+        // padding correction: each all-zero padding row contributes
+        // softplus(0) = ln 2 to the summed NLL (margin 0, y 0); the
+        // gradient needs no correction (x = 0).
+        let pad_rows = (self.data.n_pad - self.data.rows(p)) as f64;
+        let loss = raw_loss - pad_rows * std::f64::consts::LN_2;
+        Ok((grad, loss, self.data.rows(p) as f64))
+    }
+}
+
+/// Build a logistic-regression step provider over `data` with either
+/// backend. All systems in the benches measure their compute through the
+/// SAME provider so that cross-system gaps come only from topology +
+/// compute factors (DESIGN.md §3), never from backend differences.
+pub fn make_logreg_provider(
+    data: &crate::mltable::MLNumericTable,
+    xla: bool,
+) -> Result<Box<dyn LocalStepProvider>> {
+    let d = data.num_cols() - 1;
+    let mut max_rows = 1;
+    for p in 0..data.num_partitions() {
+        max_rows = max_rows.max(data.dataset().partition(p)?.len());
+    }
+    if xla {
+        let rt = Runtime::global()?;
+        let (variant, n_pad, d_pad) = XlaLogregStep::pick_variant(&rt, max_rows, d)?;
+        // the artifact's baked-in SGD block (manifest `block` field)
+        let block = rt
+            .manifest()
+            .find("local_sgd_epoch", &variant)
+            .and_then(|a| a.block)
+            .unwrap_or(256);
+        let glm = Rc::new(GlmData::prepare(data, n_pad, d_pad, block)?);
+        Ok(Box::new(XlaLogregStep::new(glm, rt, &variant)?))
+    } else {
+        let glm = Rc::new(GlmData::prepare(data, max_rows, d, 256.min(max_rows))?);
+        Ok(Box::new(RustGlmStep::new(glm, GlmGradient::Logistic)))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pure-rust provider (any GLM gradient; also the no-artifact fallback)
+// ---------------------------------------------------------------------------
+
+/// Rust implementation of the same local-SGD contract. Used by
+/// LinearRegression / LinearSVM (no XLA artifact for those gradients) and
+/// as the reference in differential tests against the XLA path.
+pub struct RustGlmStep {
+    data: Rc<GlmData>,
+    grad: GlmGradient,
+}
+
+impl RustGlmStep {
+    pub fn new(data: Rc<GlmData>, grad: GlmGradient) -> RustGlmStep {
+        RustGlmStep { data, grad }
+    }
+}
+
+impl LocalStepProvider for RustGlmStep {
+    fn dim(&self) -> usize {
+        self.data.d_pad
+    }
+
+    fn num_partitions(&self) -> usize {
+        self.data.num_partitions()
+    }
+
+    fn partition_weight(&self, p: usize) -> f64 {
+        self.data.rows(p) as f64
+    }
+
+    fn local_epoch(&self, p: usize, w: &[f32], lr: f32) -> Result<Vec<f32>> {
+        let part = &self.data.parts[p];
+        let d_pad = self.data.d_pad;
+        let block = self.data.block_n;
+        let mut w = w.to_vec();
+        let mut grad = vec![0.0f32; d_pad];
+        let mut start = 0;
+        // minibatch loop identical in structure to the L2 scan
+        while start < part.rows {
+            let end = (start + block).min(part.rows);
+            for g in grad.iter_mut() {
+                *g = 0.0;
+            }
+            for r in start..end {
+                let xr = &part.x[r * d_pad..(r + 1) * d_pad];
+                let mut margin = 0.0f64;
+                for (xi, wi) in xr.iter().zip(&w) {
+                    margin += (*xi as f64) * (*wi as f64);
+                }
+                let (resid, _) = self.grad.residual_and_loss(margin, part.y[r] as f64);
+                let rf = resid as f32;
+                for (g, &xi) in grad.iter_mut().zip(xr) {
+                    *g += rf * xi;
+                }
+            }
+            for (wi, &g) in w.iter_mut().zip(&grad) {
+                *wi -= lr * g;
+            }
+            start = end;
+        }
+        Ok(w)
+    }
+
+    fn local_grad(&self, p: usize, w: &[f32]) -> Result<(Vec<f32>, f64, f64)> {
+        let part = &self.data.parts[p];
+        let d_pad = self.data.d_pad;
+        let mut grad = vec![0.0f32; d_pad];
+        let mut loss = 0.0f64;
+        for r in 0..part.rows {
+            let xr = &part.x[r * d_pad..(r + 1) * d_pad];
+            let mut margin = 0.0f64;
+            for (xi, wi) in xr.iter().zip(w) {
+                margin += (*xi as f64) * (*wi as f64);
+            }
+            let (resid, l) = self.grad.residual_and_loss(margin, part.y[r] as f64);
+            loss += l;
+            let rf = resid as f32;
+            for (g, &xi) in grad.iter_mut().zip(xr) {
+                *g += rf * xi;
+            }
+        }
+        Ok((grad, loss, part.rows as f64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineContext;
+    use crate::mltable::{MLRow, MLTable, Schema};
+
+    fn table(rows: Vec<Vec<f64>>, parts: usize) -> MLNumericTable {
+        let ctx = EngineContext::new();
+        let d = rows[0].len();
+        let rows: Vec<MLRow> = rows.iter().map(|r| MLRow::from_scalars(r)).collect();
+        MLTable::from_rows(&ctx, rows, Schema::numeric(d), parts)
+            .unwrap()
+            .to_numeric()
+            .unwrap()
+    }
+
+    #[test]
+    fn prepare_splits_and_pads() {
+        let t = table(
+            vec![vec![1.0, 2.0, 3.0], vec![0.0, 4.0, 5.0], vec![1.0, 6.0, 7.0]],
+            2,
+        );
+        let g = GlmData::prepare(&t, 4, 4, 2).unwrap();
+        assert_eq!(g.d, 2);
+        assert_eq!(g.num_partitions(), 2);
+        assert_eq!(g.rows(0), 2);
+        assert_eq!(g.total_rows(), 3);
+        // partition 0: row 0 = label 1, features [2,3,0,0 pad]
+        assert_eq!(g.parts[0].y[0], 1.0);
+        assert_eq!(&g.parts[0].x[0..4], &[2.0, 3.0, 0.0, 0.0]);
+        // padding rows zero
+        assert_eq!(&g.parts[0].x[8..16], &[0.0; 8]);
+        assert!(GlmData::prepare(&t, 1, 4, 1).is_err()); // rows too small
+        assert!(GlmData::prepare(&t, 4, 1, 1).is_err()); // cols too small
+    }
+
+    #[test]
+    fn gradients_logistic_squared_hinge() {
+        // logistic at margin 0, y=1: resid -0.5, loss ln2
+        let (r, l) = GlmGradient::Logistic.residual_and_loss(0.0, 1.0);
+        assert!((r + 0.5).abs() < 1e-12);
+        assert!((l - std::f64::consts::LN_2).abs() < 1e-12);
+        // stable at extreme margins
+        let (_, l) = GlmGradient::Logistic.residual_and_loss(1000.0, 1.0);
+        assert!(l.abs() < 1e-9);
+        // squared
+        let (r, l) = GlmGradient::Squared.residual_and_loss(3.0, 1.0);
+        assert_eq!((r, l), (2.0, 2.0));
+        // hinge: y=0 -> -1; margin -2 -> violated
+        let (r, l) = GlmGradient::Hinge.residual_and_loss(-2.0, 1.0);
+        assert_eq!((r, l), (-1.0, 3.0));
+        let (r, l) = GlmGradient::Hinge.residual_and_loss(2.0, 1.0);
+        assert_eq!((r, l), (0.0, 0.0));
+    }
+
+    #[test]
+    fn rust_epoch_decreases_loss() {
+        // learnable toy data: y = 1 iff x0 > 0
+        let rows: Vec<Vec<f64>> = (0..64)
+            .map(|i| {
+                let x0 = if i % 2 == 0 { 1.0 } else { -1.0 };
+                vec![if x0 > 0.0 { 1.0 } else { 0.0 }, x0, 0.5]
+            })
+            .collect();
+        let t = table(rows, 2);
+        let g = Rc::new(GlmData::prepare(&t, 32, 2, 8).unwrap());
+        let step = RustGlmStep::new(g, GlmGradient::Logistic);
+        let w0 = vec![0.0f32; 2];
+        let (_, l0, _) = step.local_grad(0, &w0).unwrap();
+        let w1 = step.local_epoch(0, &w0, 0.1).unwrap();
+        let (_, l1, _) = step.local_grad(0, &w1).unwrap();
+        assert!(l1 < l0, "{l1} !< {l0}");
+    }
+}

@@ -1,0 +1,426 @@
+//! K-means (Lloyd) — the learner at the end of the Fig. A2 pipeline
+//! (`KMeans(featurizedTable, k=50)`), with an XLA-backed assignment step.
+
+use super::{Algorithm, Model};
+use crate::cluster::{CommTopology, SimCluster};
+use crate::error::{Error, Result};
+use crate::localmatrix::{DenseMatrix, MLVector};
+use crate::mltable::MLNumericTable;
+use crate::runtime::{Runtime, Tensor};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct KMeansParams {
+    pub k: usize,
+    pub iters: usize,
+    pub seed: u64,
+    pub use_xla: bool,
+    pub topology: CommTopology,
+}
+
+impl Default for KMeansParams {
+    fn default() -> Self {
+        KMeansParams {
+            k: 8,
+            iters: 10,
+            seed: 0,
+            use_xla: false,
+            topology: CommTopology::StarGatherBroadcast,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct KMeansModel {
+    /// k x d centroid matrix.
+    pub centroids: DenseMatrix,
+    /// Total within-cluster SSE per iteration.
+    pub sse_history: Vec<f64>,
+}
+
+impl Model for KMeansModel {
+    /// Predict the nearest-centroid index (as f64).
+    fn predict(&self, x: &MLVector) -> Result<f64> {
+        if x.len() != self.centroids.cols {
+            return Err(Error::Shape(format!(
+                "kmeans predict: dim {} != centroid dim {}",
+                x.len(),
+                self.centroids.cols
+            )));
+        }
+        let mut best = (f64::INFINITY, 0usize);
+        for c in 0..self.centroids.rows {
+            let d2: f64 = self
+                .centroids
+                .row(c)
+                .iter()
+                .zip(x.as_slice())
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            if d2 < best.0 {
+                best = (d2, c);
+            }
+        }
+        Ok(best.1 as f64)
+    }
+}
+
+pub struct KMeans {
+    pub params: KMeansParams,
+}
+
+impl KMeans {
+    pub fn new(params: KMeansParams) -> KMeans {
+        KMeans { params }
+    }
+
+    /// k-means++-style seeding (greedy distant points, deterministic).
+    fn init_centroids(&self, parts: &[DenseMatrix], d: usize) -> DenseMatrix {
+        let mut rng = Rng::new(self.params.seed);
+        let all_rows: usize = parts.iter().map(|m| m.rows).sum();
+        let mut centroids = DenseMatrix::zeros(self.params.k, d);
+        // first centroid: random point; others: farthest-point heuristic
+        // over a sample for determinism and O(k * sample) cost.
+        let sample: Vec<Vec<f64>> = (0..256.min(all_rows))
+            .map(|_| {
+                let mut idx = rng.below(all_rows);
+                for m in parts {
+                    if idx < m.rows {
+                        return m.row(idx).to_vec();
+                    }
+                    idx -= m.rows;
+                }
+                unreachable!()
+            })
+            .collect();
+        if sample.is_empty() {
+            return centroids;
+        }
+        centroids.row_mut(0).copy_from_slice(&sample[0]);
+        for c in 1..self.params.k {
+            let mut best = (f64::NEG_INFINITY, 0usize);
+            for (i, s) in sample.iter().enumerate() {
+                // distance to the nearest already-chosen centroid
+                let mut mind = f64::INFINITY;
+                for cc in 0..c {
+                    let d2: f64 = centroids
+                        .row(cc)
+                        .iter()
+                        .zip(s)
+                        .map(|(a, b)| (a - b) * (a - b))
+                        .sum();
+                    mind = mind.min(d2);
+                }
+                if mind > best.0 {
+                    best = (mind, i);
+                }
+            }
+            centroids.row_mut(c).copy_from_slice(&sample[best.1]);
+        }
+        centroids
+    }
+
+    /// Partition-local statistics via the XLA `kmeans_step` artifact,
+    /// with driver-side padding correction: zero padding rows are
+    /// assigned to the centroid nearest the origin, so that centroid's
+    /// count (and the SSE) are corrected after the call.
+    #[allow(clippy::too_many_arguments)]
+    fn xla_partition_stats(
+        rt: &Runtime,
+        variant: &str,
+        x: &Tensor,
+        real_rows: usize,
+        n_pad: usize,
+        cents_padded: &[f32],
+        c_art: usize,
+        d_pad: usize,
+        k: usize,
+    ) -> Result<(Vec<f64>, Vec<f64>, f64)> {
+        let out = rt.execute(
+            "kmeans_step",
+            variant,
+            &[
+                x.clone(),
+                Tensor::F32(cents_padded.to_vec(), vec![c_art, d_pad]),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        let sums_f: Vec<f32> = it.next().unwrap();
+        let counts_f: Vec<f32> = it.next().unwrap();
+        let sse_f: Vec<f32> = it.next().unwrap();
+        // padding correction
+        let pad = (n_pad - real_rows) as f64;
+        let mut origin_best = (f64::INFINITY, 0usize);
+        for c in 0..k {
+            let norm2: f64 = (0..d_pad)
+                .map(|j| (cents_padded[c * d_pad + j] as f64).powi(2))
+                .sum();
+            if norm2 < origin_best.0 {
+                origin_best = (norm2, c);
+            }
+        }
+        let mut sums = vec![0.0f64; k * d_pad];
+        for c in 0..k {
+            for j in 0..d_pad {
+                sums[c * d_pad + j] = sums_f[c * d_pad + j] as f64;
+            }
+        }
+        let mut counts: Vec<f64> = (0..k).map(|c| counts_f[c] as f64).collect();
+        counts[origin_best.1] -= pad;
+        let sse = sse_f[0] as f64 - pad * origin_best.0;
+        Ok((sums, counts, sse))
+    }
+
+    fn rust_partition_stats(
+        m: &DenseMatrix,
+        centroids: &DenseMatrix,
+    ) -> (Vec<f64>, Vec<f64>, f64) {
+        let (k, d) = (centroids.rows, centroids.cols);
+        let mut sums = vec![0.0f64; k * d];
+        let mut counts = vec![0.0f64; k];
+        let mut sse = 0.0;
+        for r in 0..m.rows {
+            let row = m.row(r);
+            let mut best = (f64::INFINITY, 0usize);
+            for c in 0..k {
+                let d2: f64 = centroids
+                    .row(c)
+                    .iter()
+                    .zip(row)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                if d2 < best.0 {
+                    best = (d2, c);
+                }
+            }
+            counts[best.1] += 1.0;
+            for (j, &x) in row.iter().enumerate() {
+                sums[best.1 * d + j] += x;
+            }
+            sse += best.0;
+        }
+        (sums, counts, sse)
+    }
+}
+
+impl Algorithm for KMeans {
+    type Output = KMeansModel;
+
+    /// Train on a numeric table whose rows are feature vectors (no label
+    /// column).
+    fn train(&self, data: &MLNumericTable, cluster: &SimCluster) -> Result<KMeansModel> {
+        let d = data.num_cols();
+        let k = self.params.k;
+        let nparts = data.num_partitions();
+        let parts: Vec<DenseMatrix> = (0..nparts)
+            .map(|p| data.partition_matrix(p))
+            .collect::<Result<_>>()?;
+        let mut centroids = self.init_centroids(&parts, d);
+        let mut sse_history = Vec::new();
+
+        // XLA setup (artifact shapes + prebuilt partition tensors)
+        let xla = if self.params.use_xla {
+            let rt = Runtime::global()?;
+            let max_rows = parts.iter().map(|m| m.rows).max().unwrap_or(0);
+            let mut best: Option<(usize, String, usize, usize, usize)> = None;
+            for a in rt.manifest().variants("kmeans_step") {
+                let (n, dd) = (a.inputs[0].shape[0], a.inputs[0].shape[1]);
+                let c_art = a.inputs[1].shape[0];
+                if n >= max_rows && dd >= d && c_art >= k {
+                    let cost = n * dd;
+                    if best.as_ref().map(|(c, ..)| cost < *c).unwrap_or(true) {
+                        best = Some((cost, a.variant.clone(), n, dd, c_art));
+                    }
+                }
+            }
+            let (_, variant, n_pad, d_pad, c_art) = best.ok_or_else(|| {
+                Error::Runtime(format!("no kmeans_step artifact fits n<={max_rows}, d={d}, k={k}"))
+            })?;
+            let tensors: Vec<(Tensor, usize)> = parts
+                .iter()
+                .map(|m| {
+                    let mut x = vec![0.0f32; n_pad * d_pad];
+                    for r in 0..m.rows {
+                        for c in 0..m.cols {
+                            x[r * d_pad + c] = m.get(r, c) as f32;
+                        }
+                    }
+                    (Tensor::F32(x, vec![n_pad, d_pad]), m.rows)
+                })
+                .collect();
+            Some((rt, variant, n_pad, d_pad, c_art, tensors))
+        } else {
+            None
+        };
+
+        for _it in 0..self.params.iters {
+            cluster.begin_round();
+            // broadcast centroids
+            cluster.charge_broadcast(self.params.topology, (k * d * 4) as u64);
+            let mut gsums = vec![0.0f64; k * d];
+            let mut gcounts = vec![0.0f64; k];
+            let mut gsse = 0.0f64;
+            for (p, m) in parts.iter().enumerate() {
+                let machine = cluster.machine_of(p);
+                let (sums, counts, sse) = match &xla {
+                    Some((rt, variant, n_pad, d_pad, c_art, tensors)) => {
+                        // pad centroids: rows beyond k get far-away
+                        // sentinels so no real point selects them
+                        let mut cp = vec![0.0f32; c_art * d_pad];
+                        for c in 0..k {
+                            for j in 0..d {
+                                cp[c * d_pad + j] = centroids.get(c, j) as f32;
+                            }
+                        }
+                        for c in k..*c_art {
+                            cp[c * d_pad] = 1.0e15;
+                        }
+                        let (x, rows) = &tensors[p];
+                        let stats = cluster.run_task(machine, || {
+                            Self::xla_partition_stats(
+                                rt, variant, x, *rows, *n_pad, &cp, *c_art, *d_pad, k,
+                            )
+                        })?;
+                        // trim sums to (k, d)
+                        let (s_full, counts, sse) = stats;
+                        let mut s = vec![0.0f64; k * d];
+                        for c in 0..k {
+                            for j in 0..d {
+                                s[c * d + j] = s_full[c * d_pad + j];
+                            }
+                        }
+                        (s, counts, sse)
+                    }
+                    None => cluster.run_task(machine, || {
+                        Self::rust_partition_stats(m, &centroids)
+                    }),
+                };
+                for (g, s) in gsums.iter_mut().zip(&sums) {
+                    *g += s;
+                }
+                for (g, c) in gcounts.iter_mut().zip(&counts) {
+                    *g += c;
+                }
+                gsse += sse;
+            }
+            // gather statistics at master: k*d sums + k counts per machine
+            cluster.charge_allreduce(self.params.topology, ((k * d + k) * 4) as u64);
+            cluster.end_round();
+
+            for c in 0..k {
+                if gcounts[c] > 0.0 {
+                    for j in 0..d {
+                        centroids.set(c, j, gsums[c * d + j] / gcounts[c]);
+                    }
+                }
+                // empty clusters keep their previous centroid
+            }
+            sse_history.push(gsse);
+        }
+
+        Ok(KMeansModel { centroids, sse_history })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineContext;
+    use crate::mltable::{MLRow, MLTable, Schema};
+
+    fn blob_table(centers: &[[f64; 2]], per: usize, seed: u64) -> MLNumericTable {
+        let ctx = EngineContext::new();
+        let mut rng = Rng::new(seed);
+        let mut rows = Vec::new();
+        for c in centers {
+            for _ in 0..per {
+                rows.push(MLRow::from_scalars(&[
+                    c[0] + 0.1 * rng.normal(),
+                    c[1] + 0.1 * rng.normal(),
+                ]));
+            }
+        }
+        rng.shuffle(&mut rows);
+        MLTable::from_rows(&ctx, rows, Schema::numeric(2), 4)
+            .unwrap()
+            .to_numeric()
+            .unwrap()
+    }
+
+    fn check_recovers_blobs(use_xla: bool) {
+        let centers = [[0.0, 0.0], [10.0, 0.0], [0.0, 10.0]];
+        let t = blob_table(&centers, 40, 1);
+        let algo = KMeans::new(KMeansParams {
+            k: 3,
+            iters: 8,
+            use_xla,
+            ..Default::default()
+        });
+        let model = algo.train(&t, &SimCluster::ec2(4)).unwrap();
+        // every true center has a centroid within 0.5
+        for c in &centers {
+            let nearest = (0..3)
+                .map(|i| {
+                    let row = model.centroids.row(i);
+                    ((row[0] - c[0]).powi(2) + (row[1] - c[1]).powi(2)).sqrt()
+                })
+                .fold(f64::INFINITY, f64::min);
+            assert!(nearest < 0.5, "center {c:?} unmatched ({nearest})");
+        }
+        // SSE non-increasing
+        let h = &model.sse_history;
+        assert!(
+            h.windows(2).all(|w| w[1] <= w[0] + 1e-6),
+            "SSE not monotone: {h:?}"
+        );
+        // predict maps points to their blob
+        let p0 = model.predict(&MLVector::new(vec![0.1, -0.1])).unwrap();
+        let p1 = model.predict(&MLVector::new(vec![9.8, 0.3])).unwrap();
+        assert_ne!(p0 as usize, p1 as usize);
+    }
+
+    #[test]
+    fn rust_backend_recovers_blobs() {
+        check_recovers_blobs(false);
+    }
+
+    #[test]
+    fn xla_backend_recovers_blobs() {
+        check_recovers_blobs(true);
+    }
+
+    #[test]
+    fn xla_and_rust_agree() {
+        let t = blob_table(&[[0.0, 0.0], [5.0, 5.0]], 30, 2);
+        let params = |use_xla| KMeansParams {
+            k: 2,
+            iters: 5,
+            seed: 3,
+            use_xla,
+            ..Default::default()
+        };
+        let m_rust = KMeans::new(params(false)).train(&t, &SimCluster::ec2(2)).unwrap();
+        let m_xla = KMeans::new(params(true)).train(&t, &SimCluster::ec2(2)).unwrap();
+        for c in 0..2 {
+            for j in 0..2 {
+                assert!(
+                    (m_rust.centroids.get(c, j) - m_xla.centroids.get(c, j)).abs() < 1e-3,
+                    "centroid ({c},{j})"
+                );
+            }
+        }
+        // SSE histories match too
+        for (a, b) in m_rust.sse_history.iter().zip(&m_xla.sse_history) {
+            assert!((a - b).abs() < 1e-2 * a.max(1.0));
+        }
+    }
+
+    #[test]
+    fn predict_dimension_check() {
+        let t = blob_table(&[[0.0, 0.0]], 10, 4);
+        let m = KMeans::new(KMeansParams { k: 1, iters: 2, ..Default::default() })
+            .train(&t, &SimCluster::ec2(1))
+            .unwrap();
+        assert!(m.predict(&MLVector::new(vec![1.0, 2.0, 3.0])).is_err());
+    }
+}

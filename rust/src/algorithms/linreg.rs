@@ -1,0 +1,99 @@
+//! Linear regression via distributed SGD — the paper's "naturally
+//! extends ... simply by changing the expression of the gradient
+//! function" (§IV): same optimizer, [`GlmGradient::Squared`] plugged in.
+
+use std::rc::Rc;
+
+use super::glm::{GlmData, GlmGradient, RustGlmStep};
+use super::{Algorithm, Model};
+use crate::cluster::SimCluster;
+use crate::error::Result;
+use crate::localmatrix::MLVector;
+use crate::mltable::MLNumericTable;
+use crate::optim::{SgdParams, SGD};
+
+pub struct LinearRegression {
+    pub sgd: SgdParams,
+}
+
+impl LinearRegression {
+    pub fn new(sgd: SgdParams) -> LinearRegression {
+        LinearRegression { sgd }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct LinRegModel {
+    pub weights: MLVector,
+    pub loss_history: Vec<f64>,
+}
+
+impl Model for LinRegModel {
+    fn predict(&self, x: &MLVector) -> Result<f64> {
+        x.dot(&self.weights)
+    }
+}
+
+impl Algorithm for LinearRegression {
+    type Output = LinRegModel;
+
+    fn train(&self, data: &MLNumericTable, cluster: &SimCluster) -> Result<LinRegModel> {
+        let d = data.num_cols() - 1;
+        let mut max_rows = 1;
+        for p in 0..data.num_partitions() {
+            max_rows = max_rows.max(data.dataset().partition(p)?.len());
+        }
+        let glm = Rc::new(GlmData::prepare(data, max_rows, d, 32.min(max_rows))?);
+        let step = RustGlmStep::new(glm, GlmGradient::Squared);
+        let res = SGD::run(&step, cluster, &self.sgd)?;
+        Ok(LinRegModel {
+            weights: MLVector::new(res.weights[..d].iter().map(|&x| x as f64).collect()),
+            loss_history: res.loss_history,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineContext;
+    use crate::mltable::{MLRow, MLTable, Schema};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn recovers_planted_linear_model() {
+        let ctx = EngineContext::new();
+        let mut rng = Rng::new(3);
+        let w_true = [2.0, -1.0, 0.5];
+        let rows: Vec<MLRow> = (0..300)
+            .map(|_| {
+                let x: Vec<f64> = (0..3).map(|_| rng.normal()).collect();
+                let y: f64 = x.iter().zip(&w_true).map(|(a, b)| a * b).sum::<f64>()
+                    + 0.01 * rng.normal();
+                let mut row = vec![y];
+                row.extend(&x);
+                MLRow::from_scalars(&row)
+            })
+            .collect();
+        let t = MLTable::from_rows(&ctx, rows, Schema::numeric(4), 4)
+            .unwrap()
+            .to_numeric()
+            .unwrap();
+        let algo = LinearRegression::new(SgdParams {
+            learning_rate: 0.01,
+            iters: 40,
+            track_loss: true,
+            ..Default::default()
+        });
+        let m = algo.train(&t, &SimCluster::ec2(4)).unwrap();
+        for j in 0..3 {
+            assert!(
+                (m.weights[j] - w_true[j]).abs() < 0.1,
+                "dim {j}: {} vs {}",
+                m.weights[j],
+                w_true[j]
+            );
+        }
+        assert!(m.loss_history.last().unwrap() < m.loss_history.first().unwrap());
+    }
+}

@@ -1,0 +1,175 @@
+//! Logistic regression (paper §IV-A): SGD with local epochs + parameter
+//! averaging, XLA-backed hot path, identical in structure to Fig. A4's
+//! `LogisticRegressionAlgorithm`.
+
+
+use super::{Algorithm, Model};
+use crate::cluster::SimCluster;
+use crate::error::Result;
+use crate::localmatrix::MLVector;
+use crate::mltable::MLNumericTable;
+use crate::optim::{SgdParams, SgdResult, SGD};
+
+/// Which compute backend executes the local epochs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT-compiled XLA artifacts via PJRT (the production path).
+    /// The variant is chosen automatically from the manifest.
+    Xla,
+    /// Pure-rust fallback (differential-testing reference; also what the
+    /// simulated comparison systems execute, scaled by compute_factor).
+    Rust,
+}
+
+/// Hyper-parameters (paper: `LogisticRegressionParameters`).
+#[derive(Debug, Clone)]
+pub struct LogRegParams {
+    pub sgd: SgdParams,
+    pub backend: Backend,
+}
+
+impl Default for LogRegParams {
+    fn default() -> Self {
+        LogRegParams {
+            sgd: SgdParams::default(),
+            backend: Backend::Xla,
+        }
+    }
+}
+
+/// The trained model: a weight vector over the original feature dim.
+#[derive(Debug, Clone)]
+pub struct LogRegModel {
+    pub weights: MLVector,
+    pub loss_history: Vec<f64>,
+    pub sim_seconds: f64,
+}
+
+impl Model for LogRegModel {
+    /// Probability of class 1.
+    fn predict(&self, x: &MLVector) -> Result<f64> {
+        let margin = x.dot(&self.weights)?;
+        Ok(1.0 / (1.0 + (-margin).exp()))
+    }
+}
+
+/// The algorithm object (paper: `object LogisticRegressionAlgorithm
+/// extends NumericAlgorithm`).
+pub struct LogisticRegression {
+    pub params: LogRegParams,
+}
+
+impl LogisticRegression {
+    pub fn new(params: LogRegParams) -> LogisticRegression {
+        LogisticRegression { params }
+    }
+
+    pub fn with_defaults() -> LogisticRegression {
+        LogisticRegression::new(LogRegParams::default())
+    }
+
+    fn run_sgd(&self, data: &MLNumericTable, cluster: &SimCluster) -> Result<(SgdResult, usize)> {
+        let d = data.num_cols() - 1;
+        let provider =
+            super::glm::make_logreg_provider(data, self.params.backend == Backend::Xla)?;
+        Ok((SGD::run(provider.as_ref(), cluster, &self.params.sgd)?, d))
+    }
+}
+
+impl Algorithm for LogisticRegression {
+    type Output = LogRegModel;
+
+    fn train(&self, data: &MLNumericTable, cluster: &SimCluster) -> Result<LogRegModel> {
+        let (res, d) = self.run_sgd(data, cluster)?;
+        // trim padding dims off the weight vector
+        let weights = MLVector::new(res.weights[..d].iter().map(|&x| x as f64).collect());
+        Ok(LogRegModel {
+            weights,
+            loss_history: res.loss_history,
+            sim_seconds: res.sim_seconds,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dense_gen;
+    use crate::engine::EngineContext;
+
+    /// Shared check: train on planted data, expect good accuracy.
+    fn train_and_check(backend: Backend) {
+        let ctx = EngineContext::new();
+        let data = dense_gen::generate(&ctx, 256, 16, 4, 11).unwrap();
+        let cluster = SimCluster::ec2(4);
+        let algo = LogisticRegression::new(LogRegParams {
+            sgd: SgdParams {
+                learning_rate: 0.05,
+                iters: 12,
+                track_loss: true,
+                ..Default::default()
+            },
+            backend,
+        });
+        let model = algo.train(&data.table, &cluster).unwrap();
+        assert_eq!(model.weights.len(), 16);
+        // loss decreased
+        let lh = &model.loss_history;
+        assert!(lh.last().unwrap() < lh.first().unwrap(), "{lh:?}");
+        // accuracy vs labels
+        let rows = data.table.table().collect().unwrap();
+        let mut correct = 0;
+        for r in &rows {
+            let v = r.to_vector().unwrap();
+            let y = v[0];
+            let x = v.slice(1, v.len());
+            let p = model.predict(&x).unwrap();
+            if (p > 0.5) == (y > 0.5) {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / rows.len() as f64;
+        assert!(acc > 0.8, "accuracy {acc}");
+        assert!(model.sim_seconds > 0.0);
+    }
+
+    #[test]
+    fn rust_backend_learns() {
+        train_and_check(Backend::Rust);
+    }
+
+    #[test]
+    fn xla_backend_learns() {
+        // requires `make artifacts`; the small variant fits 256/4=64 rows, d=16
+        train_and_check(Backend::Xla);
+    }
+
+    #[test]
+    fn xla_and_rust_agree() {
+        // identical data, params -> near-identical weights (f32 round-off)
+        let ctx = EngineContext::new();
+        let data = dense_gen::generate(&ctx, 128, 8, 2, 5).unwrap();
+        let params = |backend| LogRegParams {
+            sgd: SgdParams {
+                learning_rate: 0.05,
+                iters: 5,
+                ..Default::default()
+            },
+            backend,
+        };
+        let m_rust = LogisticRegression::new(params(Backend::Rust))
+            .train(&data.table, &SimCluster::ec2(2))
+            .unwrap();
+        let m_xla = LogisticRegression::new(params(Backend::Xla))
+            .train(&data.table, &SimCluster::ec2(2))
+            .unwrap();
+        for j in 0..8 {
+            assert!(
+                (m_rust.weights[j] - m_xla.weights[j]).abs() < 1e-3,
+                "dim {j}: rust {} vs xla {}",
+                m_rust.weights[j],
+                m_xla.weights[j]
+            );
+        }
+    }
+}

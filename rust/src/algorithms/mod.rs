@@ -1,0 +1,55 @@
+//! Algorithms and Models (paper §III-C): "an algorithm implementing the
+//! Algorithm interface is a class with a train() method that accepts data
+//! and hyperparameters as input, and produces a Model. A Model is an
+//! object which makes predictions."
+//!
+//! Implemented algorithms (paper §IV + the "naturally extend" list):
+//! * [`logreg::LogisticRegression`] — SGD, XLA-backed hot path (§IV-A)
+//! * [`linreg::LinearRegression`] — squared loss (same optimizer, new
+//!   gradient)
+//! * [`svm::LinearSVM`] — hinge loss
+//! * [`als::ALS`] — alternating least squares matrix factorization (§IV-B)
+//! * [`kmeans::KMeans`] — Lloyd iterations (the Fig. A2 pipeline learner)
+
+pub mod als;
+pub mod glm;
+pub mod kmeans;
+pub mod linreg;
+pub mod logreg;
+pub mod svm;
+
+pub use als::{AlsModel, AlsParams, ALS};
+pub use kmeans::{KMeans, KMeansModel, KMeansParams};
+pub use linreg::LinearRegression;
+pub use logreg::{LogisticRegression, LogRegModel, LogRegParams};
+pub use svm::LinearSVM;
+
+use crate::cluster::SimCluster;
+use crate::error::Result;
+use crate::localmatrix::MLVector;
+use crate::mltable::MLNumericTable;
+
+/// A trained model: makes predictions (paper §III-C).
+pub trait Model {
+    /// Predict for one feature vector.
+    fn predict(&self, x: &MLVector) -> Result<f64>;
+
+    /// Predict for every row of a numeric table (rows are feature
+    /// vectors; no label column).
+    fn predict_table(&self, data: &MLNumericTable) -> Result<Vec<f64>> {
+        data.collect_vectors()?
+            .iter()
+            .map(|v| self.predict(v))
+            .collect()
+    }
+}
+
+/// A trainable algorithm: `train(data, hyperparameters) -> Model`.
+/// Hyper-parameters live on the implementing struct (the builder
+/// pattern replaces Scala's parameter case classes).
+pub trait Algorithm {
+    type Output: Model;
+
+    /// Train on a numeric table distributed over `cluster`.
+    fn train(&self, data: &MLNumericTable, cluster: &SimCluster) -> Result<Self::Output>;
+}

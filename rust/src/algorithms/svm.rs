@@ -1,0 +1,101 @@
+//! Linear SVM via distributed SGD (hinge loss + L2) — the second entry in
+//! the paper's "naturally extends to linear SVMs ..." list (§IV).
+
+use std::rc::Rc;
+
+use super::glm::{GlmData, GlmGradient, RustGlmStep};
+use super::{Algorithm, Model};
+use crate::cluster::SimCluster;
+use crate::error::Result;
+use crate::localmatrix::MLVector;
+use crate::mltable::MLNumericTable;
+use crate::optim::{Reg, SgdParams, SGD};
+
+pub struct LinearSVM {
+    pub sgd: SgdParams,
+}
+
+impl LinearSVM {
+    /// Defaults include the SVM's L2 term (1/C regularization).
+    pub fn new(mut sgd: SgdParams) -> LinearSVM {
+        if matches!(sgd.reg, Reg::None) {
+            sgd.reg = Reg::L2(1e-3);
+        }
+        LinearSVM { sgd }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SvmModel {
+    pub weights: MLVector,
+    pub loss_history: Vec<f64>,
+}
+
+impl Model for SvmModel {
+    /// Signed margin (positive => class 1).
+    fn predict(&self, x: &MLVector) -> Result<f64> {
+        x.dot(&self.weights)
+    }
+}
+
+impl Algorithm for LinearSVM {
+    type Output = SvmModel;
+
+    fn train(&self, data: &MLNumericTable, cluster: &SimCluster) -> Result<SvmModel> {
+        let d = data.num_cols() - 1;
+        let mut max_rows = 1;
+        for p in 0..data.num_partitions() {
+            max_rows = max_rows.max(data.dataset().partition(p)?.len());
+        }
+        let glm = Rc::new(GlmData::prepare(data, max_rows, d, 32.min(max_rows))?);
+        let step = RustGlmStep::new(glm, GlmGradient::Hinge);
+        let res = SGD::run(&step, cluster, &self.sgd)?;
+        Ok(SvmModel {
+            weights: MLVector::new(res.weights[..d].iter().map(|&x| x as f64).collect()),
+            loss_history: res.loss_history,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineContext;
+    use crate::mltable::{MLRow, MLTable, Schema};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn separates_linearly_separable_data() {
+        let ctx = EngineContext::new();
+        let mut rng = Rng::new(9);
+        // separable with margin along x0 + x1
+        let rows: Vec<MLRow> = (0..200)
+            .map(|i| {
+                let cls = i % 2;
+                let shift = if cls == 1 { 1.5 } else { -1.5 };
+                let x0 = shift + 0.3 * rng.normal();
+                let x1 = shift + 0.3 * rng.normal();
+                MLRow::from_scalars(&[cls as f64, x0, x1])
+            })
+            .collect();
+        let t = MLTable::from_rows(&ctx, rows.clone(), Schema::numeric(3), 4)
+            .unwrap()
+            .to_numeric()
+            .unwrap();
+        let algo = LinearSVM::new(SgdParams {
+            learning_rate: 0.01,
+            iters: 30,
+            ..Default::default()
+        });
+        let m = algo.train(&t, &SimCluster::ec2(4)).unwrap();
+        let mut correct = 0;
+        for r in &rows {
+            let v = r.to_vector().unwrap();
+            let pred = m.predict(&v.slice(1, 3)).unwrap();
+            if (pred > 0.0) == (v[0] > 0.5) {
+                correct += 1;
+            }
+        }
+        assert!(correct as f64 / 200.0 > 0.95, "{correct}/200");
+    }
+}

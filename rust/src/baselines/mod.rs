@@ -1,0 +1,172 @@
+//! Comparison systems (paper §IV): Vowpal Wabbit, MATLAB / MATLAB-mex,
+//! Mahout, and GraphLab, rebuilt as *system profiles* over the same
+//! algorithm implementations.
+//!
+//! What differs between the paper's systems — and what these profiles
+//! encode — is:
+//!
+//! | System   | Language    | Topology            | Storage        | Placement |
+//! |----------|-------------|---------------------|----------------|-----------|
+//! | MLI      | Scala/JVM   | star gather/bcast   | in-memory RDD  | cluster   |
+//! | VW       | C++         | AllReduce tree      | local files    | cluster   |
+//! | MATLAB   | native BLAS | —                   | in-memory      | 1 machine |
+//! | Mahout   | Java/Hadoop | MapReduce           | HDFS per iter  | cluster   |
+//! | GraphLab | C++/MPI     | p2p vertex msgs     | in-memory      | cluster   |
+//!
+//! Per-partition *compute* is really executed and timed on this host; a
+//! per-system `compute_factor` models the language/runtime constant
+//! factor, calibrated once against the paper's reported gaps (VW ~0.65x
+//! of MLI per §IV-A "on average 35% faster"; GraphLab <=4x faster per
+//! §IV-B; Mahout's JVM MapReduce ~2.5x slower plus its HDFS traffic).
+//! Scaling *shape* is never hard-coded: it emerges from the topology +
+//! cost model. See DESIGN.md §3.
+
+pub mod graphlab;
+pub mod mahout;
+pub mod matlab;
+pub mod vw;
+
+use crate::cluster::{CommTopology, MachineSpec, NetworkModel, SimCluster};
+
+/// Outcome of running one system on one workload configuration.
+#[derive(Debug, Clone)]
+pub struct SystemRun {
+    pub system: String,
+    pub machines: usize,
+    /// Simulated walltime; `None` = did not finish (simulated OOM),
+    /// matching the paper's MATLAB entries at the largest scales.
+    pub sim_seconds: Option<f64>,
+    /// Final loss / RMSE where applicable (correctness cross-check:
+    /// "ALS methods from all systems achieved comparable error").
+    pub quality: Option<f64>,
+}
+
+/// A system profile: everything that distinguishes one of the paper's
+/// systems in the simulation.
+#[derive(Debug, Clone)]
+pub struct SystemProfile {
+    pub name: &'static str,
+    pub compute_factor: f64,
+    pub topology: CommTopology,
+    pub disk_spill: bool,
+    /// Single-machine systems (MATLAB) ignore the machine count.
+    pub single_machine: bool,
+    /// Simulated per-machine memory (bytes) — scaled-down m2.4xlarge.
+    pub mem_bytes: u64,
+}
+
+/// Default simulated memory: the paper's 68 GB node scaled by the ~375x
+/// dataset scale-down (200 GB ImageNet -> ~540 MB synthetic), i.e. 180 MB.
+/// With this one constant, MATLAB OOMs exactly where the paper reports it
+/// (the largest logreg weak-scaling point; 16x/25x Netflix but not 9x) —
+/// verified by tests in `matlab.rs`.
+pub const SCALED_NODE_MEM: u64 = 180_000_000;
+
+impl SystemProfile {
+    pub fn mli() -> SystemProfile {
+        SystemProfile {
+            name: "MLI",
+            compute_factor: 1.0,
+            topology: CommTopology::StarGatherBroadcast,
+            disk_spill: false,
+            single_machine: false,
+            mem_bytes: SCALED_NODE_MEM,
+        }
+    }
+
+    pub fn vw() -> SystemProfile {
+        SystemProfile {
+            name: "VW",
+            compute_factor: 0.65,
+            topology: CommTopology::AllReduceTree,
+            disk_spill: false,
+            single_machine: false,
+            mem_bytes: SCALED_NODE_MEM,
+        }
+    }
+
+    pub fn matlab() -> SystemProfile {
+        SystemProfile {
+            name: "MATLAB",
+            // vectorized MATLAB = native BLAS, but interpreter overhead on
+            // the update loop; net ~1.2x our hot path
+            compute_factor: 1.2,
+            topology: CommTopology::StarGatherBroadcast,
+            disk_spill: false,
+            single_machine: true,
+            mem_bytes: SCALED_NODE_MEM,
+        }
+    }
+
+    pub fn matlab_mex() -> SystemProfile {
+        SystemProfile {
+            name: "MATLAB-mex",
+            compute_factor: 0.8, // C++ inner loops via mex
+            topology: CommTopology::StarGatherBroadcast,
+            disk_spill: false,
+            single_machine: true,
+            mem_bytes: SCALED_NODE_MEM,
+        }
+    }
+
+    pub fn mahout() -> SystemProfile {
+        SystemProfile {
+            name: "Mahout",
+            compute_factor: 2.5, // JVM MapReduce per-record overhead
+            topology: CommTopology::StarGatherBroadcast,
+            disk_spill: true,
+            single_machine: false,
+            mem_bytes: SCALED_NODE_MEM,
+        }
+    }
+
+    pub fn graphlab() -> SystemProfile {
+        SystemProfile {
+            name: "GraphLab",
+            compute_factor: 0.3, // optimized C++ vertex programs
+            topology: CommTopology::PeerToPeer,
+            disk_spill: false,
+            single_machine: false,
+            mem_bytes: SCALED_NODE_MEM,
+        }
+    }
+
+    /// Build the simulated cluster this profile runs on. Benchmarks run
+    /// homogeneous synthetic partitions, so the Median straggler model is
+    /// used to keep host noise out of the barrier (see
+    /// `cluster::StragglerModel`).
+    pub fn cluster(&self, machines: usize) -> SimCluster {
+        let m = if self.single_machine { 1 } else { machines };
+        SimCluster::new(
+            m,
+            MachineSpec::default()
+                .with_compute_factor(self.compute_factor)
+                .with_mem_bytes(self.mem_bytes),
+            NetworkModel::ec2_2013(),
+        )
+        .with_straggler(crate::cluster::StragglerModel::Median)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_reflect_paper_claims() {
+        // VW faster than MLI per unit compute
+        assert!(SystemProfile::vw().compute_factor < SystemProfile::mli().compute_factor);
+        // GraphLab fastest compute
+        assert!(
+            SystemProfile::graphlab().compute_factor < SystemProfile::vw().compute_factor
+        );
+        // Mahout slowest and disk-bound
+        let mahout = SystemProfile::mahout();
+        assert!(mahout.compute_factor > 2.0);
+        assert!(mahout.disk_spill);
+        // MATLAB single machine
+        assert!(SystemProfile::matlab().single_machine);
+        assert_eq!(SystemProfile::matlab().cluster(32).num_machines(), 1);
+        assert_eq!(SystemProfile::mli().cluster(8).num_machines(), 8);
+    }
+}

@@ -1,0 +1,66 @@
+//! Vowpal Wabbit baseline (paper §IV-A).
+//!
+//! "Algorithmically, our implementation is identical to VW, with one
+//! meaningful difference, namely aggregating results across worker nodes
+//! after each round. VW uses an 'AllReduce' communication primitive to
+//! build an aggregation tree ... In contrast, we take a more traditional
+//! MapReduce approach and average all parameters at the cluster's master
+//! node." — so the VW baseline runs the *same* local-SGD provider with
+//! the AllReduce-tree topology and the C++ compute factor.
+
+use super::{SystemProfile, SystemRun};
+use crate::algorithms::logreg::{Backend, LogRegParams, LogisticRegression};
+use crate::algorithms::Algorithm;
+use crate::error::Result;
+use crate::mltable::MLNumericTable;
+use crate::optim::SgdParams;
+
+/// Run VW-profile logistic regression; returns the run record plus the
+/// trained model's final loss for cross-system quality checks.
+pub fn run_logreg(
+    data: &MLNumericTable,
+    machines: usize,
+    sgd: &SgdParams,
+    backend: Backend,
+) -> Result<SystemRun> {
+    let profile = SystemProfile::vw();
+    let cluster = profile.cluster(machines);
+    let mut params = sgd.clone();
+    params.topology = profile.topology;
+    let algo = LogisticRegression::new(LogRegParams { sgd: params, backend });
+    let model = algo.train(data, &cluster)?;
+    Ok(SystemRun {
+        system: profile.name.to_string(),
+        machines,
+        sim_seconds: Some(cluster.total_sim_seconds()),
+        quality: model.loss_history.last().copied(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::SystemProfile;
+    use crate::cluster::CommTopology;
+    use crate::data::dense_gen;
+    use crate::engine::EngineContext;
+
+    #[test]
+    fn vw_runs_and_uses_tree_topology() {
+        let ctx = EngineContext::new();
+        let data = dense_gen::generate(&ctx, 128, 8, 4, 1).unwrap();
+        let run = run_logreg(
+            &data.table,
+            4,
+            &SgdParams {
+                iters: 3,
+                ..Default::default()
+            },
+            Backend::Rust,
+        )
+        .unwrap();
+        assert_eq!(run.system, "VW");
+        assert!(run.sim_seconds.unwrap() > 0.0);
+        assert_eq!(SystemProfile::vw().topology, CommTopology::AllReduceTree);
+    }
+}

@@ -1,0 +1,103 @@
+//! Lines-of-code tables (paper Fig. 2a and Fig. 3a): the paper's
+//! usability metric. We report the paper's numbers verbatim alongside the
+//! measured size of *our* implementations (counted the way the paper
+//! counts: the algorithm/driver code a developer writes against the API,
+//! not the framework underneath).
+
+use std::path::Path;
+
+use crate::metrics::Table;
+
+/// Count effective lines of code in a source file: non-blank, non-comment
+/// (line comments only — good enough for rust sources we control).
+pub fn count_loc(path: impl AsRef<Path>) -> std::io::Result<usize> {
+    let text = std::fs::read_to_string(path)?;
+    Ok(count_loc_str(&text))
+}
+
+pub fn count_loc_str(text: &str) -> usize {
+    let mut in_block = false;
+    text.lines()
+        .filter(|l| {
+            let t = l.trim();
+            if in_block {
+                if t.contains("*/") {
+                    in_block = false;
+                }
+                return false;
+            }
+            if t.starts_with("/*") {
+                in_block = !t.contains("*/");
+                return false;
+            }
+            !t.is_empty() && !t.starts_with("//") && !t.starts_with('#')
+        })
+        .count()
+}
+
+/// Count the user-facing algorithm code (what Fig. 2a/3a measure): the
+/// lines of the `train`/optimizer bodies, not tests or docs. We measure
+/// whole implementation files minus `#[cfg(test)]` modules.
+pub fn count_impl_loc(path: impl AsRef<Path>) -> std::io::Result<usize> {
+    let text = std::fs::read_to_string(path)?;
+    let body = match text.find("#[cfg(test)]") {
+        Some(i) => &text[..i],
+        None => &text,
+    };
+    Ok(count_loc_str(body))
+}
+
+/// Fig. 2a — logistic regression lines of code.
+pub fn fig2a() -> Table {
+    let mut t = Table::new(
+        "Fig 2a: Logistic regression, lines of code",
+        &["System", "LoC (paper)", "LoC (this repo)"],
+    );
+    let ours = count_impl_loc("rust/src/algorithms/logreg.rs").unwrap_or(0)
+        + count_impl_loc("rust/src/optim/sgd.rs").unwrap_or(0);
+    t.row(vec!["MLI".into(), "55".into(), ours.to_string()]);
+    t.row(vec!["Vowpal Wabbit".into(), "721".into(), "—".into()]);
+    t.row(vec!["MATLAB".into(), "11".into(), "—".into()]);
+    t
+}
+
+/// Fig. 3a — ALS lines of code. The paper's text gives the MATLAB-vs-MLI
+/// comparison qualitatively ("about the same length") and cites the stark
+/// gap to Mahout/GraphLab; the canonical public implementations at the
+/// time were ~383 (GraphLab ALS vertex program) and ~865 (Mahout ALS
+/// job) lines, which Fig. 3a plots.
+pub fn fig3a() -> Table {
+    let mut t = Table::new(
+        "Fig 3a: ALS, lines of code",
+        &["System", "LoC (paper-era impl)", "LoC (this repo)"],
+    );
+    let ours = count_impl_loc("rust/src/algorithms/als.rs").unwrap_or(0);
+    t.row(vec!["MLI".into(), "~35".into(), ours.to_string()]);
+    t.row(vec!["GraphLab".into(), "~383".into(), "—".into()]);
+    t.row(vec!["Mahout".into(), "~865".into(), "—".into()]);
+    t.row(vec!["MATLAB".into(), "~20".into(), "—".into()]);
+    t.row(vec!["MATLAB-mex".into(), "~124".into(), "—".into()]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loc_counting_rules() {
+        let src = "\n// comment\nlet x = 1;\n\n/* block\n still block\n*/\nlet y = 2; \n";
+        assert_eq!(count_loc_str(src), 2);
+        assert_eq!(count_loc_str(""), 0);
+        assert_eq!(count_loc_str("// only comments\n// again"), 0);
+    }
+
+    #[test]
+    fn tables_have_rows() {
+        // paths resolve when run from the repo root (cargo does)
+        let t = fig2a();
+        assert_eq!(t.rows.len(), 3);
+        let t3 = fig3a();
+        assert_eq!(t3.rows.len(), 5);
+    }
+}

@@ -1,0 +1,11 @@
+//! Bench harness: regenerates every table and figure of the paper's
+//! evaluation (DESIGN.md §5). The `cargo bench` targets in
+//! `rust/benches/` are thin wrappers over [`runners`]; [`loc`] produces
+//! the lines-of-code tables (Fig. 2a / 3a).
+
+pub mod loc;
+pub mod runners;
+
+pub use runners::{
+    als_scaling, logreg_scaling, AlsBenchConfig, LogregBenchConfig, ScalingMode,
+};

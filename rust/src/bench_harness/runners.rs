@@ -1,0 +1,358 @@
+//! Figure runners: the parameter sweeps behind Fig. 2b/2c, A5/A6 (logistic
+//! regression weak/strong scaling) and Fig. 3b/3c, A7/A8 (ALS weak/strong
+//! scaling), each comparing MLI against the paper's systems on the
+//! simulated cluster.
+
+
+use crate::algorithms::als::{AlsParams, ALS};
+use crate::algorithms::logreg::{Backend, LogRegParams, LogisticRegression};
+use crate::algorithms::Algorithm;
+use crate::baselines::{graphlab, mahout, matlab, vw, SystemProfile, SystemRun};
+use crate::data::netflix::{self, NetflixConfig, RatingsData};
+use crate::data::dense_gen;
+use crate::engine::EngineContext;
+use crate::error::Result;
+use crate::metrics::{fmt_time, Table};
+use crate::optim::{GdParams, SgdParams};
+
+/// Weak scaling: data grows with machines. Strong: total data fixed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScalingMode {
+    Weak,
+    Strong,
+}
+
+// ---------------------------------------------------------------------------
+// Logistic regression (Fig. 2b/2c weak; Fig. A5/A6 strong)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct LogregBenchConfig {
+    pub machines: Vec<usize>,
+    /// rows per machine (weak) or total rows (strong)
+    pub rows: usize,
+    pub d: usize,
+    pub iters: usize,
+    pub backend: Backend,
+    pub seed: u64,
+    /// Repetitions per point; the median is reported (single-core hosts
+    /// jitter 2-3x run to run; see EXPERIMENTS.md §Scale-down caveats).
+    pub reps: usize,
+}
+
+impl Default for LogregBenchConfig {
+    fn default() -> Self {
+        LogregBenchConfig {
+            machines: vec![1, 2, 4, 8, 16, 32],
+            rows: 2048,
+            d: 512,
+            iters: 10,
+            backend: Backend::Xla,
+            seed: 42,
+            reps: 3,
+        }
+    }
+}
+
+/// Run the logreg scaling experiment. Emits one row per machine count
+/// with MLI / VW / MATLAB simulated walltimes (MATLAB: single node, DNF on
+/// OOM — the paper's weak-scaling behaviour at the largest point).
+pub fn logreg_scaling(cfg: &LogregBenchConfig, mode: ScalingMode) -> Result<Table> {
+    let title = match mode {
+        ScalingMode::Weak => "Fig 2b/2c: logistic regression weak scaling",
+        ScalingMode::Strong => "Fig A5/A6: logistic regression strong scaling",
+    };
+    let mut table = Table::new(
+        title,
+        &[
+            "machines", "n_total", "d", "MLI_s", "VW_s", "MATLAB_s", "MLI_rel", "VW_rel",
+        ],
+    );
+
+    let mut mli_base: Option<f64> = None;
+    let mut vw_base: Option<f64> = None;
+    for &m in &cfg.machines {
+        let n_total = match mode {
+            ScalingMode::Weak => cfg.rows * m,
+            ScalingMode::Strong => cfg.rows,
+        };
+        // partitions sized to fit the largest artifact (2048 rows)
+        let parts = m.max(n_total.div_ceil(2048));
+        let ctx = EngineContext::new();
+        let data = dense_gen::generate(&ctx, n_total, cfg.d, parts, cfg.seed)?;
+
+        let sgd = SgdParams {
+            iters: cfg.iters,
+            learning_rate: 0.02,
+            topology: SystemProfile::mli().topology,
+            ..Default::default()
+        };
+        let reps = cfg.reps.max(1);
+
+        // MLI
+        let mli_times: Vec<f64> = (0..reps)
+            .map(|_| {
+                let cluster = SystemProfile::mli().cluster(m);
+                LogisticRegression::new(LogRegParams {
+                    sgd: sgd.clone(),
+                    backend: cfg.backend.clone(),
+                })
+                .train(&data.table, &cluster)
+                .map(|_| cluster.total_sim_seconds())
+            })
+            .collect::<Result<_>>()?;
+        let mli = SystemRun {
+            system: "MLI".into(),
+            machines: m,
+            sim_seconds: Some(crate::util::median(&mli_times)),
+            quality: None,
+        };
+
+        // VW (same compute, allreduce tree, C++ factor)
+        let vw_times: Vec<f64> = (0..reps)
+            .map(|_| {
+                vw::run_logreg(&data.table, m, &sgd, cfg.backend.clone())
+                    .map(|r| r.sim_seconds.unwrap())
+            })
+            .collect::<Result<_>>()?;
+        let vw = SystemRun {
+            system: "VW".into(),
+            machines: m,
+            sim_seconds: Some(crate::util::median(&vw_times)),
+            quality: None,
+        };
+
+        // MATLAB (single machine full-batch GD; OOM => DNF)
+        let matlab_runs: Vec<Option<f64>> = (0..reps)
+            .map(|_| {
+                matlab::run_logreg(
+                    &data.table,
+                    &GdParams {
+                        iters: cfg.iters,
+                        ..Default::default()
+                    },
+                    false,
+                    cfg.backend == Backend::Xla,
+                )
+                .map(|r| r.sim_seconds)
+            })
+            .collect::<Result<_>>()?;
+        let matlab = SystemRun {
+            system: "MATLAB".into(),
+            machines: 1,
+            sim_seconds: if matlab_runs.iter().any(|t| t.is_none()) {
+                None
+            } else {
+                let ts: Vec<f64> = matlab_runs.iter().map(|t| t.unwrap()).collect();
+                Some(crate::util::median(&ts))
+            },
+            quality: None,
+        };
+
+        let (mli_t, vw_t) = (mli.sim_seconds.unwrap(), vw.sim_seconds.unwrap());
+        mli_base.get_or_insert(mli_t);
+        vw_base.get_or_insert(vw_t);
+        table.row(vec![
+            m.to_string(),
+            n_total.to_string(),
+            cfg.d.to_string(),
+            fmt_time(mli.sim_seconds),
+            fmt_time(vw.sim_seconds),
+            fmt_time(matlab.sim_seconds),
+            format!("{:.2}", mli_t / mli_base.unwrap()),
+            format!("{:.2}", vw_t / vw_base.unwrap()),
+        ]);
+    }
+    Ok(table)
+}
+
+// ---------------------------------------------------------------------------
+// ALS (Fig. 3b/3c weak; Fig. A7/A8 strong)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct AlsBenchConfig {
+    /// Machine counts; weak scaling tiles the base dataset by this factor
+    /// (perfect squares per the paper), strong scaling fixes `strong_tile`.
+    pub machines: Vec<usize>,
+    pub strong_tile: usize,
+    pub base: NetflixConfig,
+    pub iters: usize,
+    pub rank: usize,
+    pub lambda: f64,
+    pub use_xla: bool,
+    /// Repetitions per point; medians reported.
+    pub reps: usize,
+}
+
+impl Default for AlsBenchConfig {
+    fn default() -> Self {
+        AlsBenchConfig {
+            machines: vec![1, 4, 9, 16, 25],
+            strong_tile: 9,
+            base: NetflixConfig::default(),
+            iters: 10,
+            rank: 10,
+            lambda: 0.01,
+            use_xla: true,
+            reps: 3,
+        }
+    }
+}
+
+fn tiled(base: &RatingsData, t: usize) -> RatingsData {
+    netflix::tile(base, t)
+}
+
+/// Run the ALS scaling experiment: MLI vs GraphLab vs Mahout vs MATLAB vs
+/// MATLAB-mex (paper Fig. 3b/3c; A7/A8 for strong).
+pub fn als_scaling(cfg: &AlsBenchConfig, mode: ScalingMode) -> Result<Table> {
+    let title = match mode {
+        ScalingMode::Weak => "Fig 3b/3c: ALS weak scaling (Netflix x machines)",
+        ScalingMode::Strong => "Fig A7/A8: ALS strong scaling (9x Netflix)",
+    };
+    let mut table = Table::new(
+        title,
+        &[
+            "machines",
+            "tile",
+            "users",
+            "nnz",
+            "MLI_s",
+            "GraphLab_s",
+            "Mahout_s",
+            "MATLAB_s",
+            "MATLABmex_s",
+            "MLI_rel",
+        ],
+    );
+    let base = netflix::generate(&cfg.base);
+    let base_data = RatingsData {
+        ratings: base.ratings.clone(),
+        users: base.users,
+        items: base.items,
+        rank: base.rank,
+    };
+
+    let mut mli_base: Option<f64> = None;
+    for &m in &cfg.machines {
+        let t = match mode {
+            ScalingMode::Weak => m,
+            ScalingMode::Strong => cfg.strong_tile,
+        };
+        let data = tiled(&base_data, t);
+        let params = AlsParams {
+            rank: cfg.rank,
+            iters: cfg.iters,
+            lambda: cfg.lambda,
+            use_xla: cfg.use_xla,
+            track_rmse: false,
+            ..Default::default()
+        };
+
+        let reps = cfg.reps.max(1);
+        let med = |ts: Vec<Option<f64>>| -> Option<f64> {
+            if ts.iter().any(|t| t.is_none()) {
+                None
+            } else {
+                let v: Vec<f64> = ts.into_iter().map(|t| t.unwrap()).collect();
+                Some(crate::util::median(&v))
+            }
+        };
+
+        // MLI
+        let profile = SystemProfile::mli();
+        let mut p = params.clone();
+        p.topology = profile.topology;
+        let mli_times: Vec<Option<f64>> = (0..reps)
+            .map(|_| {
+                let cluster = profile.cluster(m);
+                ALS::new(p.clone())
+                    .train_ratings(&data, &cluster)
+                    .map(|_| Some(cluster.total_sim_seconds()))
+            })
+            .collect::<Result<_>>()?;
+        let mli_t = med(mli_times).unwrap();
+        mli_base.get_or_insert(mli_t);
+
+        // baselines: SAME compute backend as MLI so gaps come only from
+        // topology + compute factors (DESIGN.md §3)
+        let bl_params = params.clone();
+        let rep_runs = |f: &dyn Fn() -> Result<crate::baselines::SystemRun>| -> Result<Option<f64>> {
+            let ts: Vec<Option<f64>> = (0..reps)
+                .map(|_| f().map(|r| r.sim_seconds))
+                .collect::<Result<_>>()?;
+            Ok(med(ts))
+        };
+        let gl_t = rep_runs(&|| graphlab::run_als(&data, m, &bl_params))?;
+        let mh_t = rep_runs(&|| mahout::run_als(&data, m, &bl_params))?;
+        let ml_t = rep_runs(&|| matlab::run_als(&data, &bl_params, false))?;
+        let mx_t = rep_runs(&|| matlab::run_als(&data, &bl_params, true))?;
+
+        table.row(vec![
+            m.to_string(),
+            format!("{t}x"),
+            data.users.to_string(),
+            data.ratings.nnz().to_string(),
+            fmt_time(Some(mli_t)),
+            fmt_time(gl_t),
+            fmt_time(mh_t),
+            fmt_time(ml_t),
+            fmt_time(mx_t),
+            format!("{:.2}", mli_t / mli_base.unwrap()),
+        ]);
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logreg_scaling_tiny_smoke() {
+        // tiny configuration exercising the full sweep machinery
+        let cfg = LogregBenchConfig {
+            machines: vec![1, 2],
+            rows: 64,
+            d: 16,
+            iters: 2,
+            backend: Backend::Rust,
+            seed: 1,
+            reps: 1,
+        };
+        let t = logreg_scaling(&cfg, ScalingMode::Weak).unwrap();
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.headers.len(), 8);
+        // first row is the baseline: relative walltime 1.00
+        assert_eq!(t.rows[0][6], "1.00");
+        let strong = logreg_scaling(&cfg, ScalingMode::Strong).unwrap();
+        // strong scaling: n_total constant
+        assert_eq!(strong.rows[0][1], strong.rows[1][1]);
+    }
+
+    #[test]
+    fn als_scaling_tiny_smoke() {
+        let cfg = AlsBenchConfig {
+            machines: vec![1, 4],
+            strong_tile: 4,
+            base: NetflixConfig {
+                users: 64,
+                items: 24,
+                rank: 4,
+                mean_nnz_per_user: 6,
+                max_nnz_per_user: 10,
+                ..Default::default()
+            },
+            iters: 1,
+            rank: 4,
+            lambda: 0.01,
+            use_xla: false,
+            reps: 1,
+        };
+        let t = als_scaling(&cfg, ScalingMode::Weak).unwrap();
+        assert_eq!(t.rows.len(), 2);
+        // weak scaling tiles with machines
+        assert_eq!(t.rows[1][1], "4x");
+    }
+}

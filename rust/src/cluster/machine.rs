@@ -1,0 +1,75 @@
+//! Machine specifications for the simulated cluster.
+
+/// One simulated machine (modelled on the paper's EC2 m2.4xlarge fleet,
+/// scaled down so workloads fit this sandbox).
+#[derive(Debug, Clone)]
+pub struct MachineSpec {
+    /// Virtual cores (m2.4xlarge: 8). Tasks on the same machine run
+    /// `min(cores, tasks)`-way parallel in the time model.
+    pub cores: usize,
+    /// Memory capacity in bytes. Exceeding it raises a simulated OOM —
+    /// this is how the paper's "MATLAB runs out of memory at 16x/25x
+    /// Netflix" reproduces.
+    pub mem_bytes: u64,
+    /// Multiplier applied to *measured* compute seconds to model a
+    /// system's constant factor relative to this crate's rust hot path
+    /// (e.g. the paper's JVM/Scala MLI vs C++ VW gap). 1.0 = as measured.
+    pub compute_factor: f64,
+}
+
+impl MachineSpec {
+    /// The paper's m2.4xlarge: 8 vcores, 68 GB. Memory is scaled by
+    /// `mem_scale` because our datasets are ~1000x smaller than the
+    /// paper's 200 GB ImageNet run (DESIGN.md §3).
+    pub fn m2_4xlarge(mem_scale: f64) -> MachineSpec {
+        MachineSpec {
+            cores: 8,
+            mem_bytes: (68.0 * 1e9 * mem_scale) as u64,
+            compute_factor: 1.0,
+        }
+    }
+
+    pub fn with_compute_factor(mut self, f: f64) -> MachineSpec {
+        self.compute_factor = f;
+        self
+    }
+
+    pub fn with_mem_bytes(mut self, b: u64) -> MachineSpec {
+        self.mem_bytes = b;
+        self
+    }
+}
+
+impl Default for MachineSpec {
+    fn default() -> Self {
+        MachineSpec::m2_4xlarge(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn m2_defaults() {
+        let m = MachineSpec::m2_4xlarge(1.0);
+        assert_eq!(m.cores, 8);
+        assert_eq!(m.mem_bytes, 68_000_000_000);
+        assert_eq!(m.compute_factor, 1.0);
+    }
+
+    #[test]
+    fn builders() {
+        let m = MachineSpec::default()
+            .with_compute_factor(0.65)
+            .with_mem_bytes(1024);
+        assert_eq!(m.compute_factor, 0.65);
+        assert_eq!(m.mem_bytes, 1024);
+    }
+
+    #[test]
+    fn mem_scaling() {
+        let m = MachineSpec::m2_4xlarge(0.001);
+        assert_eq!(m.mem_bytes, 68_000_000);
+    }
+}

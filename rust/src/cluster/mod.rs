@@ -1,0 +1,28 @@
+//! Simulated cluster: machines + network cost model + simulated-time
+//! ledger.
+//!
+//! The paper's experiments ran on 1–32 EC2 m2.4xlarge nodes. This sandbox
+//! has one core, so multi-node *walltime* is reconstructed rather than
+//! measured (DESIGN.md §3): per-partition compute is **really executed and
+//! really timed** on the host, and communication is **charged analytically**
+//! from message sizes and the system's topology (star gather/broadcast for
+//! MLI, AllReduce tree for VW, peer-to-peer for GraphLab, HDFS disk for
+//! Mahout). Simulated time for a round is
+//!
+//! ```text
+//! round = max_over_machines(compute) * compute_factor + comm(topology, bytes)
+//! ```
+//!
+//! which is exactly the bulk-synchronous model the paper's systems follow.
+//! Scaling *shape* therefore emerges from measured compute + modelled
+//! communication, not from hard-coded curves.
+
+pub mod machine;
+pub mod network;
+pub mod sim;
+pub mod topology;
+
+pub use machine::MachineSpec;
+pub use network::NetworkModel;
+pub use sim::{RoundStats, SimCluster, SimLedger, StragglerModel};
+pub use topology::CommTopology;

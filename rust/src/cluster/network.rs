@@ -1,0 +1,82 @@
+//! Analytic network model: alpha-beta (latency + byte) costs, plus a disk
+//! model for HDFS-style intermediate state (the Mahout baseline).
+
+/// Alpha-beta network cost model.
+///
+/// A message of `s` bytes between two machines costs
+/// `latency_s + s / bandwidth_bps`. Defaults model the paper's EC2
+/// us-east placement: ~0.5 ms latency, 1 Gbit/s effective point-to-point
+/// bandwidth (m2.4xlarge is "high" I/O: 1 GbE).
+#[derive(Debug, Clone)]
+pub struct NetworkModel {
+    pub latency_s: f64,
+    pub bandwidth_bps: f64,
+    /// Disk bandwidth for HDFS-surrogate spills (Mahout baseline).
+    /// ~100 MB/s sequential (2013-era spinning disks), and HDFS writes
+    /// are 3x-replicated so effective write bandwidth divides by the
+    /// replication pipeline.
+    pub disk_bps: f64,
+    pub hdfs_replication: u32,
+    /// Fixed per-job startup overhead (Hadoop JVM spawn ~10s/job in 2013;
+    /// the paper attributes much of Mahout's iteration cost to this).
+    pub job_startup_s: f64,
+}
+
+impl NetworkModel {
+    pub fn ec2_2013() -> NetworkModel {
+        NetworkModel {
+            latency_s: 0.5e-3,
+            bandwidth_bps: 1e9 / 8.0, // 1 GbE in bytes/s
+            disk_bps: 100e6,
+            hdfs_replication: 3,
+            job_startup_s: 10.0,
+        }
+    }
+
+    /// Point-to-point message time.
+    pub fn msg_time(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+
+    /// Time to write `bytes` through the HDFS replication pipeline.
+    pub fn hdfs_write_time(&self, bytes: u64) -> f64 {
+        bytes as f64 * self.hdfs_replication as f64 / self.disk_bps
+    }
+
+    /// Time to read `bytes` from local disk (HDFS read hits one replica).
+    pub fn hdfs_read_time(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.disk_bps
+    }
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        NetworkModel::ec2_2013()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn msg_time_alpha_beta() {
+        let n = NetworkModel::ec2_2013();
+        // latency-dominated small message
+        let t_small = n.msg_time(1);
+        assert!((t_small - 0.5e-3).abs() < 1e-4);
+        // bandwidth-dominated big message: 125 MB at 125 MB/s ~ 1s
+        let t_big = n.msg_time(125_000_000);
+        assert!((t_big - 1.0).abs() < 0.01);
+        // monotone in size
+        assert!(n.msg_time(1000) < n.msg_time(1_000_000));
+    }
+
+    #[test]
+    fn hdfs_write_replicated() {
+        let n = NetworkModel::ec2_2013();
+        // write pays replication, read does not
+        assert!((n.hdfs_write_time(100_000_000) - 3.0).abs() < 1e-9);
+        assert!((n.hdfs_read_time(100_000_000) - 1.0).abs() < 1e-9);
+    }
+}

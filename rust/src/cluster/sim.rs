@@ -1,0 +1,439 @@
+//! SimCluster: the simulated-time ledger that turns really-measured
+//! per-partition compute plus analytically-charged communication into
+//! per-round and total walltime estimates.
+//!
+//! Usage pattern (bulk-synchronous, as all of the paper's systems are):
+//!
+//! ```text
+//! let cluster = SimCluster::new(32, MachineSpec::default(), NetworkModel::default());
+//! for round in 0..iters {
+//!     cluster.begin_round();
+//!     for (p, task) in partitions { cluster.run_task(machine_of(p), || compute(p)); }
+//!     cluster.charge_allreduce(CommTopology::StarGatherBroadcast, model_bytes);
+//!     cluster.end_round();
+//! }
+//! let t = cluster.total_sim_seconds();
+//! ```
+
+use std::cell::RefCell;
+
+use super::machine::MachineSpec;
+use super::network::NetworkModel;
+use super::topology::CommTopology;
+use crate::error::{Error, Result};
+use crate::util::timer::Stopwatch;
+
+/// Per-round accounting.
+#[derive(Debug, Clone, Default)]
+pub struct RoundStats {
+    /// Per-machine accumulated compute seconds this round (after
+    /// compute_factor and core-parallelism adjustment).
+    pub machine_compute_s: Vec<f64>,
+    /// Tasks executed per machine this round (for the parallelism model).
+    pub machine_tasks: Vec<usize>,
+    /// Communication seconds charged this round.
+    pub comm_s: f64,
+    /// Disk seconds charged this round (HDFS surrogate).
+    pub disk_s: f64,
+    /// Bytes moved over the network this round.
+    pub net_bytes: u64,
+}
+
+impl RoundStats {
+    fn new(machines: usize) -> RoundStats {
+        RoundStats {
+            machine_compute_s: vec![0.0; machines],
+            machine_tasks: vec![0; machines],
+            ..Default::default()
+        }
+    }
+
+    /// Per-machine effective compute seconds this round.
+    fn machine_times(&self, specs: &[MachineSpec]) -> Vec<f64> {
+        self.machine_compute_s
+            .iter()
+            .zip(self.machine_tasks.iter())
+            .zip(specs.iter())
+            .map(|((&secs, &tasks), spec)| {
+                // tasks on one machine run min(cores, tasks)-way parallel
+                let par = spec.cores.min(tasks.max(1)) as f64;
+                secs * spec.compute_factor / par
+            })
+            .collect()
+    }
+
+    /// The bulk-synchronous round time: slowest machine + comm + disk.
+    pub fn round_time(&self, specs: &[MachineSpec]) -> f64 {
+        self.round_time_with(specs, StragglerModel::Max)
+    }
+
+    /// Round time under a chosen straggler model.
+    pub fn round_time_with(&self, specs: &[MachineSpec], s: StragglerModel) -> f64 {
+        let times = self.machine_times(specs);
+        let compute = match s {
+            StragglerModel::Max => times.iter().fold(0.0f64, |a, &b| a.max(b)),
+            StragglerModel::Median => {
+                let active: Vec<f64> = times.iter().copied().filter(|&t| t > 0.0).collect();
+                crate::util::median(&active)
+            }
+        };
+        compute + self.comm_s + self.disk_s
+    }
+}
+
+/// How the bulk-synchronous barrier treats per-machine compute spread.
+///
+/// `Max` is the true BSP semantics (slowest machine gates the round).
+/// `Median` models a *homogeneous* fleet: on this 1-core host all
+/// "machines" share one core, so the empirical max is contaminated by
+/// host noise (page cache, allocator, XLA thread pool) that real,
+/// independent machines would not correlate on. Benches over homogeneous
+/// synthetic partitions use `Median`; heterogeneity experiments use `Max`.
+/// (DESIGN.md §3.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StragglerModel {
+    Max,
+    Median,
+}
+
+/// The running ledger of simulated time.
+#[derive(Debug, Default)]
+pub struct SimLedger {
+    pub total_s: f64,
+    pub total_comm_s: f64,
+    pub total_disk_s: f64,
+    pub total_net_bytes: u64,
+    pub rounds: usize,
+    current: Option<RoundStats>,
+    /// Per-machine resident bytes (simulated memory accounting).
+    pub resident_bytes: Vec<u64>,
+}
+
+/// A simulated cluster: machine fleet + network + time ledger.
+///
+/// Interior mutability (RefCell) because tasks borrow the cluster
+/// read-only while recording; single-threaded by design (one host core).
+pub struct SimCluster {
+    pub specs: Vec<MachineSpec>,
+    pub net: NetworkModel,
+    pub straggler: std::cell::Cell<StragglerModel>,
+    ledger: RefCell<SimLedger>,
+}
+
+impl SimCluster {
+    pub fn new(machines: usize, spec: MachineSpec, net: NetworkModel) -> SimCluster {
+        assert!(machines > 0, "cluster needs >= 1 machine");
+        let mut ledger = SimLedger::default();
+        ledger.resident_bytes = vec![0; machines];
+        SimCluster {
+            specs: vec![spec; machines],
+            net,
+            straggler: std::cell::Cell::new(StragglerModel::Max),
+            ledger: RefCell::new(ledger),
+        }
+    }
+
+    /// Homogeneous fleet, default EC2 specs (the common case in benches).
+    pub fn ec2(machines: usize) -> SimCluster {
+        SimCluster::new(machines, MachineSpec::default(), NetworkModel::ec2_2013())
+    }
+
+    pub fn num_machines(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// Machine owning partition `p` under round-robin placement.
+    pub fn machine_of(&self, partition: usize) -> usize {
+        partition % self.specs.len()
+    }
+
+    // -- memory model ---------------------------------------------------
+
+    /// Charge `bytes` of resident memory on a machine; simulated OOM if
+    /// capacity is exceeded (the paper's MATLAB 16x/25x failures).
+    pub fn alloc(&self, machine: usize, bytes: u64) -> Result<()> {
+        let mut l = self.ledger.borrow_mut();
+        let resident = &mut l.resident_bytes[machine];
+        let cap = self.specs[machine].mem_bytes;
+        if *resident + bytes > cap {
+            return Err(Error::Oom(format!(
+                "machine {machine}: {} + {} exceeds {} capacity",
+                crate::util::human_bytes(*resident),
+                crate::util::human_bytes(bytes),
+                crate::util::human_bytes(cap)
+            )));
+        }
+        *resident += bytes;
+        Ok(())
+    }
+
+    pub fn free(&self, machine: usize, bytes: u64) {
+        let mut l = self.ledger.borrow_mut();
+        let r = &mut l.resident_bytes[machine];
+        *r = r.saturating_sub(bytes);
+    }
+
+    pub fn resident(&self, machine: usize) -> u64 {
+        self.ledger.borrow().resident_bytes[machine]
+    }
+
+    // -- round lifecycle --------------------------------------------------
+
+    pub fn begin_round(&self) {
+        let mut l = self.ledger.borrow_mut();
+        assert!(l.current.is_none(), "begin_round inside an open round");
+        l.current = Some(RoundStats::new(self.specs.len()));
+    }
+
+    /// Execute `f` on behalf of `machine`, really timing it and charging
+    /// the measured seconds to that machine's budget for this round.
+    pub fn run_task<T>(&self, machine: usize, f: impl FnOnce() -> T) -> T {
+        let sw = Stopwatch::start();
+        let out = f();
+        let secs = sw.elapsed_secs();
+        let mut l = self.ledger.borrow_mut();
+        let cur = l
+            .current
+            .as_mut()
+            .expect("run_task outside begin_round/end_round");
+        cur.machine_compute_s[machine] += secs;
+        cur.machine_tasks[machine] += 1;
+        out
+    }
+
+    /// Charge pre-measured compute seconds (used when a task's cost was
+    /// measured once and replayed for many simulated machines).
+    pub fn charge_compute(&self, machine: usize, secs: f64) {
+        let mut l = self.ledger.borrow_mut();
+        let cur = l.current.as_mut().expect("charge_compute outside round");
+        cur.machine_compute_s[machine] += secs;
+        cur.machine_tasks[machine] += 1;
+    }
+
+    /// Charge one model-allreduce with the given topology.
+    pub fn charge_allreduce(&self, topo: CommTopology, bytes: u64) {
+        let t = topo.allreduce_time(&self.net, self.specs.len(), bytes);
+        let mut l = self.ledger.borrow_mut();
+        let m = self.specs.len() as u64;
+        let cur = l.current.as_mut().expect("charge_allreduce outside round");
+        cur.comm_s += t;
+        cur.net_bytes += 2 * bytes * m.saturating_sub(1);
+    }
+
+    /// Charge a master broadcast.
+    pub fn charge_broadcast(&self, topo: CommTopology, bytes: u64) {
+        let t = topo.broadcast_time(&self.net, self.specs.len(), bytes);
+        let mut l = self.ledger.borrow_mut();
+        let m = self.specs.len() as u64;
+        let cur = l.current.as_mut().expect("charge_broadcast outside round");
+        cur.comm_s += t;
+        cur.net_bytes += bytes * m.saturating_sub(1);
+    }
+
+    /// Charge an all-to-all shuffle: `bytes_by_src[i]` leaves machine i,
+    /// spread evenly over the others. Bottleneck-link model.
+    pub fn charge_shuffle(&self, bytes_by_src: &[u64]) {
+        let m = self.specs.len();
+        if m <= 1 {
+            return;
+        }
+        let total: u64 = bytes_by_src.iter().sum();
+        // each machine receives ~total/m; sends its own share. NIC is
+        // full-duplex; time = max over machines of max(out, in)/bw.
+        let max_out = bytes_by_src.iter().copied().max().unwrap_or(0) as f64;
+        let avg_in = total as f64 / m as f64;
+        let t = self.net.latency_s * (m as f64).log2().max(1.0)
+            + max_out.max(avg_in) / self.net.bandwidth_bps;
+        let mut l = self.ledger.borrow_mut();
+        let cur = l.current.as_mut().expect("charge_shuffle outside round");
+        cur.comm_s += t;
+        cur.net_bytes += total;
+    }
+
+    /// Charge an HDFS-surrogate write+read of intermediate state (the
+    /// Mahout baseline's per-iteration materialization).
+    pub fn charge_hdfs_roundtrip(&self, bytes_per_machine: u64) {
+        let t = self.net.hdfs_write_time(bytes_per_machine)
+            + self.net.hdfs_read_time(bytes_per_machine);
+        let mut l = self.ledger.borrow_mut();
+        let cur = l.current.as_mut().expect("charge_hdfs outside round");
+        cur.disk_s += t;
+    }
+
+    /// Charge a fixed job-startup overhead (Hadoop JVM spawn).
+    pub fn charge_job_startup(&self) {
+        let t = self.net.job_startup_s;
+        let mut l = self.ledger.borrow_mut();
+        let cur = l.current.as_mut().expect("charge_job_startup outside round");
+        cur.disk_s += t;
+    }
+
+    /// Switch the straggler model (see [`StragglerModel`]).
+    pub fn with_straggler(self, s: StragglerModel) -> SimCluster {
+        self.straggler.set(s);
+        self
+    }
+
+    /// Close the round: fold it into the total and return its stats.
+    pub fn end_round(&self) -> RoundStats {
+        let mut l = self.ledger.borrow_mut();
+        let cur = l.current.take().expect("end_round without begin_round");
+        let t = cur.round_time_with(&self.specs, self.straggler.get());
+        l.total_s += t;
+        l.total_comm_s += cur.comm_s;
+        l.total_disk_s += cur.disk_s;
+        l.total_net_bytes += cur.net_bytes;
+        l.rounds += 1;
+        cur
+    }
+
+    // -- queries ----------------------------------------------------------
+
+    pub fn total_sim_seconds(&self) -> f64 {
+        self.ledger.borrow().total_s
+    }
+
+    pub fn total_comm_seconds(&self) -> f64 {
+        self.ledger.borrow().total_comm_s
+    }
+
+    pub fn total_disk_seconds(&self) -> f64 {
+        self.ledger.borrow().total_disk_s
+    }
+
+    pub fn total_net_bytes(&self) -> u64 {
+        self.ledger.borrow().total_net_bytes
+    }
+
+    pub fn rounds(&self) -> usize {
+        self.ledger.borrow().rounds
+    }
+
+    /// Reset the ledger (memory accounting persists).
+    pub fn reset_time(&self) {
+        let mut l = self.ledger.borrow_mut();
+        l.total_s = 0.0;
+        l.total_comm_s = 0.0;
+        l.total_disk_s = 0.0;
+        l.total_net_bytes = 0;
+        l.rounds = 0;
+        l.current = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_accumulates_max_compute_plus_comm() {
+        let c = SimCluster::ec2(4);
+        c.begin_round();
+        c.charge_compute(0, 1.0);
+        c.charge_compute(1, 3.0);
+        c.charge_compute(2, 2.0);
+        c.charge_allreduce(CommTopology::StarGatherBroadcast, 1_000_000);
+        let stats = c.end_round();
+        // slowest machine (3s) dominates; 1 task/machine => no core speedup
+        let round = stats.round_time(&c.specs);
+        assert!(round > 3.0 && round < 3.1, "round={round}");
+        assert_eq!(c.rounds(), 1);
+        assert!(c.total_sim_seconds() > 3.0);
+        assert!(c.total_net_bytes() > 0);
+    }
+
+    #[test]
+    fn multicore_parallelism_divides_task_time() {
+        let c = SimCluster::ec2(1); // 8 cores
+        c.begin_round();
+        for _ in 0..8 {
+            c.charge_compute(0, 1.0);
+        }
+        let stats = c.end_round();
+        let t = stats.round_time(&c.specs);
+        assert!((t - 1.0).abs() < 1e-9, "8 tasks on 8 cores = 1s, got {t}");
+    }
+
+    #[test]
+    fn compute_factor_scales() {
+        let spec = MachineSpec::default().with_compute_factor(0.5);
+        let c = SimCluster::new(2, spec, NetworkModel::ec2_2013());
+        c.begin_round();
+        c.charge_compute(0, 2.0);
+        let t = c.end_round().round_time(&c.specs);
+        assert!((t - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn run_task_measures_and_returns() {
+        let c = SimCluster::ec2(2);
+        c.begin_round();
+        let v = c.run_task(1, || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        let stats = c.end_round();
+        assert!(stats.machine_compute_s[1] >= 0.004);
+        assert_eq!(stats.machine_tasks[1], 1);
+        assert_eq!(stats.machine_tasks[0], 0);
+    }
+
+    #[test]
+    fn oom_when_capacity_exceeded() {
+        let spec = MachineSpec::default().with_mem_bytes(1000);
+        let c = SimCluster::new(1, spec, NetworkModel::ec2_2013());
+        assert!(c.alloc(0, 800).is_ok());
+        let err = c.alloc(0, 300).unwrap_err();
+        assert!(err.is_oom());
+        c.free(0, 800);
+        assert!(c.alloc(0, 900).is_ok());
+        assert_eq!(c.resident(0), 900);
+    }
+
+    #[test]
+    fn hdfs_and_startup_charges_to_disk() {
+        let c = SimCluster::ec2(2);
+        c.begin_round();
+        c.charge_job_startup();
+        c.charge_hdfs_roundtrip(100_000_000); // 0.3s wr*3repl + 1s... = 4s
+        let stats = c.end_round();
+        assert!(stats.disk_s > 10.0); // 10s startup dominates
+        assert!(c.total_disk_seconds() > 10.0);
+    }
+
+    #[test]
+    fn shuffle_bottleneck_model() {
+        let c = SimCluster::ec2(4);
+        c.begin_round();
+        c.charge_shuffle(&[1_000_000, 1_000_000, 1_000_000, 9_000_000]);
+        let stats = c.end_round();
+        // bottleneck is the 9MB sender at 125MB/s ~ 72ms
+        assert!(stats.comm_s > 0.07 && stats.comm_s < 0.08, "{}", stats.comm_s);
+        // single machine: free
+        let c1 = SimCluster::ec2(1);
+        c1.begin_round();
+        c1.charge_shuffle(&[123]);
+        assert_eq!(c1.end_round().comm_s, 0.0);
+    }
+
+    #[test]
+    fn reset_clears_time_not_memory() {
+        let c = SimCluster::ec2(1);
+        c.alloc(0, 100).unwrap();
+        c.begin_round();
+        c.charge_compute(0, 1.0);
+        c.end_round();
+        c.reset_time();
+        assert_eq!(c.total_sim_seconds(), 0.0);
+        assert_eq!(c.rounds(), 0);
+        assert_eq!(c.resident(0), 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside round")]
+    fn task_outside_round_panics() {
+        let c = SimCluster::ec2(1);
+        c.charge_compute(0, 1.0);
+    }
+}

@@ -1,0 +1,136 @@
+//! Communication topologies and their aggregate/broadcast cost formulas.
+//!
+//! This module encodes the paper's own comparison (§IV-A Implementation):
+//! MLI averages parameters *at the master* and broadcasts one-to-many
+//! (star), while VW builds a binary **AllReduce tree** — "theoretically
+//! more efficient from the perspective of communication". The ablation
+//! bench `ablation_comm` regenerates exactly that trade-off.
+
+use super::network::NetworkModel;
+
+/// How model state is combined across machines each round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommTopology {
+    /// MLI/Spark: workers send to master (gather), master sends back
+    /// (one-to-many broadcast). Master NIC serializes both directions.
+    StarGatherBroadcast,
+    /// VW: binary aggregation tree; combine up, broadcast down the same
+    /// tree. Latency x 2 log2(M), each link carries the full vector.
+    AllReduceTree,
+    /// GraphLab-style peer-to-peer: no global aggregate; cost charged
+    /// per-message by the caller. `aggregate_time` here models a
+    /// bulk-synchronous barrier exchange of equal-size messages.
+    PeerToPeer,
+}
+
+impl CommTopology {
+    /// Time for every machine to contribute `bytes` of state and receive
+    /// the combined `bytes` back (one model-average round).
+    pub fn allreduce_time(&self, net: &NetworkModel, machines: usize, bytes: u64) -> f64 {
+        if machines <= 1 {
+            return 0.0;
+        }
+        let m = machines as f64;
+        match self {
+            CommTopology::StarGatherBroadcast => {
+                // gather: master receives (M-1) messages serially on its NIC
+                let gather = net.latency_s + (m - 1.0) * bytes as f64 / net.bandwidth_bps;
+                // broadcast: master sends (M-1) copies serially
+                let bcast = net.latency_s + (m - 1.0) * bytes as f64 / net.bandwidth_bps;
+                gather + bcast
+            }
+            CommTopology::AllReduceTree => {
+                // up + down a binary tree: 2*ceil(log2 M) hops, each hop
+                // latency + payload; interior nodes pipeline siblings (2
+                // children per node => 2x payload per hop up).
+                let hops = (m.log2().ceil()).max(1.0);
+                2.0 * hops * (net.latency_s + 2.0 * bytes as f64 / net.bandwidth_bps)
+            }
+            CommTopology::PeerToPeer => {
+                // bulk-synchronous neighbor exchange: each machine sends and
+                // receives `bytes` concurrently; NICs are independent.
+                net.latency_s + bytes as f64 / net.bandwidth_bps
+            }
+        }
+    }
+
+    /// One-to-many broadcast of `bytes` from the master (e.g. initial
+    /// model shipping, ALS factor broadcast).
+    pub fn broadcast_time(&self, net: &NetworkModel, machines: usize, bytes: u64) -> f64 {
+        if machines <= 1 {
+            return 0.0;
+        }
+        let m = machines as f64;
+        match self {
+            CommTopology::StarGatherBroadcast => {
+                net.latency_s + (m - 1.0) * bytes as f64 / net.bandwidth_bps
+            }
+            CommTopology::AllReduceTree | CommTopology::PeerToPeer => {
+                // tree broadcast: log2(M) pipelined hops
+                let hops = (m.log2().ceil()).max(1.0);
+                hops * (net.latency_s + bytes as f64 / net.bandwidth_bps)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net() -> NetworkModel {
+        NetworkModel::ec2_2013()
+    }
+
+    #[test]
+    fn single_machine_is_free() {
+        for t in [
+            CommTopology::StarGatherBroadcast,
+            CommTopology::AllReduceTree,
+            CommTopology::PeerToPeer,
+        ] {
+            assert_eq!(t.allreduce_time(&net(), 1, 1 << 20), 0.0);
+            assert_eq!(t.broadcast_time(&net(), 1, 1 << 20), 0.0);
+        }
+    }
+
+    #[test]
+    fn star_scales_linearly_tree_logarithmically() {
+        let n = net();
+        let bytes = 4 * 640_000; // a 640K-float model (paper: d=160K x4 nodes avg)
+        let star_8 = CommTopology::StarGatherBroadcast.allreduce_time(&n, 8, bytes);
+        let star_32 = CommTopology::StarGatherBroadcast.allreduce_time(&n, 32, bytes);
+        let tree_8 = CommTopology::AllReduceTree.allreduce_time(&n, 8, bytes);
+        let tree_32 = CommTopology::AllReduceTree.allreduce_time(&n, 32, bytes);
+        // star grows ~4x from 8->32 machines; tree grows ~5/3
+        assert!(star_32 / star_8 > 3.5);
+        assert!(tree_32 / tree_8 < 2.0);
+        // at 32 machines with a large model the tree must win
+        assert!(tree_32 < star_32);
+    }
+
+    #[test]
+    fn star_beats_tree_for_small_messages_few_machines() {
+        // latency-dominated regime: the tree pays 2*log2(M) latencies,
+        // the star pays 2. This is the paper's observed "MLI scales fine
+        // in practice" region.
+        let n = net();
+        let star = CommTopology::StarGatherBroadcast.allreduce_time(&n, 4, 64);
+        let tree = CommTopology::AllReduceTree.allreduce_time(&n, 4, 64);
+        assert!(star < tree);
+    }
+
+    #[test]
+    fn monotone_in_machines_and_bytes() {
+        let n = net();
+        for t in [
+            CommTopology::StarGatherBroadcast,
+            CommTopology::AllReduceTree,
+            CommTopology::PeerToPeer,
+        ] {
+            assert!(t.allreduce_time(&n, 4, 1000) <= t.allreduce_time(&n, 16, 1000));
+            assert!(t.allreduce_time(&n, 4, 1000) <= t.allreduce_time(&n, 4, 100_000));
+            assert!(t.broadcast_time(&n, 2, 10) > 0.0);
+        }
+    }
+}

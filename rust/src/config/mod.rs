@@ -1,0 +1,190 @@
+//! Typed experiment configuration: an INI/TOML-subset file format plus
+//! CLI overrides — the launcher's "real config system".
+//!
+//! Format (a strict subset of TOML):
+//!
+//! ```toml
+//! [cluster]
+//! machines = 8
+//! topology = "star"        # star | allreduce | p2p
+//!
+//! [logreg]
+//! iters = 10
+//! learning_rate = 0.05
+//! ```
+//!
+//! CLI `--section.key value` overrides file values.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::cluster::CommTopology;
+use crate::error::{Error, Result};
+use crate::util::cli::Args;
+
+/// Parsed configuration: section -> key -> raw string value.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl Config {
+    pub fn empty() -> Config {
+        Config::default()
+    }
+
+    /// Parse the TOML-subset text.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        let mut section = String::from("global");
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                cfg.values.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            let v = v.trim().trim_matches('"').to_string();
+            cfg.values
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), v);
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Config> {
+        Config::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Apply `--section.key value` CLI overrides.
+    pub fn with_overrides(mut self, args: &Args) -> Config {
+        for (k, v) in &args.options {
+            if let Some((sec, key)) = k.split_once('.') {
+                self.values
+                    .entry(sec.to_string())
+                    .or_default()
+                    .insert(key.to_string(), v.clone());
+            }
+        }
+        self
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.values.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str, default: usize) -> Result<usize> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Config(format!("[{section}] {key} = '{v}' is not an integer"))
+            }),
+        }
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str, default: f64) -> Result<f64> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Config(format!("[{section}] {key} = '{v}' is not a number"))
+            }),
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str, default: bool) -> Result<bool> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some("true") | Some("1") => Ok(true),
+            Some("false") | Some("0") => Ok(false),
+            Some(v) => Err(Error::Config(format!(
+                "[{section}] {key} = '{v}' is not a bool"
+            ))),
+        }
+    }
+
+    pub fn get_str(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key).unwrap_or(default).to_string()
+    }
+
+    pub fn topology(&self, section: &str, default: CommTopology) -> Result<CommTopology> {
+        match self.get(section, "topology") {
+            None => Ok(default),
+            Some("star") => Ok(CommTopology::StarGatherBroadcast),
+            Some("allreduce") => Ok(CommTopology::AllReduceTree),
+            Some("p2p") => Ok(CommTopology::PeerToPeer),
+            Some(v) => Err(Error::Config(format!(
+                "[{section}] topology = '{v}' (expected star|allreduce|p2p)"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+[cluster]
+machines = 8
+topology = "allreduce"
+mem_scale = 0.5
+
+[logreg]
+iters = 10
+learning_rate = 0.05
+use_xla = true
+"#;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_usize("cluster", "machines", 1).unwrap(), 8);
+        assert_eq!(c.get_f64("logreg", "learning_rate", 0.0).unwrap(), 0.05);
+        assert!(c.get_bool("logreg", "use_xla", false).unwrap());
+        assert_eq!(c.get_usize("cluster", "missing", 7).unwrap(), 7);
+        assert_eq!(
+            c.topology("cluster", CommTopology::StarGatherBroadcast).unwrap(),
+            CommTopology::AllReduceTree
+        );
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(Config::parse("no_equals_here").is_err());
+        let c = Config::parse("[s]\nx = abc\n").unwrap();
+        assert!(c.get_usize("s", "x", 0).is_err());
+        assert!(c.get_bool("s", "x", false).is_err());
+        assert!(c.topology("s", CommTopology::PeerToPeer).is_ok()); // no key -> default
+        let c2 = Config::parse("[s]\ntopology = ring\n").unwrap();
+        assert!(c2.topology("s", CommTopology::PeerToPeer).is_err());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let args = Args::parse(&[
+            "bench".to_string(),
+            "--cluster.machines".to_string(),
+            "32".to_string(),
+            "--new.key".to_string(),
+            "v".to_string(),
+        ]);
+        let c = c.with_overrides(&args);
+        assert_eq!(c.get_usize("cluster", "machines", 1).unwrap(), 32);
+        assert_eq!(c.get("new", "key"), Some("v"));
+    }
+
+    #[test]
+    fn comments_and_quotes() {
+        let c = Config::parse("[a]\nk = \"quoted\" # trailing\n").unwrap();
+        assert_eq!(c.get("a", "k"), Some("quoted"));
+    }
+}

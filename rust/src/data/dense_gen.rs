@@ -1,0 +1,129 @@
+//! Dense classification data: the ImageNet-surrogate for §IV-A.
+//!
+//! The paper trains logistic regression on featurized ImageNet (160K dense
+//! features/image). SGD cost is O(n*d) per pass regardless of what the
+//! features encode, so a planted logistic model with Gaussian features
+//! exercises the identical code path at configurable scale: x ~ N(0, I),
+//! y ~ Bernoulli(sigmoid(x . w*)) with a fixed planted w*.
+
+use std::rc::Rc;
+
+use crate::engine::EngineContext;
+use crate::error::Result;
+use crate::localmatrix::MLVector;
+use crate::mltable::{MLNumericTable, MLRow, MLTable, Schema, Value};
+use crate::util::rng::Rng;
+
+/// A generated classification dataset. Column 0 is the {0,1} label, the
+/// remaining `d` columns are features (the Fig. A4 convention:
+/// `vec(0)` = label, `vec.slice(1, ...)` = features).
+pub struct ClassificationData {
+    pub table: MLNumericTable,
+    /// The planted weight vector (for accuracy checks in tests).
+    pub w_true: MLVector,
+    pub n: usize,
+    pub d: usize,
+}
+
+/// Generate `n` examples with `d` features over `partitions` partitions.
+pub fn generate(
+    ctx: &Rc<EngineContext>,
+    n: usize,
+    d: usize,
+    partitions: usize,
+    seed: u64,
+) -> Result<ClassificationData> {
+    let mut rng = Rng::new(seed);
+    // planted model: strong enough signal that labels are learnable
+    // (margin std ~4 => Bayes accuracy ~0.9), still stochastic labels
+    let w_true = MLVector::new((0..d).map(|_| rng.normal() * (4.0 / (d as f64).sqrt())).collect());
+
+    let mut rows = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut vals = Vec::with_capacity(d + 1);
+        vals.push(Value::Scalar(0.0)); // placeholder for label
+        let mut margin = 0.0;
+        for j in 0..d {
+            let x = rng.normal();
+            margin += x * w_true[j];
+            vals.push(Value::Scalar(x));
+        }
+        let p = 1.0 / (1.0 + (-margin).exp());
+        let y = if rng.f64() < p { 1.0 } else { 0.0 };
+        vals[0] = Value::Scalar(y);
+        rows.push(MLRow::new(vals));
+    }
+
+    let table = MLTable::from_dataset(
+        ctx.parallelize(rows, partitions),
+        Schema::numeric(d + 1),
+    )
+    .to_numeric()?
+    .cache();
+    Ok(ClassificationData { table, w_true, n, d })
+}
+
+/// Bytes one example occupies in the *simulated* systems' memory model
+/// (f64 features + label, the dominant term at the paper's scale).
+pub fn example_bytes(d: usize) -> u64 {
+    ((d + 1) * 8) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineContext;
+
+    #[test]
+    fn shapes_and_labels() {
+        let ctx = EngineContext::new();
+        let data = generate(&ctx, 200, 16, 4, 42).unwrap();
+        assert_eq!(data.table.num_rows().unwrap(), 200);
+        assert_eq!(data.table.num_cols(), 17);
+        assert_eq!(data.table.num_partitions(), 4);
+        // labels are {0,1} and both classes appear
+        let mut seen = [false, false];
+        for r in data.table.table().collect().unwrap() {
+            let y = r[0].as_scalar().unwrap();
+            assert!(y == 0.0 || y == 1.0);
+            seen[y as usize] = true;
+        }
+        assert!(seen[0] && seen[1], "degenerate labels");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let ctx = EngineContext::new();
+        let a = generate(&ctx, 50, 8, 2, 7).unwrap();
+        let b = generate(&ctx, 50, 8, 2, 7).unwrap();
+        assert_eq!(
+            a.table.collect_matrix().unwrap(),
+            b.table.collect_matrix().unwrap()
+        );
+        let c = generate(&ctx, 50, 8, 2, 8).unwrap();
+        assert_ne!(
+            a.table.collect_matrix().unwrap(),
+            c.table.collect_matrix().unwrap()
+        );
+    }
+
+    #[test]
+    fn labels_correlate_with_planted_margin() {
+        let ctx = EngineContext::new();
+        let data = generate(&ctx, 500, 12, 2, 3).unwrap();
+        let mut agree = 0usize;
+        let mut total = 0usize;
+        for r in data.table.table().collect().unwrap() {
+            let v = r.to_vector().unwrap();
+            let y = v[0];
+            let x = v.slice(1, v.len());
+            let margin = x.dot(&data.w_true).unwrap();
+            if (margin > 0.0) == (y > 0.5) {
+                agree += 1;
+            }
+            total += 1;
+        }
+        // planted model should predict much better than chance
+        assert!(agree as f64 / total as f64 > 0.7, "{agree}/{total}");
+    }
+}

@@ -1,0 +1,17 @@
+//! Synthetic dataset generators — the substitutes for the paper's
+//! proprietary-scale inputs (DESIGN.md §3):
+//!
+//! * [`dense_gen`] — dense featurized classification data standing in for
+//!   the 160K-feature ImageNet run (planted logistic model).
+//! * [`netflix`] — a Netflix-shaped sparse ratings generator (power-law
+//!   user activity, planted low-rank structure) plus the paper's exact
+//!   tiling scale-up scheme.
+//! * [`text_gen`] — a topic-clustered synthetic corpus for the Fig. A2
+//!   nGrams -> tfIdf -> KMeans pipeline.
+
+pub mod dense_gen;
+pub mod netflix;
+pub mod text_gen;
+
+pub use dense_gen::ClassificationData;
+pub use netflix::RatingsData;

@@ -1,0 +1,213 @@
+//! Netflix-surrogate ratings generator (+ the paper's tiling scale-up).
+//!
+//! The real Netflix dataset: 480,189 users x 17,770 movies, ~100M ratings
+//! in {1..5}, heavily skewed user activity. We generate a shape-preserving
+//! scaled version: power-law ratings-per-user, planted rank-k structure
+//! plus noise, values clipped to [1, 5]. The paper scales it up by
+//! "repeatedly tiling" — for `t^2`-fold size we tile a t x t grid
+//! (machine counts in Fig. 3 are perfect squares: 1, 4, 9, 16, 25), which
+//! keeps per-row/column sparsity identical to the original, exactly the
+//! property the paper relies on.
+
+use crate::localmatrix::CsrMatrix;
+use crate::util::rng::Rng;
+
+/// Scaled Netflix-shaped dataset.
+pub struct RatingsData {
+    /// users x items ratings (CSR).
+    pub ratings: CsrMatrix,
+    pub users: usize,
+    pub items: usize,
+    pub rank: usize,
+}
+
+/// Generator parameters.
+#[derive(Debug, Clone)]
+pub struct NetflixConfig {
+    pub users: usize,
+    pub items: usize,
+    /// planted latent rank
+    pub rank: usize,
+    /// mean ratings per user (power-law distributed, capped)
+    pub mean_nnz_per_user: usize,
+    /// hard cap on ratings per user — matches the XLA artifact's gather
+    /// width m (users above the cap are truncated; the generator keeps
+    /// the tail below it)
+    pub max_nnz_per_user: usize,
+    pub noise: f64,
+    pub seed: u64,
+}
+
+impl Default for NetflixConfig {
+    fn default() -> Self {
+        // 1/128-ish scale of Netflix, same aspect ratio (27:1). The
+        // per-user cap of 25 keeps nnz within the XLA gather width m=128
+        // even after the paper's 5x5 tiling (25 * 5 = 125 <= 128).
+        NetflixConfig {
+            users: 3456,
+            items: 128,
+            rank: 10,
+            mean_nnz_per_user: 12,
+            max_nnz_per_user: 25,
+            noise: 0.3,
+            seed: 17,
+        }
+    }
+}
+
+/// Generate the base (untiled) dataset.
+pub fn generate(cfg: &NetflixConfig) -> RatingsData {
+    let mut rng = Rng::new(cfg.seed);
+    let k = cfg.rank;
+    // planted factors ~ N(0, 1/sqrt k) so products land in a ~unit range
+    let scale = 1.0 / (k as f64).sqrt();
+    let u: Vec<f64> = (0..cfg.users * k).map(|_| rng.normal() * scale).collect();
+    let v: Vec<f64> = (0..cfg.items * k).map(|_| rng.normal() * scale).collect();
+
+    let mut triplets = Vec::new();
+    for user in 0..cfg.users {
+        // power-law activity: most users rate few items, some rate many
+        let raw = 1 + rng.powerlaw(cfg.max_nnz_per_user, 0.9);
+        let nnz = raw
+            .max(cfg.mean_nnz_per_user / 4)
+            .min(cfg.max_nnz_per_user)
+            .min(cfg.items);
+        let items = rng.sample_indices(cfg.items, nnz);
+        for item in items {
+            let mut dot = 0.0;
+            for f in 0..k {
+                dot += u[user * k + f] * v[item * k + f];
+            }
+            // map latent score into the 1..5 star range
+            let r = (3.0 + 2.0 * dot + cfg.noise * rng.normal()).clamp(1.0, 5.0);
+            triplets.push((user, item, r));
+        }
+    }
+    let ratings = CsrMatrix::from_triplets(cfg.users, cfg.items, triplets)
+        .expect("generator produces in-bounds triplets");
+    RatingsData {
+        ratings,
+        users: cfg.users,
+        items: cfg.items,
+        rank: k,
+    }
+}
+
+/// The paper's scale-up: tile a t x t grid => t^2-fold data with identical
+/// sparsity structure. `times` must be a perfect square (machine counts in
+/// Fig. 3 are 1, 4, 9, 16, 25).
+pub fn tile(base: &RatingsData, times: usize) -> RatingsData {
+    let t = (times as f64).sqrt().round() as usize;
+    assert_eq!(t * t, times, "tile factor {times} must be a perfect square");
+    if t == 1 {
+        return RatingsData {
+            ratings: base.ratings.clone(),
+            users: base.users,
+            items: base.items,
+            rank: base.rank,
+        };
+    }
+    let tiled = base.ratings.tile_cols(t).tile_rows(t);
+    RatingsData {
+        ratings: tiled,
+        users: base.users * t,
+        items: base.items * t,
+        rank: base.rank,
+    }
+}
+
+/// Bytes of one rating in the simulated memory model (CSR entry: value +
+/// column index).
+pub fn rating_bytes() -> u64 {
+    16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_range() {
+        let d = generate(&NetflixConfig {
+            users: 200,
+            items: 64,
+            ..Default::default()
+        });
+        assert_eq!(d.ratings.rows, 200);
+        assert_eq!(d.ratings.cols, 64);
+        assert!(d.ratings.nnz() > 200); // at least ~1/user
+        for r in 0..200 {
+            for (_, v) in d.ratings.row_iter(r) {
+                assert!((1.0..=5.0).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn per_user_cap_respected() {
+        let cfg = NetflixConfig {
+            users: 300,
+            items: 64,
+            max_nnz_per_user: 32,
+            ..Default::default()
+        };
+        let d = generate(&cfg);
+        for r in 0..300 {
+            assert!(d.ratings.row_nnz(r) <= 32);
+            assert!(d.ratings.row_nnz(r) >= 1);
+        }
+    }
+
+    #[test]
+    fn activity_is_skewed() {
+        let d = generate(&NetflixConfig {
+            users: 1000,
+            items: 100,
+            ..Default::default()
+        });
+        let mut counts: Vec<usize> = (0..1000).map(|r| d.ratings.row_nnz(r)).collect();
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let top_decile_mean = counts[..100].iter().sum::<usize>() as f64 / 100.0;
+        let bottom_half_mean = counts[500..].iter().sum::<usize>() as f64 / 500.0;
+        assert!(
+            top_decile_mean > 2.0 * bottom_half_mean,
+            "power-law head should out-rate the tail ({top_decile_mean} vs {bottom_half_mean})"
+        );
+    }
+
+    #[test]
+    fn tiling_squares_size_keeps_density() {
+        let base = generate(&NetflixConfig {
+            users: 100,
+            items: 32,
+            ..Default::default()
+        });
+        let t4 = tile(&base, 4);
+        assert_eq!(t4.users, 200);
+        assert_eq!(t4.items, 64);
+        assert_eq!(t4.ratings.nnz(), base.ratings.nnz() * 4);
+        // per-user nnz doubles (2 col-tiles) — same per-row density/col
+        assert_eq!(t4.ratings.row_nnz(0), base.ratings.row_nnz(0) * 2);
+        let t1 = tile(&base, 1);
+        assert_eq!(t1.ratings.nnz(), base.ratings.nnz());
+    }
+
+    #[test]
+    #[should_panic(expected = "perfect square")]
+    fn tile_rejects_non_square() {
+        let base = generate(&NetflixConfig {
+            users: 10,
+            items: 8,
+            ..Default::default()
+        });
+        let _ = tile(&base, 8);
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = NetflixConfig::default();
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.ratings, b.ratings);
+    }
+}

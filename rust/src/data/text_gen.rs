@@ -1,0 +1,140 @@
+//! Synthetic topic-clustered text corpus for the Fig. A2 pipeline
+//! (nGrams -> tfIdf -> KMeans). Documents are drawn from `topics` latent
+//! topics; each topic has a preferred vocabulary slice, so a correct
+//! pipeline recovers the clusters.
+
+use std::rc::Rc;
+
+use crate::engine::EngineContext;
+use crate::error::Result;
+use crate::mltable::{text_from_str, MLTable};
+use crate::util::rng::Rng;
+
+/// Corpus generator parameters.
+#[derive(Debug, Clone)]
+pub struct CorpusConfig {
+    pub docs: usize,
+    pub topics: usize,
+    pub vocab: usize,
+    pub words_per_doc: usize,
+    pub seed: u64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig {
+            docs: 200,
+            topics: 4,
+            vocab: 400,
+            words_per_doc: 40,
+            seed: 5,
+        }
+    }
+}
+
+/// A generated corpus: the text plus ground-truth topic labels.
+pub struct Corpus {
+    pub text: String,
+    pub labels: Vec<usize>,
+    pub cfg: CorpusConfig,
+}
+
+fn word(i: usize) -> String {
+    // deterministic pseudo-words: w<i> is fine for tokenization tests
+    format!("w{i}")
+}
+
+/// Generate a corpus. Each topic owns a contiguous vocabulary slice; a
+/// document samples 80% of its words from its topic slice and 20% from
+/// the shared background.
+pub fn generate(cfg: &CorpusConfig) -> Corpus {
+    let mut rng = Rng::new(cfg.seed);
+    let slice = cfg.vocab / cfg.topics;
+    let mut text = String::new();
+    let mut labels = Vec::with_capacity(cfg.docs);
+    for _ in 0..cfg.docs {
+        let topic = rng.below(cfg.topics);
+        labels.push(topic);
+        let mut words = Vec::with_capacity(cfg.words_per_doc);
+        for _ in 0..cfg.words_per_doc {
+            let w = if rng.f64() < 0.8 {
+                // topical word (zipf-ish within the slice)
+                topic * slice + rng.powerlaw(slice, 1.1)
+            } else {
+                rng.below(cfg.vocab)
+            };
+            words.push(word(w));
+        }
+        text.push_str(&words.join(" "));
+        text.push('\n');
+    }
+    Corpus {
+        text,
+        labels,
+        cfg: cfg.clone(),
+    }
+}
+
+/// Generate and load as an MLTable (one row per document).
+pub fn generate_table(
+    ctx: &Rc<EngineContext>,
+    cfg: &CorpusConfig,
+    partitions: usize,
+) -> Result<(MLTable, Vec<usize>)> {
+    let corpus = generate(cfg);
+    let t = text_from_str(ctx, &corpus.text, partitions)?;
+    Ok((t, corpus.labels))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineContext;
+
+    #[test]
+    fn corpus_shape() {
+        let c = generate(&CorpusConfig::default());
+        assert_eq!(c.text.lines().count(), 200);
+        assert_eq!(c.labels.len(), 200);
+        let first = c.text.lines().next().unwrap();
+        assert_eq!(first.split_whitespace().count(), 40);
+        assert!(c.labels.iter().all(|&t| t < 4));
+    }
+
+    #[test]
+    fn loads_as_table() {
+        let ctx = EngineContext::new();
+        let (t, labels) = generate_table(&ctx, &CorpusConfig::default(), 4).unwrap();
+        assert_eq!(t.num_rows().unwrap(), labels.len());
+        assert_eq!(t.num_partitions(), 4);
+    }
+
+    #[test]
+    fn topics_use_distinct_vocabulary() {
+        let c = generate(&CorpusConfig {
+            docs: 100,
+            topics: 2,
+            vocab: 100,
+            words_per_doc: 50,
+            seed: 1,
+        });
+        // the most frequent words of each topic should be disjoint-ish
+        // (supports overlap via the 20% background, but the heads differ)
+        let mut freq0 = std::collections::HashMap::new();
+        let mut freq1 = std::collections::HashMap::new();
+        for (line, &label) in c.text.lines().zip(&c.labels) {
+            for w in line.split_whitespace() {
+                let f = if label == 0 { &mut freq0 } else { &mut freq1 };
+                *f.entry(w.to_string()).or_insert(0usize) += 1;
+            }
+        }
+        let top = |f: &std::collections::HashMap<String, usize>| {
+            let mut v: Vec<(&String, &usize)> = f.iter().collect();
+            v.sort_by(|a, b| b.1.cmp(a.1).then(a.0.cmp(b.0)));
+            v.into_iter().take(5).map(|(w, _)| w.clone()).collect::<Vec<_>>()
+        };
+        let (t0, t1) = (top(&freq0), top(&freq1));
+        let shared = t0.iter().filter(|w| t1.contains(w)).count();
+        assert!(shared <= 2, "topic heads too similar: {t0:?} vs {t1:?}");
+    }
+}

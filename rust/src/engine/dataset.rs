@@ -1,0 +1,580 @@
+//! Dataset<T>: the RDD surrogate — lazy, partitioned, lineage-tracked.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::rc::Rc;
+
+use super::shuffle;
+use super::EngineContext;
+use crate::error::{Error, Result};
+
+/// The compute closure: produce partition `p` from parents (captured).
+type ComputeFn<T> = Rc<dyn Fn(usize) -> Result<Vec<T>>>;
+
+struct Core<T> {
+    id: usize,
+    ctx: Rc<EngineContext>,
+    num_partitions: usize,
+    compute: ComputeFn<T>,
+    /// Some(slots) iff cached. A slot is None until computed or after
+    /// invalidation (simulated executor loss).
+    cache: RefCell<Option<Vec<Option<Rc<Vec<T>>>>>>,
+}
+
+/// An immutable, partitioned, lineage-tracked collection.
+///
+/// Cloning is O(1) (shares the core). All transformations are lazy: they
+/// build a new `Dataset` whose compute closure pulls parent partitions on
+/// demand. Without `cache()`, every action recomputes the full chain —
+/// exactly Spark's semantics (and the reason the Mahout baseline, which
+/// rereads HDFS instead, loses on iterative workloads).
+pub struct Dataset<T> {
+    core: Rc<Core<T>>,
+}
+
+impl<T> Clone for Dataset<T> {
+    fn clone(&self) -> Self {
+        Dataset { core: self.core.clone() }
+    }
+}
+
+impl<T: Clone + 'static> Dataset<T> {
+    // ---- constructors ---------------------------------------------------
+
+    pub(crate) fn from_vec(
+        ctx: Rc<EngineContext>,
+        data: Vec<T>,
+        partitions: usize,
+    ) -> Dataset<T> {
+        assert!(partitions > 0, "need at least one partition");
+        let n = data.len();
+        let chunks: Vec<Vec<T>> = if n == 0 {
+            vec![Vec::new(); partitions]
+        } else {
+            // balanced contiguous split: first (n % p) chunks get +1
+            let base = n / partitions;
+            let extra = n % partitions;
+            let mut out = Vec::with_capacity(partitions);
+            let mut it = data.into_iter();
+            for p in 0..partitions {
+                let take = base + usize::from(p < extra);
+                out.push(it.by_ref().take(take).collect());
+            }
+            out
+        };
+        let chunks = Rc::new(chunks);
+        Dataset::new(ctx, partitions, {
+            let chunks = chunks.clone();
+            move |p| Ok(chunks[p].clone())
+        })
+    }
+
+    pub(crate) fn new(
+        ctx: Rc<EngineContext>,
+        num_partitions: usize,
+        compute: impl Fn(usize) -> Result<Vec<T>> + 'static,
+    ) -> Dataset<T> {
+        let id = ctx.fresh_id();
+        Dataset {
+            core: Rc::new(Core {
+                id,
+                ctx,
+                num_partitions,
+                compute: Rc::new(compute),
+                cache: RefCell::new(None),
+            }),
+        }
+    }
+
+    // ---- topology ------------------------------------------------------
+
+    pub fn num_partitions(&self) -> usize {
+        self.core.num_partitions
+    }
+
+    pub fn id(&self) -> usize {
+        self.core.id
+    }
+
+    pub fn context(&self) -> Rc<EngineContext> {
+        self.core.ctx.clone()
+    }
+
+    // ---- materialization -------------------------------------------------
+
+    /// Compute (or fetch cached) partition `p`.
+    pub fn partition(&self, p: usize) -> Result<Rc<Vec<T>>> {
+        if p >= self.core.num_partitions {
+            return Err(Error::Engine(format!(
+                "partition {p} out of range (dataset has {})",
+                self.core.num_partitions
+            )));
+        }
+        // cached?
+        {
+            let cache = self.core.cache.borrow();
+            if let Some(slots) = cache.as_ref() {
+                if let Some(v) = &slots[p] {
+                    *self.core.ctx.cache_hits.borrow_mut() += 1;
+                    return Ok(v.clone());
+                }
+            }
+        }
+        // was this a cached dataset whose slot was invalidated? count a
+        // recovery (lineage recomputation after simulated loss).
+        let was_invalidated = {
+            let cache = self.core.cache.borrow();
+            cache.as_ref().is_some_and(|s| s[p].is_none())
+                && self.core.ctx.failures.was_lost(self.core.id, p)
+        };
+        // compute through lineage, honoring task-failure injection
+        let v = self.compute_with_retries(p)?;
+        let v = Rc::new(v);
+        if was_invalidated {
+            *self.core.ctx.recoveries.borrow_mut() += 1;
+        }
+        let mut cache = self.core.cache.borrow_mut();
+        if let Some(slots) = cache.as_mut() {
+            slots[p] = Some(v.clone());
+        }
+        Ok(v)
+    }
+
+    fn compute_with_retries(&self, p: usize) -> Result<Vec<T>> {
+        const MAX_ATTEMPTS: usize = 4; // Spark's spark.task.maxFailures default
+        let mut last_err = None;
+        for _attempt in 0..MAX_ATTEMPTS {
+            *self.core.ctx.tasks_run.borrow_mut() += 1;
+            if self.core.ctx.failures.should_fail(self.core.id, p) {
+                last_err = Some(Error::Engine(format!(
+                    "injected task failure (dataset {}, partition {p})",
+                    self.core.id
+                )));
+                continue;
+            }
+            return (self.core.compute)(p);
+        }
+        Err(last_err.unwrap_or_else(|| Error::Engine("retry budget exhausted".into())))
+    }
+
+    /// Enable caching (Spark `.cache()`); returns self for chaining.
+    pub fn cache(self) -> Dataset<T> {
+        {
+            let mut c = self.core.cache.borrow_mut();
+            if c.is_none() {
+                *c = Some(vec![None; self.core.num_partitions]);
+            }
+        }
+        self
+    }
+
+    /// Simulate losing a cached partition (executor death). The next
+    /// `partition(p)` recomputes through lineage and re-caches.
+    pub fn invalidate_partition(&self, p: usize) {
+        let mut c = self.core.cache.borrow_mut();
+        if let Some(slots) = c.as_mut() {
+            if slots[p].take().is_some() {
+                self.core.ctx.failures.mark_lost(self.core.id, p);
+            }
+        }
+    }
+
+    /// True if partition `p` is resident in cache.
+    pub fn is_cached(&self, p: usize) -> bool {
+        self.core
+            .cache
+            .borrow()
+            .as_ref()
+            .is_some_and(|s| s[p].is_some())
+    }
+
+    // ---- actions ----------------------------------------------------------
+
+    /// Materialize all partitions, in order.
+    pub fn collect(&self) -> Result<Vec<T>> {
+        let mut out = Vec::new();
+        for p in 0..self.core.num_partitions {
+            out.extend(self.partition(p)?.iter().cloned());
+        }
+        Ok(out)
+    }
+
+    /// Force-compute every partition (into cache if enabled).
+    pub fn materialize(&self) -> Result<()> {
+        for p in 0..self.core.num_partitions {
+            self.partition(p)?;
+        }
+        Ok(())
+    }
+
+    pub fn count(&self) -> Result<usize> {
+        let mut n = 0;
+        for p in 0..self.core.num_partitions {
+            n += self.partition(p)?.len();
+        }
+        Ok(n)
+    }
+
+    /// Tree-free associative reduce over all elements (Fig. A1 `reduce`).
+    pub fn reduce(&self, f: impl Fn(T, T) -> T) -> Result<Option<T>> {
+        let mut acc: Option<T> = None;
+        for p in 0..self.core.num_partitions {
+            for x in self.partition(p)?.iter().cloned() {
+                acc = Some(match acc {
+                    None => x,
+                    Some(a) => f(a, x),
+                });
+            }
+        }
+        Ok(acc)
+    }
+
+    /// Per-partition fold then combine — the engine primitive behind
+    /// MLTable's `matrixBatchMap(...).reduce` pattern in Fig. A4.
+    pub fn aggregate<U: Clone + 'static>(
+        &self,
+        zero: U,
+        seq: impl Fn(U, &T) -> U,
+        comb: impl Fn(U, U) -> U,
+    ) -> Result<U> {
+        let mut acc = zero.clone();
+        for p in 0..self.core.num_partitions {
+            let part = self.partition(p)?;
+            let mut local = zero.clone();
+            for x in part.iter() {
+                local = seq(local, x);
+            }
+            acc = comb(acc, local);
+        }
+        Ok(acc)
+    }
+
+    // ---- narrow transformations ------------------------------------------
+
+    pub fn map<U: Clone + 'static>(&self, f: impl Fn(&T) -> U + 'static) -> Dataset<U> {
+        let parent = self.clone();
+        Dataset::new(self.core.ctx.clone(), self.num_partitions(), move |p| {
+            Ok(parent.partition(p)?.iter().map(|x| f(x)).collect())
+        })
+    }
+
+    pub fn filter(&self, f: impl Fn(&T) -> bool + 'static) -> Dataset<T> {
+        let parent = self.clone();
+        Dataset::new(self.core.ctx.clone(), self.num_partitions(), move |p| {
+            Ok(parent
+                .partition(p)?
+                .iter()
+                .filter(|x| f(x))
+                .cloned()
+                .collect())
+        })
+    }
+
+    pub fn flat_map<U: Clone + 'static>(
+        &self,
+        f: impl Fn(&T) -> Vec<U> + 'static,
+    ) -> Dataset<U> {
+        let parent = self.clone();
+        Dataset::new(self.core.ctx.clone(), self.num_partitions(), move |p| {
+            Ok(parent.partition(p)?.iter().flat_map(|x| f(x)).collect())
+        })
+    }
+
+    /// Whole-partition transformation — the engine primitive behind
+    /// `matrixBatchMap` (Fig. A1). `f` receives (partition_index, rows).
+    pub fn map_partitions<U: Clone + 'static>(
+        &self,
+        f: impl Fn(usize, &[T]) -> Result<Vec<U>> + 'static,
+    ) -> Dataset<U> {
+        let parent = self.clone();
+        Dataset::new(self.core.ctx.clone(), self.num_partitions(), move |p| {
+            f(p, &parent.partition(p)?)
+        })
+    }
+
+    /// Concatenate two datasets (Fig. A1 `union`); partitions appended.
+    pub fn union(&self, other: &Dataset<T>) -> Dataset<T> {
+        let a = self.clone();
+        let b = other.clone();
+        let na = a.num_partitions();
+        Dataset::new(
+            self.core.ctx.clone(),
+            na + b.num_partitions(),
+            move |p| {
+                if p < na {
+                    a.partition(p).map(|r| r.as_ref().clone())
+                } else {
+                    b.partition(p - na).map(|r| r.as_ref().clone())
+                }
+            },
+        )
+    }
+
+    /// Zip co-partitioned datasets elementwise.
+    pub fn zip<U: Clone + 'static>(&self, other: &Dataset<U>) -> Result<Dataset<(T, U)>> {
+        if self.num_partitions() != other.num_partitions() {
+            return Err(Error::Engine(format!(
+                "zip: partition counts differ ({} vs {})",
+                self.num_partitions(),
+                other.num_partitions()
+            )));
+        }
+        let a = self.clone();
+        let b = other.clone();
+        Ok(Dataset::new(
+            self.core.ctx.clone(),
+            self.num_partitions(),
+            move |p| {
+                let pa = a.partition(p)?;
+                let pb = b.partition(p)?;
+                if pa.len() != pb.len() {
+                    return Err(Error::Engine(format!(
+                        "zip: partition {p} lengths differ ({} vs {})",
+                        pa.len(),
+                        pb.len()
+                    )));
+                }
+                Ok(pa.iter().cloned().zip(pb.iter().cloned()).collect())
+            },
+        ))
+    }
+
+    /// Redistribute into `parts` partitions (round-robin) — a shuffle.
+    pub fn repartition(&self, parts: usize) -> Dataset<T> {
+        assert!(parts > 0);
+        let parent = self.clone();
+        let buckets: Rc<RefCell<Option<Vec<Vec<T>>>>> = Rc::new(RefCell::new(None));
+        Dataset::new(self.core.ctx.clone(), parts, move |p| {
+            let mut b = buckets.borrow_mut();
+            if b.is_none() {
+                let mut out = vec![Vec::new(); parts];
+                let mut i = 0usize;
+                for q in 0..parent.num_partitions() {
+                    for x in parent.partition(q)?.iter() {
+                        out[i % parts].push(x.clone());
+                        i += 1;
+                    }
+                }
+                *b = Some(out);
+            }
+            Ok(b.as_ref().unwrap()[p].clone())
+        })
+    }
+}
+
+// ---- key-value (shuffle) transformations --------------------------------
+
+impl<K, V> Dataset<(K, V)>
+where
+    K: Clone + Hash + Eq + 'static,
+    V: Clone + 'static,
+{
+    /// Combine values per key with an associative, commutative function
+    /// (Fig. A1 `reduceByKey`). Hash-partitions keys across the existing
+    /// partition count (a wide dependency: first access materializes all
+    /// parent partitions, as a real shuffle would).
+    pub fn reduce_by_key(&self, f: impl Fn(V, V) -> V + 'static) -> Dataset<(K, V)> {
+        let parent = self.clone();
+        let parts = self.num_partitions();
+        let shuffled: Rc<RefCell<Option<Vec<Vec<(K, V)>>>>> = Rc::new(RefCell::new(None));
+        let f = Rc::new(f);
+        Dataset::new(self.core.ctx.clone(), parts, move |p| {
+            let mut s = shuffled.borrow_mut();
+            if s.is_none() {
+                *s = Some(shuffle::shuffle_reduce(&parent, parts, f.as_ref())?);
+            }
+            Ok(s.as_ref().unwrap()[p].clone())
+        })
+    }
+
+    /// Group values per key.
+    pub fn group_by_key(&self) -> Dataset<(K, Vec<V>)> {
+        let parent = self.clone();
+        let parts = self.num_partitions();
+        let shuffled: Rc<RefCell<Option<Vec<Vec<(K, Vec<V>)>>>>> =
+            Rc::new(RefCell::new(None));
+        Dataset::new(self.core.ctx.clone(), parts, move |p| {
+            let mut s = shuffled.borrow_mut();
+            if s.is_none() {
+                *s = Some(shuffle::shuffle_group(&parent, parts)?);
+            }
+            Ok(s.as_ref().unwrap()[p].clone())
+        })
+    }
+
+    /// Inner join on key (Fig. A1 `join`).
+    pub fn join<W: Clone + 'static>(
+        &self,
+        other: &Dataset<(K, W)>,
+    ) -> Dataset<(K, (V, W))> {
+        let a = self.clone();
+        let b = other.clone();
+        let parts = self.num_partitions();
+        let built: Rc<RefCell<Option<Vec<Vec<(K, (V, W))>>>>> = Rc::new(RefCell::new(None));
+        Dataset::new(self.core.ctx.clone(), parts, move |p| {
+            let mut s = built.borrow_mut();
+            if s.is_none() {
+                // build hash map from b, stream a through it, hash-partition out
+                let mut rhs: HashMap<K, Vec<W>> = HashMap::new();
+                for q in 0..b.num_partitions() {
+                    for (k, w) in b.partition(q)?.iter() {
+                        rhs.entry(k.clone()).or_default().push(w.clone());
+                    }
+                }
+                let mut out = vec![Vec::new(); parts];
+                for q in 0..a.num_partitions() {
+                    for (k, v) in a.partition(q)?.iter() {
+                        if let Some(ws) = rhs.get(k) {
+                            let slot = shuffle::bucket_of(k, parts);
+                            for w in ws {
+                                out[slot].push((k.clone(), (v.clone(), w.clone())));
+                            }
+                        }
+                    }
+                }
+                *s = Some(out);
+            }
+            Ok(s.as_ref().unwrap()[p].clone())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::EngineContext;
+    use super::*;
+
+    fn ctx() -> Rc<EngineContext> {
+        EngineContext::new()
+    }
+
+    #[test]
+    fn partitioning_is_balanced_and_ordered() {
+        let d = ctx().parallelize((0..10).collect::<Vec<i32>>(), 3);
+        let sizes: Vec<usize> = (0..3).map(|p| d.partition(p).unwrap().len()).collect();
+        assert_eq!(sizes, vec![4, 3, 3]);
+        assert_eq!(d.collect().unwrap(), (0..10).collect::<Vec<_>>());
+        assert!(d.partition(3).is_err());
+    }
+
+    #[test]
+    fn lazy_chain_map_filter_flatmap() {
+        let d = ctx().parallelize((1..=6).collect::<Vec<i32>>(), 2);
+        let out = d
+            .map(|x| x * 10)
+            .filter(|x| x % 20 == 0)
+            .flat_map(|x| vec![*x, *x + 1])
+            .collect()
+            .unwrap();
+        assert_eq!(out, vec![20, 21, 40, 41, 60, 61]);
+    }
+
+    #[test]
+    fn map_partitions_sees_whole_partition() {
+        let d = ctx().parallelize((0..8).collect::<Vec<i32>>(), 4);
+        let sums = d
+            .map_partitions(|idx, xs| Ok(vec![(idx, xs.iter().sum::<i32>())]))
+            .collect()
+            .unwrap();
+        assert_eq!(sums, vec![(0, 1), (1, 5), (2, 9), (3, 13)]);
+    }
+
+    #[test]
+    fn union_zip_repartition() {
+        let c = ctx();
+        let a = c.parallelize(vec![1, 2], 1);
+        let b = c.parallelize(vec![3, 4], 1);
+        let u = a.union(&b);
+        assert_eq!(u.num_partitions(), 2);
+        assert_eq!(u.collect().unwrap(), vec![1, 2, 3, 4]);
+
+        let z = a.zip(&b).unwrap().collect().unwrap();
+        assert_eq!(z, vec![(1, 3), (2, 4)]);
+        assert!(a.zip(&u).is_err());
+
+        let r = u.repartition(4);
+        assert_eq!(r.num_partitions(), 4);
+        let mut all = r.collect().unwrap();
+        all.sort();
+        assert_eq!(all, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn reduce_and_aggregate() {
+        let d = ctx().parallelize((1..=100).collect::<Vec<i64>>(), 7);
+        assert_eq!(d.reduce(|a, b| a + b).unwrap(), Some(5050));
+        assert_eq!(d.count().unwrap(), 100);
+        let (sum, cnt) = d
+            .aggregate((0i64, 0usize), |(s, c), x| (s + x, c + 1), |a, b| (a.0 + b.0, a.1 + b.1))
+            .unwrap();
+        assert_eq!((sum, cnt), (5050, 100));
+        let empty: Dataset<i64> = ctx().parallelize(vec![], 2);
+        assert_eq!(empty.reduce(|a, b| a + b).unwrap(), None);
+    }
+
+    #[test]
+    fn reduce_by_key_and_group() {
+        let d = ctx().parallelize(
+            vec![("a", 1), ("b", 2), ("a", 3), ("c", 4), ("b", 5)],
+            2,
+        );
+        let mut red = d.reduce_by_key(|a, b| a + b).collect().unwrap();
+        red.sort();
+        assert_eq!(red, vec![("a", 4), ("b", 7), ("c", 4)]);
+
+        let mut grp = d.group_by_key().collect().unwrap();
+        grp.sort();
+        assert_eq!(grp[0].0, "a");
+        assert_eq!(grp[0].1, vec![1, 3]);
+    }
+
+    #[test]
+    fn join_inner() {
+        let c = ctx();
+        let a = c.parallelize(vec![(1, "x"), (2, "y"), (3, "z")], 2);
+        let b = c.parallelize(vec![(2, 20.0), (3, 30.0), (4, 40.0)], 2);
+        let mut j = a.join(&b).collect().unwrap();
+        j.sort_by_key(|e| e.0);
+        assert_eq!(j, vec![(2, ("y", 20.0)), (3, ("z", 30.0))]);
+    }
+
+    #[test]
+    fn cache_hits_and_invalidation_recovery() {
+        let c = ctx();
+        let d = c
+            .parallelize((0..100).collect::<Vec<i32>>(), 4)
+            .map(|x| x + 1)
+            .cache();
+        d.materialize().unwrap();
+        assert!(d.is_cached(2));
+        let before = c.stats().0;
+        let _ = d.partition(2).unwrap(); // cache hit: no new task
+        assert_eq!(c.stats().0, before);
+        assert!(c.stats().1 >= 1);
+
+        // simulate executor loss
+        d.invalidate_partition(2);
+        assert!(!d.is_cached(2));
+        let v = d.partition(2).unwrap(); // recomputed through lineage
+        assert_eq!(v[0], 51);
+        assert!(d.is_cached(2));
+        assert_eq!(c.stats().2, 1, "one recovery recorded");
+        // data identical after recovery
+        assert_eq!(d.collect().unwrap(), (1..=100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn lineage_recovery_through_deep_chain() {
+        let c = ctx();
+        let base = c.parallelize((0..20).collect::<Vec<i64>>(), 2).cache();
+        let derived = base.map(|x| x * 2).filter(|x| *x % 4 == 0).cache();
+        derived.materialize().unwrap();
+        base.invalidate_partition(0);
+        derived.invalidate_partition(0);
+        // both recover transparently
+        let out = derived.collect().unwrap();
+        assert_eq!(out, (0..20).map(|x| x * 2).filter(|x| x % 4 == 0).collect::<Vec<_>>());
+        assert!(c.stats().2 >= 2);
+    }
+}

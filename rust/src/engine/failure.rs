@@ -1,0 +1,100 @@
+//! Failure injection: deterministic task-failure and partition-loss plans
+//! for testing the engine's Spark-style recovery (the paper's §IV
+//! motivation for building on Spark: "automatic recovery from node
+//! failure is a necessity").
+
+use std::cell::RefCell;
+use std::collections::{HashMap, HashSet};
+
+/// Deterministic failure plan shared by all datasets of a context.
+///
+/// Two failure modes:
+/// * **task failures** — `fail_times(dataset, partition, n)` makes the
+///   next `n` compute attempts of that partition fail; the scheduler
+///   retries up to Spark's default 4 attempts.
+/// * **partition loss** — recorded by `Dataset::invalidate_partition` via
+///   `mark_lost`, used to count lineage recoveries.
+#[derive(Default)]
+pub struct FailurePlan {
+    fail_budget: RefCell<HashMap<(usize, usize), usize>>,
+    lost: RefCell<HashSet<(usize, usize)>>,
+}
+
+impl FailurePlan {
+    /// Make the next `n` compute attempts of (dataset, partition) fail.
+    pub fn fail_times(&self, dataset: usize, partition: usize, n: usize) {
+        self.fail_budget
+            .borrow_mut()
+            .insert((dataset, partition), n);
+    }
+
+    /// Called by the scheduler before each attempt; consumes one failure
+    /// from the budget if present.
+    pub fn should_fail(&self, dataset: usize, partition: usize) -> bool {
+        let mut b = self.fail_budget.borrow_mut();
+        match b.get_mut(&(dataset, partition)) {
+            Some(n) if *n > 0 => {
+                *n -= 1;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    pub(crate) fn mark_lost(&self, dataset: usize, partition: usize) {
+        self.lost.borrow_mut().insert((dataset, partition));
+    }
+
+    pub(crate) fn was_lost(&self, dataset: usize, partition: usize) -> bool {
+        self.lost.borrow().contains(&(dataset, partition))
+    }
+
+    /// Total partitions ever marked lost (for reporting).
+    pub fn losses(&self) -> usize {
+        self.lost.borrow().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineContext;
+
+    #[test]
+    fn budget_consumed() {
+        let p = FailurePlan::default();
+        p.fail_times(1, 0, 2);
+        assert!(p.should_fail(1, 0));
+        assert!(p.should_fail(1, 0));
+        assert!(!p.should_fail(1, 0));
+        assert!(!p.should_fail(9, 9));
+    }
+
+    #[test]
+    fn transient_task_failure_retried_to_success() {
+        let ctx = EngineContext::new();
+        let d = ctx.parallelize((0..10).collect::<Vec<i32>>(), 2).map(|x| x * 3);
+        // fail the first 2 attempts of partition 1; retry budget is 4
+        ctx.failures.fail_times(d.id(), 1, 2);
+        let out = d.collect().unwrap();
+        assert_eq!(out, (0..10).map(|x| x * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn permanent_failure_exhausts_retries() {
+        let ctx = EngineContext::new();
+        let d = ctx.parallelize(vec![1, 2, 3], 1).map(|x| *x);
+        ctx.failures.fail_times(d.id(), 0, 100);
+        let err = d.collect().unwrap_err();
+        assert!(err.to_string().contains("injected task failure"));
+    }
+
+    #[test]
+    fn loss_tracking() {
+        let p = FailurePlan::default();
+        p.mark_lost(3, 1);
+        assert!(p.was_lost(3, 1));
+        assert!(!p.was_lost(3, 0));
+        assert_eq!(p.losses(), 1);
+    }
+}

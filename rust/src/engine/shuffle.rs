@@ -1,0 +1,138 @@
+//! Shuffle machinery: hash partitioning + shuffle-side combine for the
+//! wide dependencies (`reduce_by_key`, `group_by_key`, `join`).
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+
+use super::dataset::Dataset;
+use crate::error::Result;
+
+/// Deterministic bucket for a key.
+pub fn bucket_of<K: Hash>(key: &K, parts: usize) -> usize {
+    let mut h = DefaultHasher::new();
+    key.hash(&mut h);
+    (h.finish() % parts as u64) as usize
+}
+
+/// Map-side combine + hash shuffle + reduce-side merge. Returns one bucket
+/// of combined (K, V) pairs per output partition.
+///
+/// Combines *within each source partition first* (Spark's map-side
+/// combine), so shuffle volume is O(distinct keys) not O(records) — the
+/// difference the paper leans on when it calls Mahout's SGD
+/// "communication intensive".
+pub fn shuffle_reduce<K, V>(
+    parent: &Dataset<(K, V)>,
+    parts: usize,
+    f: &impl Fn(V, V) -> V,
+) -> Result<Vec<Vec<(K, V)>>>
+where
+    K: Clone + Hash + Eq + 'static,
+    V: Clone + 'static,
+{
+    let mut buckets: Vec<HashMap<K, V>> = (0..parts).map(|_| HashMap::new()).collect();
+    for p in 0..parent.num_partitions() {
+        // map-side combine
+        let mut local: HashMap<K, V> = HashMap::new();
+        for (k, v) in parent.partition(p)?.iter() {
+            match local.remove(k) {
+                None => {
+                    local.insert(k.clone(), v.clone());
+                }
+                Some(prev) => {
+                    local.insert(k.clone(), f(prev, v.clone()));
+                }
+            }
+        }
+        // shuffle into reduce-side buckets
+        for (k, v) in local {
+            let b = bucket_of(&k, parts);
+            match buckets[b].remove(&k) {
+                None => {
+                    buckets[b].insert(k, v);
+                }
+                Some(prev) => {
+                    buckets[b].insert(k, f(prev, v));
+                }
+            }
+        }
+    }
+    Ok(buckets
+        .into_iter()
+        .map(|m| m.into_iter().collect())
+        .collect())
+}
+
+/// Hash shuffle with grouping (no combine function).
+pub fn shuffle_group<K, V>(
+    parent: &Dataset<(K, V)>,
+    parts: usize,
+) -> Result<Vec<Vec<(K, Vec<V>)>>>
+where
+    K: Clone + Hash + Eq + 'static,
+    V: Clone + 'static,
+{
+    let mut buckets: Vec<HashMap<K, Vec<V>>> = (0..parts).map(|_| HashMap::new()).collect();
+    for p in 0..parent.num_partitions() {
+        for (k, v) in parent.partition(p)?.iter() {
+            buckets[bucket_of(k, parts)]
+                .entry(k.clone())
+                .or_default()
+                .push(v.clone());
+        }
+    }
+    Ok(buckets
+        .into_iter()
+        .map(|m| m.into_iter().collect())
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineContext;
+
+    #[test]
+    fn bucket_deterministic_and_in_range() {
+        for parts in [1, 3, 16] {
+            for k in 0..100 {
+                let b = bucket_of(&k, parts);
+                assert!(b < parts);
+                assert_eq!(b, bucket_of(&k, parts));
+            }
+        }
+    }
+
+    #[test]
+    fn keys_land_in_one_bucket_only() {
+        let ctx = EngineContext::new();
+        let d = ctx.parallelize(
+            (0..50).map(|i| (i % 7, 1u64)).collect::<Vec<_>>(),
+            5,
+        );
+        let buckets = shuffle_reduce(&d, 5, &|a, b| a + b).unwrap();
+        // each key appears in exactly one bucket with the full count
+        let mut seen = HashMap::new();
+        for (b, bucket) in buckets.iter().enumerate() {
+            for (k, v) in bucket {
+                assert!(seen.insert(*k, (b, *v)).is_none(), "key {k} duplicated");
+            }
+        }
+        assert_eq!(seen.len(), 7);
+        for (k, (_, v)) in seen {
+            let expect = (0..50).filter(|i| i % 7 == k).count() as u64;
+            assert_eq!(v, expect);
+        }
+    }
+
+    #[test]
+    fn group_collects_all_values() {
+        let ctx = EngineContext::new();
+        let d = ctx.parallelize(vec![("a", 1), ("a", 2), ("b", 3)], 2);
+        let buckets = shuffle_group(&d, 2).unwrap();
+        let all: Vec<(&str, Vec<i32>)> = buckets.into_iter().flatten().collect();
+        let a = all.iter().find(|(k, _)| *k == "a").unwrap();
+        assert_eq!(a.1.len(), 2);
+    }
+}

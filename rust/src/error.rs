@@ -1,0 +1,84 @@
+//! Crate-wide error type.
+//!
+//! Everything user-facing returns [`Result`]; internal invariant
+//! violations panic (they indicate bugs, not user errors).
+
+use thiserror::Error;
+
+/// Unified error for the MLI crate.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Schema mismatch in an MLTable operation (union/join/cast).
+    #[error("schema error: {0}")]
+    Schema(String),
+
+    /// Shape mismatch in LocalMatrix algebra.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// Numerical failure (singular solve, non-convergence).
+    #[error("numerical error: {0}")]
+    Numerical(String),
+
+    /// Engine / scheduler failure (lost partition beyond retry budget,
+    /// missing dependency, bad partitioning).
+    #[error("engine error: {0}")]
+    Engine(String),
+
+    /// Simulated out-of-memory: a workload exceeded a machine's capacity.
+    /// Benches report this as DNF, mirroring the paper's MATLAB OOMs.
+    #[error("out of memory: {0}")]
+    Oom(String),
+
+    /// PJRT runtime failure (artifact missing, shape mismatch at the
+    /// XLA boundary, execution error).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Configuration / CLI parse error.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Malformed input data (CSV/JSON/text loaders).
+    #[error("parse error: {0}")]
+    Parse(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// True if this error models a *simulated* resource failure (OOM),
+    /// which benches report as DNF rather than propagate.
+    pub fn is_oom(&self) -> bool {
+        matches!(self, Error::Oom(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        let e = Error::Shape("2x3 vs 4x5".into());
+        assert!(e.to_string().contains("2x3 vs 4x5"));
+    }
+
+    #[test]
+    fn oom_detection() {
+        assert!(Error::Oom("68GB cap".into()).is_oom());
+        assert!(!Error::Schema("x".into()).is_oom());
+    }
+}

@@ -1,0 +1,18 @@
+//! Feature extraction (paper §III-A, Fig. A2): transformations from raw
+//! MLTables to featurized MLTables — `nGrams`, `tfIdf`, plus a standard
+//! scaler. Each is a function `MLTable -> MLTable` (of a possibly
+//! different schema), matching the paper's composition style:
+//!
+//! ```text
+//! let featurized = tfidf(&ngrams(&raw_text, 2, 30000)?)?;
+//! ```
+
+pub mod ngrams;
+pub mod scaler;
+pub mod tfidf;
+pub mod tokenize;
+
+pub use ngrams::{ngrams, NGramsOutput};
+pub use scaler::standard_scale;
+pub use tfidf::tfidf;
+pub use tokenize::tokenize;

@@ -1,0 +1,128 @@
+//! nGrams feature extractor (Fig. A2: `nGrams(rawTextTable, n=2,
+//! top=30000)`): builds the corpus-wide top-k n-gram vocabulary, then maps
+//! each document to its n-gram count vector.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use super::tokenize::tokenize;
+use crate::error::{Error, Result};
+use crate::mltable::{MLNumericTable, MLRow, MLTable, Schema};
+
+/// Result of n-gram extraction: the featurized table plus the vocabulary
+/// (index -> n-gram), needed to interpret the columns downstream.
+pub struct NGramsOutput {
+    pub table: MLNumericTable,
+    pub vocab: Rc<Vec<String>>,
+}
+
+/// Extract n-gram counts. `text_col` must be a Str column; the output has
+/// `top` Scalar columns (one per vocabulary n-gram, ordered by descending
+/// corpus frequency, ties broken lexicographically for determinism).
+pub fn ngrams(table: &MLTable, text_col: usize, n: usize, top: usize) -> Result<NGramsOutput> {
+    if n == 0 {
+        return Err(Error::Config("ngrams: n must be >= 1".into()));
+    }
+    // pass 1: corpus-wide n-gram document frequencies (driver-side merge
+    // of per-partition counts — the reduceByKey pattern).
+    let counts = table
+        .dataset()
+        .map_partitions(move |_, rows| {
+            let mut local: HashMap<String, u64> = HashMap::new();
+            for r in rows {
+                let text = r[text_col]
+                    .as_str()
+                    .ok_or_else(|| Error::Schema("ngrams: text column is not Str".into()))?;
+                for g in doc_ngrams(text, n) {
+                    *local.entry(g).or_insert(0) += 1;
+                }
+            }
+            Ok(local.into_iter().collect::<Vec<(String, u64)>>())
+        })
+        .reduce_by_key(|a, b| a + b)
+        .collect()?;
+
+    // top-k vocabulary, deterministic order
+    let mut sorted: Vec<(String, u64)> = counts;
+    sorted.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+    sorted.truncate(top);
+    let vocab: Rc<Vec<String>> = Rc::new(sorted.into_iter().map(|(g, _)| g).collect());
+    let index: Rc<HashMap<String, usize>> = Rc::new(
+        vocab
+            .iter()
+            .enumerate()
+            .map(|(i, g)| (g.clone(), i))
+            .collect(),
+    );
+    let width = vocab.len();
+
+    // pass 2: per-document count vectors
+    let idx = index.clone();
+    let out = table.map(Schema::numeric(width), move |r| {
+        let mut v = vec![0.0f64; width];
+        if let Some(text) = r[text_col].as_str() {
+            for g in doc_ngrams(text, n) {
+                if let Some(&i) = idx.get(&g) {
+                    v[i] += 1.0;
+                }
+            }
+        }
+        MLRow::from_scalars(&v)
+    });
+    Ok(NGramsOutput {
+        table: out.to_numeric()?,
+        vocab,
+    })
+}
+
+fn doc_ngrams(text: &str, n: usize) -> Vec<String> {
+    let toks = tokenize(text);
+    if toks.len() < n {
+        return Vec::new();
+    }
+    (0..=toks.len() - n)
+        .map(|i| toks[i..i + n].join(" "))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineContext;
+    use crate::mltable::text_from_str;
+
+    #[test]
+    fn unigrams_count_correctly() {
+        let ctx = EngineContext::new();
+        let t = text_from_str(&ctx, "a b a\nb b c\n", 2).unwrap();
+        let out = ngrams(&t, 0, 1, 10).unwrap();
+        // corpus freq: b=3, a=2, c=1 -> vocab [b, a, c]
+        assert_eq!(out.vocab.as_slice(), &["b", "a", "c"]);
+        let m = out.table.collect_matrix().unwrap();
+        assert_eq!(m.rows, 2);
+        assert_eq!(m.get(0, 1), 2.0); // doc0 has 2 a's
+        assert_eq!(m.get(1, 0), 2.0); // doc1 has 2 b's
+        assert_eq!(m.get(0, 2), 0.0);
+    }
+
+    #[test]
+    fn bigrams_and_top_cutoff() {
+        let ctx = EngineContext::new();
+        let t = text_from_str(&ctx, "x y x y\nx y z\n", 1).unwrap();
+        let out = ngrams(&t, 0, 2, 2).unwrap();
+        // bigram freq: "x y"=3, "y x"=1, "y z"=1 -> top2 = ["x y", then tie]
+        assert_eq!(out.vocab.len(), 2);
+        assert_eq!(out.vocab[0], "x y");
+        let m = out.table.collect_matrix().unwrap();
+        assert_eq!(m.get(0, 0), 2.0);
+    }
+
+    #[test]
+    fn n_zero_rejected_and_short_docs_ok() {
+        let ctx = EngineContext::new();
+        let t = text_from_str(&ctx, "one\n\n", 1).unwrap();
+        assert!(ngrams(&t, 0, 0, 5).is_err());
+        let out = ngrams(&t, 0, 2, 5).unwrap(); // doc shorter than n
+        assert_eq!(out.vocab.len(), 0);
+    }
+}

@@ -1,0 +1,113 @@
+//! Column standardization: (x - mean) / std per column — the usual
+//! preprocessing before SGD on raw features.
+
+use std::rc::Rc;
+
+use crate::error::Result;
+use crate::mltable::{MLNumericTable, MLRow, Schema};
+
+/// Standardize every column to zero mean, unit variance (columns with
+/// zero variance pass through centered). `skip_cols` columns at the left
+/// (e.g. the label column) are copied unchanged.
+pub fn standard_scale(t: &MLNumericTable, skip_cols: usize) -> Result<MLNumericTable> {
+    let d = t.num_cols();
+    let n = t.num_rows()? as f64;
+
+    // one pass: per-column sum and sum-of-squares
+    let (sums, sqs) = t
+        .dataset()
+        .map_partitions(move |_, rows| {
+            let mut s = vec![0.0f64; d];
+            let mut q = vec![0.0f64; d];
+            for r in rows {
+                for j in 0..d {
+                    let x = r[j].as_scalar().unwrap_or(0.0);
+                    s[j] += x;
+                    q[j] += x * x;
+                }
+            }
+            Ok(vec![(s, q)])
+        })
+        .reduce(|(mut sa, mut qa), (sb, qb)| {
+            for (x, y) in sa.iter_mut().zip(&sb) {
+                *x += y;
+            }
+            for (x, y) in qa.iter_mut().zip(&qb) {
+                *x += y;
+            }
+            (sa, qa)
+        })?
+        .unwrap_or((vec![0.0; d], vec![0.0; d]));
+
+    let mean: Vec<f64> = sums.iter().map(|s| s / n.max(1.0)).collect();
+    let std: Vec<f64> = sqs
+        .iter()
+        .zip(&mean)
+        .map(|(q, m)| ((q / n.max(1.0)) - m * m).max(0.0).sqrt())
+        .collect();
+    let mean = Rc::new(mean);
+    let std = Rc::new(std);
+
+    let table = t.table().map(Schema::numeric(d), move |r| {
+        let out: Vec<f64> = (0..d)
+            .map(|j| {
+                let x = r[j].as_scalar().unwrap_or(0.0);
+                if j < skip_cols {
+                    x
+                } else if std[j] > 1e-12 {
+                    (x - mean[j]) / std[j]
+                } else {
+                    x - mean[j]
+                }
+            })
+            .collect();
+        MLRow::from_scalars(&out)
+    });
+    table.to_numeric()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineContext;
+    use crate::mltable::{MLRow, MLTable, Schema};
+
+    #[test]
+    fn standardizes_columns() {
+        let ctx = EngineContext::new();
+        let rows = vec![
+            MLRow::from_scalars(&[1.0, 10.0]),
+            MLRow::from_scalars(&[1.0, 20.0]),
+            MLRow::from_scalars(&[0.0, 30.0]),
+            MLRow::from_scalars(&[0.0, 40.0]),
+        ];
+        let t = MLTable::from_rows(&ctx, rows, Schema::numeric(2), 2)
+            .unwrap()
+            .to_numeric()
+            .unwrap();
+        let s = standard_scale(&t, 1).unwrap();
+        let m = s.collect_matrix().unwrap();
+        // col0 skipped (labels preserved)
+        assert_eq!(m.get(0, 0), 1.0);
+        assert_eq!(m.get(3, 0), 0.0);
+        // col1 standardized: mean 0, var 1
+        let col: Vec<f64> = (0..4).map(|r| m.get(r, 1)).collect();
+        let mean: f64 = col.iter().sum::<f64>() / 4.0;
+        let var: f64 = col.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / 4.0;
+        assert!(mean.abs() < 1e-12);
+        assert!((var - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn constant_column_centered_not_divided() {
+        let ctx = EngineContext::new();
+        let rows = vec![MLRow::from_scalars(&[5.0]), MLRow::from_scalars(&[5.0])];
+        let t = MLTable::from_rows(&ctx, rows, Schema::numeric(1), 1)
+            .unwrap()
+            .to_numeric()
+            .unwrap();
+        let m = standard_scale(&t, 0).unwrap().collect_matrix().unwrap();
+        assert_eq!(m.get(0, 0), 0.0);
+        assert!(m.get(1, 0).is_finite());
+    }
+}

@@ -1,0 +1,99 @@
+//! tf-idf feature extractor (Fig. A2: `tfIdf(nGrams(...))`).
+//!
+//! Input: a numeric table of per-document term counts (the nGrams
+//! output). Output: same shape, reweighted as
+//! `tf * idf = (count / doc_len) * ln(N / (1 + df))`.
+
+use crate::error::Result;
+use crate::mltable::{MLNumericTable, MLRow, Schema};
+
+/// Compute tf-idf over a count table.
+pub fn tfidf(counts: &MLNumericTable) -> Result<MLNumericTable> {
+    let d = counts.num_cols();
+    let n_docs = counts.num_rows()? as f64;
+
+    // document frequencies per term (one engine pass)
+    let df = counts
+        .dataset()
+        .map_partitions(move |_, rows| {
+            let mut local = vec![0.0f64; d];
+            for r in rows {
+                for (j, slot) in local.iter_mut().enumerate() {
+                    if r[j].as_scalar().unwrap_or(0.0) > 0.0 {
+                        *slot += 1.0;
+                    }
+                }
+            }
+            Ok(vec![local])
+        })
+        .reduce(|mut a, b| {
+            for (x, y) in a.iter_mut().zip(&b) {
+                *x += y;
+            }
+            a
+        })?
+        .unwrap_or_else(|| vec![0.0; d]);
+
+    let idf: std::rc::Rc<Vec<f64>> = std::rc::Rc::new(
+        df.iter().map(|&dfj| (n_docs / (1.0 + dfj)).ln().max(0.0)).collect(),
+    );
+
+    let table = counts.table().map(Schema::numeric(d), move |r| {
+        let mut counts_row = Vec::with_capacity(d);
+        let mut doc_len = 0.0;
+        for j in 0..d {
+            let c = r[j].as_scalar().unwrap_or(0.0);
+            doc_len += c;
+            counts_row.push(c);
+        }
+        let denom = doc_len.max(1.0);
+        let out: Vec<f64> = counts_row
+            .iter()
+            .zip(idf.iter())
+            .map(|(&c, &w)| (c / denom) * w)
+            .collect();
+        MLRow::from_scalars(&out)
+    });
+    table.to_numeric()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineContext;
+    use crate::mltable::{MLRow, MLTable, Schema};
+
+    fn counts_table() -> MLNumericTable {
+        let ctx = EngineContext::new();
+        // 3 docs x 3 terms; term0 in all docs, term1 in one, term2 in none
+        let rows = vec![
+            MLRow::from_scalars(&[2.0, 0.0, 0.0]),
+            MLRow::from_scalars(&[1.0, 3.0, 0.0]),
+            MLRow::from_scalars(&[1.0, 0.0, 0.0]),
+        ];
+        MLTable::from_rows(&ctx, rows, Schema::numeric(3), 2)
+            .unwrap()
+            .to_numeric()
+            .unwrap()
+    }
+
+    #[test]
+    fn idf_downweights_ubiquitous_terms() {
+        let t = tfidf(&counts_table()).unwrap();
+        let m = t.collect_matrix().unwrap();
+        // term0 appears in every doc: idf = ln(3/4) < 0 clamped to 0
+        assert_eq!(m.get(0, 0), 0.0);
+        // term1 appears in 1 doc: idf = ln(3/2) > 0; doc1 tf = 3/4
+        let expect = (3.0 / 4.0) * (3.0f64 / 2.0).ln();
+        assert!((m.get(1, 1) - expect).abs() < 1e-12);
+        // absent term stays 0
+        assert_eq!(m.get(2, 2), 0.0);
+    }
+
+    #[test]
+    fn shape_preserved() {
+        let t = tfidf(&counts_table()).unwrap();
+        assert_eq!(t.num_rows().unwrap(), 3);
+        assert_eq!(t.num_cols(), 3);
+    }
+}

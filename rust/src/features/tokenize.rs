@@ -1,0 +1,41 @@
+//! Tokenization: lowercase, split on non-alphanumeric runs.
+
+/// Split a document into lowercase alphanumeric tokens.
+pub fn tokenize(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for c in text.chars() {
+        if c.is_alphanumeric() {
+            for lc in c.to_lowercase() {
+                cur.push(lc);
+            }
+        } else if !cur.is_empty() {
+            out.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_and_lowercases() {
+        assert_eq!(
+            tokenize("Hello, World! x2"),
+            vec!["hello", "world", "x2"]
+        );
+        assert_eq!(tokenize(""), Vec::<String>::new());
+        assert_eq!(tokenize("  --  "), Vec::<String>::new());
+        assert_eq!(tokenize("a"), vec!["a"]);
+    }
+
+    #[test]
+    fn unicode_safe() {
+        assert_eq!(tokenize("Café au lait"), vec!["café", "au", "lait"]);
+    }
+}

@@ -1,0 +1,201 @@
+//! # MLI: An API for Distributed Machine Learning
+//!
+//! Rust + JAX + Pallas reproduction of *MLI: An API for Distributed Machine
+//! Learning* (Sparks et al., 2013). The crate provides the paper's API
+//! surface — [`mltable::MLTable`], [`localmatrix::LocalMatrix`], and the
+//! [`optim::Optimizer`] / [`algorithms::Algorithm`] / [`algorithms::Model`]
+//! interfaces — on top of an in-process Spark-surrogate dataflow engine
+//! ([`engine`]) scheduled onto a simulated cluster ([`cluster`]) with an
+//! analytic network cost model.
+//!
+//! The numeric hot paths (the paper's `localSGD` and `localALS` inner
+//! loops) execute as AOT-compiled XLA programs: JAX/Pallas kernels are
+//! lowered to HLO text at build time (`make artifacts`) and loaded/run by
+//! [`runtime`] through the PJRT CPU client. Python never runs on the
+//! training path.
+//!
+//! Layout mirrors DESIGN.md §4; every paper table/figure has a bench in
+//! `rust/benches/` (DESIGN.md §5).
+
+pub mod algorithms;
+pub mod baselines;
+pub mod bench_harness;
+pub mod cluster;
+pub mod config;
+pub mod data;
+pub mod engine;
+pub mod error;
+pub mod features;
+pub mod localmatrix;
+pub mod metrics;
+pub mod mltable;
+pub mod optim;
+pub mod runtime;
+pub mod util;
+
+
+pub use error::{Error, Result};
+
+/// Convenience re-exports for application code (`use mli::prelude::*`).
+pub mod prelude {
+    pub use crate::algorithms::{
+        Algorithm, AlsParams, KMeansParams, LinearRegression, LinearSVM,
+        LogisticRegression, Model, ALS, KMeans,
+    };
+    pub use crate::cluster::{CommTopology, SimCluster};
+    pub use crate::engine::EngineContext;
+    pub use crate::error::{Error, Result};
+    pub use crate::features::{ngrams, standard_scale, tfidf};
+    pub use crate::localmatrix::{CsrMatrix, DenseMatrix, LocalMatrix, MLVector};
+    pub use crate::mltable::{
+        csv_from_file, csv_from_str, text_from_file, text_from_str, MLNumericTable, MLRow,
+        MLTable, Schema, Value,
+    };
+    pub use crate::optim::{GdParams, Reg, SgdParams};
+    pub use crate::runtime::{Runtime, Tensor};
+}
+
+/// CLI entry point shared by `rust/src/main.rs` (kept here so integration
+/// tests can drive the launcher without spawning a process).
+pub fn run_cli(args: util::cli::Args) -> Result<()> {
+    use algorithms::logreg::Backend;
+    use bench_harness::{
+        als_scaling, logreg_scaling, AlsBenchConfig, LogregBenchConfig, ScalingMode,
+    };
+
+    // optional config file + --section.key overrides
+    let cfg = match args.get("config") {
+        Some(path) => config::Config::from_file(path)?.with_overrides(&args),
+        None => config::Config::empty().with_overrides(&args),
+    };
+
+    match args.subcommand.as_deref() {
+        Some("selftest") => {
+            // Smoke-check the AOT runtime: compile + run one small artifact.
+            let rt = runtime::Runtime::new(runtime::Runtime::artifact_dir())?;
+            let n = 256;
+            let d = 64;
+            let x = runtime::Tensor::F32(vec![0.0; n * d], vec![n, d]);
+            let y = runtime::Tensor::F32(vec![0.0; n], vec![n]);
+            let w = runtime::Tensor::F32(vec![0.0; d], vec![d]);
+            let lr = runtime::Tensor::Scalar(0.1);
+            let out = rt.execute("local_sgd_epoch", "small", &[x, y, w, lr])?;
+            println!(
+                "selftest OK: local_sgd_epoch(small) -> {} outputs, first len {}",
+                out.len(),
+                out[0].len()
+            );
+            Ok(())
+        }
+        Some("train") => {
+            // mli train --algo logreg|als --machines M --iters N [--xla false]
+            let machines = args.get_usize("machines", 4)?;
+            let iters = args.get_usize("iters", 10)?;
+            let use_xla = !args.has_flag("no-xla");
+            match args.get_str("algo", "logreg").as_str() {
+                "logreg" => {
+                    let ctx = engine::EngineContext::new();
+                    let n = args.get_usize("n", 2048)?;
+                    let d = args.get_usize("d", 64)?;
+                    let data = data::dense_gen::generate(&ctx, n, d, machines, 1)?;
+                    let cluster = cluster::SimCluster::ec2(machines);
+                    let algo = algorithms::LogisticRegression::new(
+                        algorithms::logreg::LogRegParams {
+                            sgd: optim::SgdParams {
+                                iters,
+                                learning_rate: args.get_f64("lr", 0.02)?,
+                                track_loss: true,
+                                ..Default::default()
+                            },
+                            backend: if use_xla { Backend::Xla } else { Backend::Rust },
+                        },
+                    );
+                    use algorithms::Algorithm;
+                    let model = algo.train(&data.table, &cluster)?;
+                    println!("loss history: {:?}", model.loss_history);
+                    println!("sim walltime: {:.3}s", model.sim_seconds);
+                }
+                "als" => {
+                    let data = data::netflix::generate(&data::netflix::NetflixConfig {
+                        users: args.get_usize("users", 512)?,
+                        items: args.get_usize("items", 96)?,
+                        ..Default::default()
+                    });
+                    let cluster = cluster::SimCluster::ec2(machines);
+                    let model = algorithms::ALS::new(algorithms::AlsParams {
+                        rank: args.get_usize("rank", 10)?,
+                        iters,
+                        lambda: args.get_f64("lambda", 0.01)?,
+                        use_xla,
+                        track_rmse: true,
+                        ..Default::default()
+                    })
+                    .train_ratings(&data, &cluster)?;
+                    println!("rmse history: {:?}", model.rmse_history);
+                    println!("sim walltime: {:.3}s", cluster.total_sim_seconds());
+                }
+                other => return Err(Error::Config(format!("unknown --algo '{other}'"))),
+            }
+            Ok(())
+        }
+        Some("bench") => {
+            // mli bench --figure fig2|figA5|fig3|figA7 [--machines 1,2,4]
+            let machines = args.get_usize_list("machines", &[1, 2, 4])?;
+            let iters = cfg.get_usize("bench", "iters", 5)?;
+            match args.get_str("figure", "fig2").as_str() {
+                "fig2" | "figA5" => {
+                    let mode = if args.get_str("figure", "fig2") == "fig2" {
+                        ScalingMode::Weak
+                    } else {
+                        ScalingMode::Strong
+                    };
+                    let c = LogregBenchConfig {
+                        machines,
+                        rows: args.get_usize("rows", 512)?,
+                        d: args.get_usize("d", 64)?,
+                        iters,
+                        backend: Backend::Xla,
+                        seed: 42,
+                        reps: 1,
+                    };
+                    println!("{}", logreg_scaling(&c, mode)?.to_markdown());
+                }
+                "fig3" | "figA7" => {
+                    let mode = if args.get_str("figure", "fig3") == "fig3" {
+                        ScalingMode::Weak
+                    } else {
+                        ScalingMode::Strong
+                    };
+                    let c = AlsBenchConfig {
+                        machines,
+                        iters,
+                        ..Default::default()
+                    };
+                    println!("{}", als_scaling(&c, mode)?.to_markdown());
+                }
+                other => return Err(Error::Config(format!("unknown --figure '{other}'"))),
+            }
+            Ok(())
+        }
+        Some("loc") => {
+            println!("{}", bench_harness::loc::fig2a().to_markdown());
+            println!("{}", bench_harness::loc::fig3a().to_markdown());
+            Ok(())
+        }
+        Some("help") | None => {
+            println!("mli — MLI: An API for Distributed Machine Learning (reproduction)");
+            println!();
+            println!("USAGE: mli <subcommand> [--options] [--config file.toml]");
+            println!();
+            println!("  selftest                              compile+run one AOT artifact");
+            println!("  train --algo logreg|als --machines M  train on the simulated cluster");
+            println!("  bench --figure fig2|figA5|fig3|figA7  regenerate a paper figure (CLI scale)");
+            println!("  loc                                   Fig 2a/3a lines-of-code tables");
+            println!("  help                                  this message");
+            println!();
+            println!("full-scale figures: `cargo bench` (see rust/benches/)");
+            Ok(())
+        }
+        Some(other) => Err(Error::Config(format!("unknown subcommand '{other}'"))),
+    }
+}

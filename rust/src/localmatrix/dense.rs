@@ -1,0 +1,247 @@
+//! Row-major dense f64 matrix — the workhorse storage behind
+//! [`super::LocalMatrix`].
+
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct DenseMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    pub fn new(rows: usize, cols: usize, data: Vec<f64>) -> Result<DenseMatrix> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "dense: data len {} != {rows}x{cols}",
+                data.len()
+            )));
+        }
+        Ok(DenseMatrix { rows, cols, data })
+    }
+
+    pub fn zeros(rows: usize, cols: usize) -> DenseMatrix {
+        DenseMatrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> DenseMatrix {
+        let mut m = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Uniform [0,1) entries (Fig. A9 `LocalMatrix.rand(m, k)`).
+    pub fn rand(rows: usize, cols: usize, rng: &mut Rng) -> DenseMatrix {
+        DenseMatrix {
+            rows,
+            cols,
+            data: (0..rows * cols).map(|_| rng.f64()).collect(),
+        }
+    }
+
+    /// Standard-normal entries.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> DenseMatrix {
+        DenseMatrix {
+            rows,
+            cols,
+            data: (0..rows * cols).map(|_| rng.normal()).collect(),
+        }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Result<DenseMatrix> {
+        let r = rows.len();
+        let c = rows.first().map(|v| v.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(r * c);
+        for (i, row) in rows.iter().enumerate() {
+            if row.len() != c {
+                return Err(Error::Shape(format!(
+                    "from_rows: row {i} has {} cols, expected {c}",
+                    row.len()
+                )));
+            }
+            data.extend_from_slice(row);
+        }
+        DenseMatrix::new(r, c, data)
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> DenseMatrix {
+        let mut out = DenseMatrix::zeros(self.cols, self.rows);
+        // blocked transpose for cache friendliness on big matrices
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        out.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix multiply with ikj loop order (row-major friendly).
+    pub fn matmul(&self, other: &DenseMatrix) -> Result<DenseMatrix> {
+        if self.cols != other.rows {
+            return Err(Error::Shape(format!(
+                "matmul: {}x{} * {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let mut out = DenseMatrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            let orow = &mut out.data[i * other.cols..(i + 1) * other.cols];
+            for (k, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[k * other.cols..(k + 1) * other.cols];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += aik * b;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, v: &[f64]) -> Result<Vec<f64>> {
+        if v.len() != self.cols {
+            return Err(Error::Shape(format!(
+                "matvec: {}x{} * {}",
+                self.rows,
+                self.cols,
+                v.len()
+            )));
+        }
+        Ok((0..self.rows)
+            .map(|r| self.row(r).iter().zip(v).map(|(a, b)| a * b).sum())
+            .collect())
+    }
+
+    /// Elementwise map.
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> DenseMatrix {
+        DenseMatrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Elementwise combine (checked).
+    pub fn zip(&self, other: &DenseMatrix, f: impl Fn(f64, f64) -> f64) -> Result<DenseMatrix> {
+        if self.rows != other.rows || self.cols != other.cols {
+            return Err(Error::Shape(format!(
+                "zip: {}x{} vs {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        Ok(DenseMatrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        })
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |m, &x| m.max(x.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = DenseMatrix::new(2, 2, vec![1., 2., 3., 4.]).unwrap();
+        let b = DenseMatrix::new(2, 2, vec![5., 6., 7., 8.]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data, vec![19., 22., 43., 50.]);
+        assert!(a.matmul(&DenseMatrix::zeros(3, 3)).is_err());
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(0);
+        let a = DenseMatrix::rand(4, 6, &mut rng);
+        let i6 = DenseMatrix::eye(6);
+        assert_eq!(a.matmul(&i6).unwrap(), a);
+    }
+
+    #[test]
+    fn transpose_blocked_correct() {
+        let mut rng = Rng::new(1);
+        let a = DenseMatrix::rand(70, 45, &mut rng);
+        let t = a.transpose();
+        for r in 0..70 {
+            for c in 0..45 {
+                assert_eq!(a.get(r, c), t.get(c, r));
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(2);
+        let a = DenseMatrix::rand(5, 3, &mut rng);
+        let v = vec![1.0, -2.0, 0.5];
+        let got = a.matvec(&v).unwrap();
+        let vm = DenseMatrix::new(3, 1, v.clone()).unwrap();
+        let want = a.matmul(&vm).unwrap();
+        for r in 0..5 {
+            assert!((got[r] - want.get(r, 0)).abs() < 1e-12);
+        }
+        assert!(a.matvec(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn map_zip() {
+        let a = DenseMatrix::new(1, 3, vec![1., -2., 3.]).unwrap();
+        assert_eq!(a.map(f64::abs).data, vec![1., 2., 3.]);
+        let b = DenseMatrix::new(1, 3, vec![1., 1., 1.]).unwrap();
+        assert_eq!(a.zip(&b, |x, y| x + y).unwrap().data, vec![2., -1., 4.]);
+        assert!(a.zip(&DenseMatrix::zeros(2, 2), |x, _| x).is_err());
+        assert_eq!(a.max_abs(), 3.0);
+    }
+
+    #[test]
+    fn from_rows_validates() {
+        assert!(DenseMatrix::from_rows(vec![vec![1., 2.], vec![3.]]).is_err());
+        let m = DenseMatrix::from_rows(vec![vec![1., 2.], vec![3., 4.]]).unwrap();
+        assert_eq!(m.get(1, 0), 3.0);
+    }
+}

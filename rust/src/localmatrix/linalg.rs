@@ -1,0 +1,583 @@
+//! Dense linear algebra for LocalMatrix (Fig. A3 "Linear Algebra" family):
+//! LU solve, inverse, Cholesky, QR, one-sided-Jacobi SVD, symmetric Jacobi
+//! eigendecomposition, and numerical rank. No LAPACK in this sandbox —
+//! everything is implemented here (and cross-checked by property tests in
+//! `rust/tests/proptests.rs`).
+
+use super::dense::DenseMatrix;
+use crate::error::{Error, Result};
+
+/// LU decomposition with partial pivoting. Returns (LU-packed, perm, sign).
+pub fn lu(a: &DenseMatrix) -> Result<(DenseMatrix, Vec<usize>, f64)> {
+    if a.rows != a.cols {
+        return Err(Error::Shape(format!("lu: non-square {}x{}", a.rows, a.cols)));
+    }
+    let n = a.rows;
+    let mut lu = a.clone();
+    let mut perm: Vec<usize> = (0..n).collect();
+    let mut sign = 1.0;
+    for k in 0..n {
+        // pivot: max |a[i][k]| for i >= k
+        let mut p = k;
+        let mut pmax = lu.get(k, k).abs();
+        for i in k + 1..n {
+            let v = lu.get(i, k).abs();
+            if v > pmax {
+                pmax = v;
+                p = i;
+            }
+        }
+        if pmax < 1e-300 {
+            return Err(Error::Numerical(format!("lu: singular at pivot {k}")));
+        }
+        if p != k {
+            for c in 0..n {
+                let t = lu.get(k, c);
+                lu.set(k, c, lu.get(p, c));
+                lu.set(p, c, t);
+            }
+            perm.swap(k, p);
+            sign = -sign;
+        }
+        let pivot = lu.get(k, k);
+        for i in k + 1..n {
+            let m = lu.get(i, k) / pivot;
+            lu.set(i, k, m);
+            if m != 0.0 {
+                for c in k + 1..n {
+                    let v = lu.get(i, c) - m * lu.get(k, c);
+                    lu.set(i, c, v);
+                }
+            }
+        }
+    }
+    Ok((lu, perm, sign))
+}
+
+/// Solve A X = B via LU with partial pivoting. B may have many columns.
+pub fn solve(a: &DenseMatrix, b: &DenseMatrix) -> Result<DenseMatrix> {
+    if a.rows != b.rows {
+        return Err(Error::Shape(format!(
+            "solve: A is {}x{}, B has {} rows",
+            a.rows, a.cols, b.rows
+        )));
+    }
+    let (lu_m, perm, _) = lu(a)?;
+    let n = a.rows;
+    let m = b.cols;
+    let mut x = DenseMatrix::zeros(n, m);
+    // apply permutation to B
+    for (i, &pi) in perm.iter().enumerate() {
+        for c in 0..m {
+            x.set(i, c, b.get(pi, c));
+        }
+    }
+    // forward substitution (L has unit diagonal)
+    for i in 0..n {
+        for k in 0..i {
+            let l = lu_m.get(i, k);
+            if l != 0.0 {
+                for c in 0..m {
+                    let v = x.get(i, c) - l * x.get(k, c);
+                    x.set(i, c, v);
+                }
+            }
+        }
+    }
+    // back substitution
+    for i in (0..n).rev() {
+        for k in i + 1..n {
+            let u = lu_m.get(i, k);
+            if u != 0.0 {
+                for c in 0..m {
+                    let v = x.get(i, c) - u * x.get(k, c);
+                    x.set(i, c, v);
+                }
+            }
+        }
+        let d = lu_m.get(i, i);
+        for c in 0..m {
+            x.set(i, c, x.get(i, c) / d);
+        }
+    }
+    Ok(x)
+}
+
+/// Matrix inverse via LU solve against the identity.
+pub fn inverse(a: &DenseMatrix) -> Result<DenseMatrix> {
+    solve(a, &DenseMatrix::eye(a.rows))
+}
+
+/// Determinant via LU.
+pub fn det(a: &DenseMatrix) -> Result<f64> {
+    match lu(a) {
+        Ok((lu_m, _, sign)) => {
+            let mut d = sign;
+            for i in 0..a.rows {
+                d *= lu_m.get(i, i);
+            }
+            Ok(d)
+        }
+        Err(Error::Numerical(_)) => Ok(0.0), // singular => det 0
+        Err(e) => Err(e),
+    }
+}
+
+/// Cholesky factorization A = L L^T for SPD A (lower triangular L).
+pub fn cholesky(a: &DenseMatrix) -> Result<DenseMatrix> {
+    if a.rows != a.cols {
+        return Err(Error::Shape("cholesky: non-square".into()));
+    }
+    let n = a.rows;
+    let mut l = DenseMatrix::zeros(n, n);
+    for j in 0..n {
+        let mut s = a.get(j, j);
+        for p in 0..j {
+            s -= l.get(j, p) * l.get(j, p);
+        }
+        if s <= 0.0 {
+            return Err(Error::Numerical(format!(
+                "cholesky: matrix not positive definite at column {j}"
+            )));
+        }
+        let d = s.sqrt();
+        l.set(j, j, d);
+        for i in j + 1..n {
+            let mut s = a.get(i, j);
+            for p in 0..j {
+                s -= l.get(i, p) * l.get(j, p);
+            }
+            l.set(i, j, s / d);
+        }
+    }
+    Ok(l)
+}
+
+/// Solve SPD system via Cholesky (the ALS normal-equation path when run
+/// CPU-side; the XLA artifact uses the same algorithm, see
+/// python/compile/model.py::spd_solve).
+pub fn spd_solve(a: &DenseMatrix, b: &[f64]) -> Result<Vec<f64>> {
+    let l = cholesky(a)?;
+    let n = a.rows;
+    if b.len() != n {
+        return Err(Error::Shape("spd_solve: rhs length".into()));
+    }
+    // forward: L z = b
+    let mut z = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for p in 0..i {
+            s -= l.get(i, p) * z[p];
+        }
+        z[i] = s / l.get(i, i);
+    }
+    // backward: L^T x = z
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = z[i];
+        for p in i + 1..n {
+            s -= l.get(p, i) * x[p];
+        }
+        x[i] = s / l.get(i, i);
+    }
+    Ok(x)
+}
+
+/// Householder QR: returns (Q, R) with Q m x n orthonormal columns
+/// (thin QR), R n x n upper triangular, for m >= n.
+pub fn qr(a: &DenseMatrix) -> Result<(DenseMatrix, DenseMatrix)> {
+    let (m, n) = (a.rows, a.cols);
+    if m < n {
+        return Err(Error::Shape("qr: requires rows >= cols".into()));
+    }
+    let mut r = a.clone();
+    // accumulate Q as product of Householder reflectors applied to I
+    let mut qt = DenseMatrix::eye(m); // Q^T, m x m
+    for k in 0..n {
+        // Householder vector for column k
+        let mut norm = 0.0;
+        for i in k..m {
+            norm += r.get(i, k) * r.get(i, k);
+        }
+        let norm = norm.sqrt();
+        if norm < 1e-300 {
+            continue;
+        }
+        let alpha = if r.get(k, k) >= 0.0 { -norm } else { norm };
+        let mut v = vec![0.0; m];
+        for i in k..m {
+            v[i] = r.get(i, k);
+        }
+        v[k] -= alpha;
+        let vnorm2: f64 = v[k..].iter().map(|x| x * x).sum();
+        if vnorm2 < 1e-300 {
+            continue;
+        }
+        // apply H = I - 2 v v^T / (v^T v) to R (cols k..) and Q^T (all cols)
+        for c in k..n {
+            let dot: f64 = (k..m).map(|i| v[i] * r.get(i, c)).sum();
+            let f = 2.0 * dot / vnorm2;
+            for i in k..m {
+                let val = r.get(i, c) - f * v[i];
+                r.set(i, c, val);
+            }
+        }
+        for c in 0..m {
+            let dot: f64 = (k..m).map(|i| v[i] * qt.get(i, c)).sum();
+            let f = 2.0 * dot / vnorm2;
+            for i in k..m {
+                let val = qt.get(i, c) - f * v[i];
+                qt.set(i, c, val);
+            }
+        }
+    }
+    // thin Q: first n rows of Q^T transposed
+    let mut q = DenseMatrix::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            q.set(i, j, qt.get(j, i));
+        }
+    }
+    let mut r_thin = DenseMatrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r_thin.set(i, j, r.get(i, j));
+        }
+    }
+    Ok((q, r_thin))
+}
+
+/// One-sided Jacobi SVD: A = U diag(S) V^T for m >= n (tall); wide inputs
+/// are transposed internally. Returns (U m x n, S n, V^T n x n) with
+/// singular values sorted descending.
+pub fn svd(a: &DenseMatrix) -> Result<(DenseMatrix, Vec<f64>, DenseMatrix)> {
+    if a.rows < a.cols {
+        // A^T = U' S V'^T  =>  A = V' S U'^T
+        let (u2, s, vt2) = svd(&a.transpose())?;
+        // A = (V'^T)^T s u2^T ; U = vt2^T, V^T = u2^T
+        return Ok((vt2.transpose(), s, u2.transpose()));
+    }
+    let (m, n) = (a.rows, a.cols);
+    // work on columns of U = A (copied), accumulate V
+    let mut u = a.clone();
+    let mut v = DenseMatrix::eye(n);
+    let max_sweeps = 60;
+    let eps = 1e-12;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in p + 1..n {
+                // compute [app apq; apq aqq] of U^T U
+                let mut app = 0.0;
+                let mut aqq = 0.0;
+                let mut apq = 0.0;
+                for i in 0..m {
+                    let up = u.get(i, p);
+                    let uq = u.get(i, q);
+                    app += up * up;
+                    aqq += uq * uq;
+                    apq += up * uq;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt().max(1e-300) {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let up = u.get(i, p);
+                    let uq = u.get(i, q);
+                    u.set(i, p, c * up - s * uq);
+                    u.set(i, q, s * up + c * uq);
+                }
+                for i in 0..n {
+                    let vp = v.get(i, p);
+                    let vq = v.get(i, q);
+                    v.set(i, p, c * vp - s * vq);
+                    v.set(i, q, s * vp + c * vq);
+                }
+            }
+        }
+        if off < 1e-15 {
+            break;
+        }
+    }
+    // singular values = column norms of U; normalize columns
+    let mut sv: Vec<(f64, usize)> = (0..n)
+        .map(|j| {
+            let norm: f64 = (0..m).map(|i| u.get(i, j).powi(2)).sum::<f64>().sqrt();
+            (norm, j)
+        })
+        .collect();
+    sv.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut u_out = DenseMatrix::zeros(m, n);
+    let mut vt_out = DenseMatrix::zeros(n, n);
+    let mut s_out = Vec::with_capacity(n);
+    for (newj, &(norm, oldj)) in sv.iter().enumerate() {
+        s_out.push(norm);
+        if norm > 1e-300 {
+            for i in 0..m {
+                u_out.set(i, newj, u.get(i, oldj) / norm);
+            }
+        }
+        for i in 0..n {
+            vt_out.set(newj, i, v.get(i, oldj));
+        }
+    }
+    Ok((u_out, s_out, vt_out))
+}
+
+/// Symmetric eigendecomposition via classical Jacobi. Returns
+/// (eigenvalues desc, eigenvectors as columns).
+pub fn eigen_sym(a: &DenseMatrix) -> Result<(Vec<f64>, DenseMatrix)> {
+    if a.rows != a.cols {
+        return Err(Error::Shape("eigen: non-square".into()));
+    }
+    let n = a.rows;
+    // symmetry check (tolerant)
+    for i in 0..n {
+        for j in i + 1..n {
+            if (a.get(i, j) - a.get(j, i)).abs() > 1e-8 * a.max_abs().max(1.0) {
+                return Err(Error::Numerical("eigen: matrix not symmetric".into()));
+            }
+        }
+    }
+    let mut d = a.clone();
+    let mut v = DenseMatrix::eye(n);
+    for _sweep in 0..100 {
+        let mut off = 0.0;
+        for p in 0..n {
+            for q in p + 1..n {
+                off += d.get(p, q).abs();
+            }
+        }
+        if off < 1e-13 {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = d.get(p, q);
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = d.get(p, p);
+                let aqq = d.get(q, q);
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                // rotate rows/cols p, q of d
+                for i in 0..n {
+                    let dip = d.get(i, p);
+                    let diq = d.get(i, q);
+                    d.set(i, p, c * dip - s * diq);
+                    d.set(i, q, s * dip + c * diq);
+                }
+                for i in 0..n {
+                    let dpi = d.get(p, i);
+                    let dqi = d.get(q, i);
+                    d.set(p, i, c * dpi - s * dqi);
+                    d.set(q, i, s * dpi + c * dqi);
+                }
+                for i in 0..n {
+                    let vip = v.get(i, p);
+                    let viq = v.get(i, q);
+                    v.set(i, p, c * vip - s * viq);
+                    v.set(i, q, s * vip + c * viq);
+                }
+            }
+        }
+    }
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (d.get(i, i), i)).collect();
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let vals: Vec<f64> = pairs.iter().map(|&(v, _)| v).collect();
+    let mut vecs = DenseMatrix::zeros(n, n);
+    for (newj, &(_, oldj)) in pairs.iter().enumerate() {
+        for i in 0..n {
+            vecs.set(i, newj, v.get(i, oldj));
+        }
+    }
+    Ok((vals, vecs))
+}
+
+/// Numerical rank: singular values above MATLAB's default tolerance
+/// `max(m,n) * eps * s_max`.
+pub fn rank(a: &DenseMatrix) -> Result<usize> {
+    let (_, s, _) = svd(a)?;
+    let smax = s.first().copied().unwrap_or(0.0);
+    if smax == 0.0 {
+        return Ok(0);
+    }
+    let tol = a.rows.max(a.cols) as f64 * f64::EPSILON * smax;
+    Ok(s.iter().filter(|&&x| x > tol).count())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn assert_close(a: &DenseMatrix, b: &DenseMatrix, tol: f64) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        for i in 0..a.data.len() {
+            assert!(
+                (a.data[i] - b.data[i]).abs() < tol,
+                "entry {i}: {} vs {}",
+                a.data[i],
+                b.data[i]
+            );
+        }
+    }
+
+    #[test]
+    fn solve_known_system() {
+        let a = DenseMatrix::new(2, 2, vec![2., 1., 1., 3.]).unwrap();
+        let b = DenseMatrix::new(2, 1, vec![5., 10.]).unwrap();
+        let x = solve(&a, &b).unwrap();
+        assert!((x.get(0, 0) - 1.0).abs() < 1e-12);
+        assert!((x.get(1, 0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_random_roundtrip() {
+        let mut rng = Rng::new(0);
+        for n in [1, 2, 5, 12] {
+            let a = DenseMatrix::randn(n, n, &mut rng);
+            let x = DenseMatrix::randn(n, 3, &mut rng);
+            let b = a.matmul(&x).unwrap();
+            let x2 = solve(&a, &b).unwrap();
+            assert_close(&x, &x2, 1e-7);
+        }
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a = DenseMatrix::new(2, 2, vec![1., 2., 2., 4.]).unwrap();
+        let b = DenseMatrix::new(2, 1, vec![1., 2.]).unwrap();
+        assert!(solve(&a, &b).is_err());
+        assert_eq!(det(&a).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn inverse_identity() {
+        let mut rng = Rng::new(1);
+        let a = DenseMatrix::randn(6, 6, &mut rng);
+        let ainv = inverse(&a).unwrap();
+        let prod = a.matmul(&ainv).unwrap();
+        assert_close(&prod, &DenseMatrix::eye(6), 1e-8);
+    }
+
+    #[test]
+    fn det_of_triangular() {
+        let a = DenseMatrix::new(3, 3, vec![2., 5., 7., 0., 3., 9., 0., 0., 4.]).unwrap();
+        assert!((det(&a).unwrap() - 24.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cholesky_and_spd_solve() {
+        let mut rng = Rng::new(2);
+        let g = DenseMatrix::randn(8, 5, &mut rng);
+        let a = g.transpose().matmul(&g).unwrap(); // SPD (5x5)
+        let a = a.zip(&DenseMatrix::eye(5), |x, e| x + 0.1 * e).unwrap();
+        let l = cholesky(&a).unwrap();
+        let llt = l.matmul(&l.transpose()).unwrap();
+        assert_close(&llt, &a, 1e-9);
+
+        let b: Vec<f64> = (0..5).map(|i| i as f64).collect();
+        let x = spd_solve(&a, &b).unwrap();
+        let ax = a.matvec(&x).unwrap();
+        for i in 0..5 {
+            assert!((ax[i] - b[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = DenseMatrix::new(2, 2, vec![1., 2., 2., 1.]).unwrap(); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn qr_orthonormal_and_reconstructs() {
+        let mut rng = Rng::new(3);
+        let a = DenseMatrix::randn(8, 4, &mut rng);
+        let (q, r) = qr(&a).unwrap();
+        // Q^T Q = I
+        let qtq = q.transpose().matmul(&q).unwrap();
+        assert_close(&qtq, &DenseMatrix::eye(4), 1e-9);
+        // QR = A
+        assert_close(&q.matmul(&r).unwrap(), &a, 1e-9);
+        // R upper triangular
+        for i in 0..4 {
+            for j in 0..i {
+                assert!(r.get(i, j).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn svd_reconstructs_tall_and_wide() {
+        let mut rng = Rng::new(4);
+        for (m, n) in [(6, 3), (3, 6), (5, 5)] {
+            let a = DenseMatrix::randn(m, n, &mut rng);
+            let (u, s, vt) = svd(&a).unwrap();
+            let k = m.min(n);
+            assert_eq!(s.len(), k);
+            // descending
+            for i in 1..k {
+                assert!(s[i] <= s[i - 1] + 1e-12);
+            }
+            // U diag(S) V^T == A
+            let mut us = u.clone();
+            for j in 0..k {
+                for i in 0..us.rows {
+                    let v = us.get(i, j) * s[j];
+                    us.set(i, j, v);
+                }
+            }
+            let rec = us.matmul(&vt).unwrap();
+            assert_close(&rec, &a, 1e-8);
+            // singular values match sqrt eigenvalues of A^T A (frobenius check)
+            let frob2: f64 = a.data.iter().map(|x| x * x).sum();
+            let s2: f64 = s.iter().map(|x| x * x).sum();
+            assert!((frob2 - s2).abs() < 1e-8 * frob2.max(1.0));
+        }
+    }
+
+    #[test]
+    fn eigen_sym_reconstructs() {
+        let mut rng = Rng::new(5);
+        let g = DenseMatrix::randn(6, 6, &mut rng);
+        let a = g
+            .transpose()
+            .matmul(&g)
+            .unwrap()
+            .map(|x| x / 6.0);
+        let (vals, vecs) = eigen_sym(&a).unwrap();
+        // A v_i = lambda_i v_i
+        for j in 0..6 {
+            let vj: Vec<f64> = (0..6).map(|i| vecs.get(i, j)).collect();
+            let av = a.matvec(&vj).unwrap();
+            for i in 0..6 {
+                assert!((av[i] - vals[j] * vj[i]).abs() < 1e-8);
+            }
+        }
+        // PSD: all eigenvalues >= 0
+        assert!(vals.iter().all(|&l| l > -1e-10));
+        assert!(eigen_sym(&DenseMatrix::new(2, 2, vec![1., 5., 0., 1.]).unwrap()).is_err());
+    }
+
+    #[test]
+    fn rank_detects_deficiency() {
+        let mut rng = Rng::new(6);
+        let b1 = DenseMatrix::randn(5, 2, &mut rng);
+        let b2 = DenseMatrix::randn(2, 5, &mut rng);
+        let a = b1.matmul(&b2).unwrap(); // rank 2
+        assert_eq!(rank(&a).unwrap(), 2);
+        assert_eq!(rank(&DenseMatrix::eye(4)).unwrap(), 4);
+        assert_eq!(rank(&DenseMatrix::zeros(3, 3)).unwrap(), 0);
+    }
+}

@@ -1,0 +1,418 @@
+//! LocalMatrix — MATLAB-style linear algebra on *partitions* of data
+//! (paper §III-B, API in Fig. A3).
+//!
+//! Deliberately local: all operations run on one partition's data; global
+//! combination happens through explicit MLTable reduces, so developers can
+//! reason about communication (the paper's "shared nothing" principle).
+//!
+//! Two storage formats, unified behind [`LocalMatrix`]:
+//! * [`DenseMatrix`] — row-major `f64` (MATLAB-like semantics),
+//! * [`CsrMatrix`] — compressed sparse rows, used by ALS for ratings
+//!   (paper §IV-B: "support for CSR-compressed sparse representations").
+//!
+//! Linear algebra (solve / inverse / svd / eigen / rank / cholesky / qr)
+//! lives in [`linalg`] and operates on dense matrices; `LocalMatrix`
+//! forwards after densifying sparse inputs (documented trade-off: the
+//! paper's LocalMatrix does the same — factor solves are dense at rank k).
+
+pub mod dense;
+pub mod linalg;
+pub mod ops;
+pub mod sparse;
+pub mod vector;
+
+pub use dense::DenseMatrix;
+pub use sparse::CsrMatrix;
+pub use vector::MLVector;
+
+use crate::error::{Error, Result};
+
+/// A partition-local matrix: dense or CSR-sparse.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LocalMatrix {
+    Dense(DenseMatrix),
+    Sparse(CsrMatrix),
+}
+
+impl LocalMatrix {
+    // -- constructors --------------------------------------------------
+
+    pub fn dense(rows: usize, cols: usize, data: Vec<f64>) -> Result<LocalMatrix> {
+        Ok(LocalMatrix::Dense(DenseMatrix::new(rows, cols, data)?))
+    }
+
+    pub fn zeros(rows: usize, cols: usize) -> LocalMatrix {
+        LocalMatrix::Dense(DenseMatrix::zeros(rows, cols))
+    }
+
+    pub fn eye(n: usize) -> LocalMatrix {
+        LocalMatrix::Dense(DenseMatrix::eye(n))
+    }
+
+    pub fn rand(rows: usize, cols: usize, rng: &mut crate::util::rng::Rng) -> LocalMatrix {
+        LocalMatrix::Dense(DenseMatrix::rand(rows, cols, rng))
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Result<LocalMatrix> {
+        Ok(LocalMatrix::Dense(DenseMatrix::from_rows(rows)?))
+    }
+
+    // -- shape (Fig. A3 "Shape" family) ------------------------------
+
+    pub fn num_rows(&self) -> usize {
+        match self {
+            LocalMatrix::Dense(m) => m.rows,
+            LocalMatrix::Sparse(m) => m.rows,
+        }
+    }
+
+    pub fn num_cols(&self) -> usize {
+        match self {
+            LocalMatrix::Dense(m) => m.cols,
+            LocalMatrix::Sparse(m) => m.cols,
+        }
+    }
+
+    pub fn dims(&self) -> (usize, usize) {
+        (self.num_rows(), self.num_cols())
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, LocalMatrix::Sparse(_))
+    }
+
+    /// Number of stored non-zeros (dense counts actual non-zero values).
+    pub fn nnz(&self) -> usize {
+        match self {
+            LocalMatrix::Dense(m) => m.data.iter().filter(|&&x| x != 0.0).count(),
+            LocalMatrix::Sparse(m) => m.nnz(),
+        }
+    }
+
+    // -- element access (Fig. A3 "Indexing") -------------------------
+
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        match self {
+            LocalMatrix::Dense(m) => m.get(r, c),
+            LocalMatrix::Sparse(m) => m.get(r, c),
+        }
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, v: f64) -> Result<()> {
+        match self {
+            LocalMatrix::Dense(m) => {
+                m.set(r, c, v);
+                Ok(())
+            }
+            LocalMatrix::Sparse(_) => Err(Error::Shape(
+                "in-place update on CSR matrix unsupported; densify first".into(),
+            )),
+        }
+    }
+
+    /// Row as a vector.
+    pub fn row(&self, r: usize) -> MLVector {
+        match self {
+            LocalMatrix::Dense(m) => MLVector::new(m.row(r).to_vec()),
+            LocalMatrix::Sparse(m) => {
+                let mut out = vec![0.0; m.cols];
+                for (c, v) in m.row_iter(r) {
+                    out[c] = v;
+                }
+                MLVector::new(out)
+            }
+        }
+    }
+
+    pub fn col(&self, c: usize) -> MLVector {
+        let mut out = Vec::with_capacity(self.num_rows());
+        for r in 0..self.num_rows() {
+            out.push(self.get(r, c));
+        }
+        MLVector::new(out)
+    }
+
+    /// Sub-matrix by row and column index sequences (Fig. A3
+    /// `mat(Seq(2,4), 1)` style indexing).
+    pub fn select(&self, rows: &[usize], cols: &[usize]) -> Result<LocalMatrix> {
+        let mut data = Vec::with_capacity(rows.len() * cols.len());
+        for &r in rows {
+            if r >= self.num_rows() {
+                return Err(Error::Shape(format!("row {r} out of bounds")));
+            }
+            for &c in cols {
+                if c >= self.num_cols() {
+                    return Err(Error::Shape(format!("col {c} out of bounds")));
+                }
+                data.push(self.get(r, c));
+            }
+        }
+        LocalMatrix::dense(rows.len(), cols.len(), data)
+    }
+
+    /// Select whole rows (Fig. A9 `Y.getRows(...)`).
+    pub fn get_rows(&self, rows: &[usize]) -> Result<LocalMatrix> {
+        let cols: Vec<usize> = (0..self.num_cols()).collect();
+        self.select(rows, &cols)
+    }
+
+    /// Indices of non-zero entries of a row (Fig. A3 "Reverse Indexing",
+    /// used heavily by ALS: `tuple.nonZeroIndices`).
+    pub fn non_zero_indices(&self, row: usize) -> Vec<usize> {
+        match self {
+            LocalMatrix::Dense(m) => m
+                .row(row)
+                .iter()
+                .enumerate()
+                .filter(|(_, &v)| v != 0.0)
+                .map(|(i, _)| i)
+                .collect(),
+            LocalMatrix::Sparse(m) => m.row_iter(row).map(|(c, _)| c).collect(),
+        }
+    }
+
+    // -- conversion -----------------------------------------------------
+
+    pub fn to_dense(&self) -> DenseMatrix {
+        match self {
+            LocalMatrix::Dense(m) => m.clone(),
+            LocalMatrix::Sparse(m) => m.to_dense(),
+        }
+    }
+
+    pub fn to_sparse(&self) -> CsrMatrix {
+        match self {
+            LocalMatrix::Dense(m) => CsrMatrix::from_dense(m),
+            LocalMatrix::Sparse(m) => m.clone(),
+        }
+    }
+
+    /// Flatten row-major to f32 (the XLA boundary format).
+    pub fn to_f32(&self) -> Vec<f32> {
+        let d = self.to_dense();
+        d.data.iter().map(|&x| x as f32).collect()
+    }
+
+    /// Rows as MLVectors (Fig. A4 `data.toMLVectors`).
+    pub fn to_vectors(&self) -> Vec<MLVector> {
+        (0..self.num_rows()).map(|r| self.row(r)).collect()
+    }
+
+    // -- composition (Fig. A3 "Composition") -------------------------
+
+    /// Stack vertically (`matA on matB`).
+    pub fn on(&self, other: &LocalMatrix) -> Result<LocalMatrix> {
+        if self.num_cols() != other.num_cols() {
+            return Err(Error::Shape(format!(
+                "on: col mismatch {} vs {}",
+                self.num_cols(),
+                other.num_cols()
+            )));
+        }
+        let mut d = self.to_dense();
+        let o = other.to_dense();
+        d.data.extend_from_slice(&o.data);
+        d.rows += o.rows;
+        Ok(LocalMatrix::Dense(d))
+    }
+
+    /// Concatenate horizontally (`matA then matB`).
+    pub fn then(&self, other: &LocalMatrix) -> Result<LocalMatrix> {
+        if self.num_rows() != other.num_rows() {
+            return Err(Error::Shape(format!(
+                "then: row mismatch {} vs {}",
+                self.num_rows(),
+                other.num_rows()
+            )));
+        }
+        let a = self.to_dense();
+        let b = other.to_dense();
+        let mut data = Vec::with_capacity(a.data.len() + b.data.len());
+        for r in 0..a.rows {
+            data.extend_from_slice(a.row(r));
+            data.extend_from_slice(b.row(r));
+        }
+        LocalMatrix::dense(a.rows, a.cols + b.cols, data)
+    }
+
+    // -- linear algebra (Fig. A3 "Linear Algebra") --------------------
+
+    pub fn transpose(&self) -> LocalMatrix {
+        match self {
+            LocalMatrix::Dense(m) => LocalMatrix::Dense(m.transpose()),
+            LocalMatrix::Sparse(m) => LocalMatrix::Sparse(m.transpose()),
+        }
+    }
+
+    /// Matrix multiply (`matA times matB`). Sparse*dense uses CSR row
+    /// iteration; everything else densifies.
+    pub fn times(&self, other: &LocalMatrix) -> Result<LocalMatrix> {
+        if self.num_cols() != other.num_rows() {
+            return Err(Error::Shape(format!(
+                "times: {}x{} * {}x{}",
+                self.num_rows(),
+                self.num_cols(),
+                other.num_rows(),
+                other.num_cols()
+            )));
+        }
+        match (self, other) {
+            (LocalMatrix::Sparse(a), LocalMatrix::Dense(b)) => {
+                Ok(LocalMatrix::Dense(a.matmul_dense(b)))
+            }
+            _ => {
+                let a = self.to_dense();
+                let b = other.to_dense();
+                Ok(LocalMatrix::Dense(a.matmul(&b)?))
+            }
+        }
+    }
+
+    /// Elementwise (Frobenius) dot product (`matA dot matB`).
+    pub fn dot(&self, other: &LocalMatrix) -> Result<f64> {
+        if self.dims() != other.dims() {
+            return Err(Error::Shape("dot: dims differ".into()));
+        }
+        let a = self.to_dense();
+        let b = other.to_dense();
+        Ok(a.data.iter().zip(&b.data).map(|(x, y)| x * y).sum())
+    }
+
+    /// Solve `self * x = rhs` (Fig. A3 `matA.solve(v)`), LU w/ pivoting.
+    pub fn solve(&self, rhs: &LocalMatrix) -> Result<LocalMatrix> {
+        let a = self.to_dense();
+        let b = rhs.to_dense();
+        Ok(LocalMatrix::Dense(linalg::solve(&a, &b)?))
+    }
+
+    pub fn inverse(&self) -> Result<LocalMatrix> {
+        let a = self.to_dense();
+        Ok(LocalMatrix::Dense(linalg::inverse(&a)?))
+    }
+
+    /// Singular value decomposition (one-sided Jacobi): (U, S, V^T).
+    pub fn svd(&self) -> Result<(LocalMatrix, MLVector, LocalMatrix)> {
+        let (u, s, vt) = linalg::svd(&self.to_dense())?;
+        Ok((
+            LocalMatrix::Dense(u),
+            MLVector::new(s),
+            LocalMatrix::Dense(vt),
+        ))
+    }
+
+    /// Symmetric eigendecomposition (Jacobi): (values, vectors-as-cols).
+    pub fn eigen(&self) -> Result<(MLVector, LocalMatrix)> {
+        let (vals, vecs) = linalg::eigen_sym(&self.to_dense())?;
+        Ok((MLVector::new(vals), LocalMatrix::Dense(vecs)))
+    }
+
+    /// Numerical rank via SVD with MATLAB's default tolerance.
+    pub fn rank(&self) -> Result<usize> {
+        linalg::rank(&self.to_dense())
+    }
+
+    /// Frobenius norm.
+    pub fn frob_norm(&self) -> f64 {
+        match self {
+            LocalMatrix::Dense(m) => m.data.iter().map(|x| x * x).sum::<f64>().sqrt(),
+            LocalMatrix::Sparse(m) => m.values.iter().map(|x| x * x).sum::<f64>().sqrt(),
+        }
+    }
+
+    /// Sum of all entries.
+    pub fn sum(&self) -> f64 {
+        match self {
+            LocalMatrix::Dense(m) => m.data.iter().sum(),
+            LocalMatrix::Sparse(m) => m.values.iter().sum(),
+        }
+    }
+
+    /// Memory footprint in bytes (used by the cluster OOM model).
+    pub fn byte_size(&self) -> usize {
+        match self {
+            LocalMatrix::Dense(m) => m.data.len() * 8,
+            LocalMatrix::Sparse(m) => m.values.len() * 8 + m.indices.len() * 8 + m.indptr.len() * 8,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn construction_and_shape() {
+        let m = LocalMatrix::dense(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(m.dims(), (2, 3));
+        assert_eq!(m.get(1, 2), 6.0);
+        assert!(LocalMatrix::dense(2, 3, vec![1.0]).is_err());
+        assert_eq!(LocalMatrix::eye(3).get(2, 2), 1.0);
+        assert_eq!(LocalMatrix::zeros(2, 2).sum(), 0.0);
+    }
+
+    #[test]
+    fn composition_on_then() {
+        let a = LocalMatrix::dense(1, 2, vec![1., 2.]).unwrap();
+        let b = LocalMatrix::dense(1, 2, vec![3., 4.]).unwrap();
+        let v = a.on(&b).unwrap();
+        assert_eq!(v.dims(), (2, 2));
+        assert_eq!(v.get(1, 0), 3.0);
+        let h = a.then(&b).unwrap();
+        assert_eq!(h.dims(), (1, 4));
+        assert_eq!(h.get(0, 3), 4.0);
+        assert!(a.on(&LocalMatrix::zeros(1, 3)).is_err());
+        assert!(a.then(&LocalMatrix::zeros(2, 2)).is_err());
+    }
+
+    #[test]
+    fn select_and_nonzero() {
+        let m = LocalMatrix::dense(3, 3, vec![1., 0., 2., 0., 0., 0., 3., 0., 4.]).unwrap();
+        assert_eq!(m.non_zero_indices(0), vec![0, 2]);
+        assert_eq!(m.non_zero_indices(1), Vec::<usize>::new());
+        let s = m.select(&[0, 2], &[0, 2]).unwrap();
+        assert_eq!(s.dims(), (2, 2));
+        assert_eq!(s.get(1, 1), 4.0);
+        assert!(m.select(&[5], &[0]).is_err());
+    }
+
+    #[test]
+    fn times_and_solve_roundtrip() {
+        let mut rng = Rng::new(0);
+        let a = LocalMatrix::rand(4, 4, &mut rng);
+        let x = LocalMatrix::rand(4, 2, &mut rng);
+        let b = a.times(&x).unwrap();
+        let x2 = a.solve(&b).unwrap();
+        for r in 0..4 {
+            for c in 0..2 {
+                assert!((x.get(r, c) - x2.get(r, c)).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_dense_roundtrip() {
+        let d = LocalMatrix::dense(2, 3, vec![0., 1., 0., 2., 0., 3.]).unwrap();
+        let s = LocalMatrix::Sparse(d.to_sparse());
+        assert_eq!(s.nnz(), 3);
+        assert_eq!(s.get(1, 2), 3.0);
+        assert_eq!(s.to_dense(), d.to_dense());
+        assert_eq!(s.row(1).as_slice(), &[2., 0., 3.]);
+        assert_eq!(s.non_zero_indices(1), vec![0, 2]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(1);
+        let m = LocalMatrix::rand(3, 5, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose().dims(), (5, 3));
+    }
+
+    #[test]
+    fn frob_and_dot() {
+        let m = LocalMatrix::dense(2, 2, vec![3., 0., 4., 0.]).unwrap();
+        assert!((m.frob_norm() - 5.0).abs() < 1e-12);
+        assert!((m.dot(&m).unwrap() - 25.0).abs() < 1e-12);
+    }
+}

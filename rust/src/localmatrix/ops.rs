@@ -1,0 +1,171 @@
+//! Operator overloads for [`LocalMatrix`] — the Fig. A3 "Arithmetic"
+//! family: elementwise matrix±matrix, matrix±scalar, matrix*/scalar,
+//! elementwise matrix*matrix and matrix/matrix (MATLAB `.*`, `./`).
+//!
+//! Panicking operators mirror MATLAB ergonomics for example code; the
+//! checked equivalents (`try_add`, ...) are what library code uses.
+
+use std::ops::{Add, Div, Mul, Neg, Sub};
+
+use super::{DenseMatrix, LocalMatrix};
+use crate::error::Result;
+
+impl LocalMatrix {
+    fn zip_dense(&self, other: &LocalMatrix, f: impl Fn(f64, f64) -> f64) -> Result<LocalMatrix> {
+        let a = self.to_dense();
+        let b = other.to_dense();
+        Ok(LocalMatrix::Dense(a.zip(&b, f)?))
+    }
+
+    /// Elementwise add (checked).
+    pub fn try_add(&self, other: &LocalMatrix) -> Result<LocalMatrix> {
+        self.zip_dense(other, |a, b| a + b)
+    }
+
+    /// Elementwise subtract (checked).
+    pub fn try_sub(&self, other: &LocalMatrix) -> Result<LocalMatrix> {
+        self.zip_dense(other, |a, b| a - b)
+    }
+
+    /// Elementwise multiply — MATLAB `.*` (checked).
+    pub fn try_mul_elem(&self, other: &LocalMatrix) -> Result<LocalMatrix> {
+        self.zip_dense(other, |a, b| a * b)
+    }
+
+    /// Elementwise divide — MATLAB `./` (checked).
+    pub fn try_div_elem(&self, other: &LocalMatrix) -> Result<LocalMatrix> {
+        self.zip_dense(other, |a, b| a / b)
+    }
+
+    /// Scalar ops (matA + 5, matA - 5, matA * 5, matA / 5).
+    pub fn add_scalar(&self, s: f64) -> LocalMatrix {
+        LocalMatrix::Dense(self.to_dense().map(|x| x + s))
+    }
+
+    pub fn sub_scalar(&self, s: f64) -> LocalMatrix {
+        LocalMatrix::Dense(self.to_dense().map(|x| x - s))
+    }
+
+    pub fn mul_scalar(&self, s: f64) -> LocalMatrix {
+        match self {
+            // scaling preserves sparsity — stay CSR
+            LocalMatrix::Sparse(m) => {
+                let mut m = m.clone();
+                for v in &mut m.values {
+                    *v *= s;
+                }
+                LocalMatrix::Sparse(m)
+            }
+            LocalMatrix::Dense(m) => LocalMatrix::Dense(m.map(|x| x * s)),
+        }
+    }
+
+    pub fn div_scalar(&self, s: f64) -> LocalMatrix {
+        self.mul_scalar(1.0 / s)
+    }
+
+    /// Elementwise map (densifies).
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> LocalMatrix {
+        LocalMatrix::Dense(self.to_dense().map(f))
+    }
+}
+
+impl Add for &LocalMatrix {
+    type Output = LocalMatrix;
+    fn add(self, rhs: &LocalMatrix) -> LocalMatrix {
+        self.try_add(rhs).expect("matrix add: shape mismatch")
+    }
+}
+
+impl Sub for &LocalMatrix {
+    type Output = LocalMatrix;
+    fn sub(self, rhs: &LocalMatrix) -> LocalMatrix {
+        self.try_sub(rhs).expect("matrix sub: shape mismatch")
+    }
+}
+
+impl Mul<f64> for &LocalMatrix {
+    type Output = LocalMatrix;
+    fn mul(self, s: f64) -> LocalMatrix {
+        self.mul_scalar(s)
+    }
+}
+
+impl Div<f64> for &LocalMatrix {
+    type Output = LocalMatrix;
+    fn div(self, s: f64) -> LocalMatrix {
+        self.div_scalar(s)
+    }
+}
+
+impl Add<f64> for &LocalMatrix {
+    type Output = LocalMatrix;
+    fn add(self, s: f64) -> LocalMatrix {
+        self.add_scalar(s)
+    }
+}
+
+impl Sub<f64> for &LocalMatrix {
+    type Output = LocalMatrix;
+    fn sub(self, s: f64) -> LocalMatrix {
+        self.sub_scalar(s)
+    }
+}
+
+impl Neg for &LocalMatrix {
+    type Output = LocalMatrix;
+    fn neg(self) -> LocalMatrix {
+        self.mul_scalar(-1.0)
+    }
+}
+
+impl From<DenseMatrix> for LocalMatrix {
+    fn from(m: DenseMatrix) -> LocalMatrix {
+        LocalMatrix::Dense(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(rows: usize, cols: usize, d: Vec<f64>) -> LocalMatrix {
+        LocalMatrix::dense(rows, cols, d).unwrap()
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let a = m(2, 2, vec![1., 2., 3., 4.]);
+        let b = m(2, 2, vec![10., 20., 30., 40.]);
+        assert_eq!((&a + &b), m(2, 2, vec![11., 22., 33., 44.]));
+        assert_eq!((&b - &a), m(2, 2, vec![9., 18., 27., 36.]));
+        assert_eq!(a.try_mul_elem(&b).unwrap(), m(2, 2, vec![10., 40., 90., 160.]));
+        assert_eq!(b.try_div_elem(&a).unwrap(), m(2, 2, vec![10., 10., 10., 10.]));
+        assert!(a.try_add(&LocalMatrix::zeros(3, 3)).is_err());
+    }
+
+    #[test]
+    fn scalar_ops() {
+        let a = m(1, 3, vec![1., 2., 3.]);
+        assert_eq!((&a + 1.0), m(1, 3, vec![2., 3., 4.]));
+        assert_eq!((&a - 1.0), m(1, 3, vec![0., 1., 2.]));
+        assert_eq!((&a * 2.0), m(1, 3, vec![2., 4., 6.]));
+        assert_eq!((&a / 2.0), m(1, 3, vec![0.5, 1., 1.5]));
+        assert_eq!((-&a), m(1, 3, vec![-1., -2., -3.]));
+    }
+
+    #[test]
+    fn sparse_scale_stays_sparse() {
+        let d = m(2, 2, vec![0., 5., 0., 0.]);
+        let s = LocalMatrix::Sparse(d.to_sparse());
+        let scaled = s.mul_scalar(2.0);
+        assert!(scaled.is_sparse());
+        assert_eq!(scaled.get(0, 1), 10.0);
+    }
+
+    #[test]
+    fn map_applies() {
+        let a = m(1, 2, vec![-1., 4.]);
+        assert_eq!(a.map(f64::abs), m(1, 2, vec![1., 4.]));
+    }
+}

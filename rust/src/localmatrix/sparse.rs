@@ -1,0 +1,350 @@
+//! CSR (compressed sparse row) matrix — the storage the paper's ALS uses
+//! for ratings ("support for CSR-compressed sparse representations of
+//! matrices", §IV-B).
+
+use super::dense::DenseMatrix;
+use crate::error::{Error, Result};
+
+/// Compressed sparse row matrix.
+///
+/// `indptr.len() == rows + 1`; row r's entries live at
+/// `indices[indptr[r]..indptr[r+1]]` / `values[...]`, with column indices
+/// strictly increasing within a row.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<usize>,
+    pub values: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// Build from (row, col, value) triplets; duplicates summed.
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        mut triplets: Vec<(usize, usize, f64)>,
+    ) -> Result<CsrMatrix> {
+        for &(r, c, _) in &triplets {
+            if r >= rows || c >= cols {
+                return Err(Error::Shape(format!(
+                    "triplet ({r},{c}) out of bounds for {rows}x{cols}"
+                )));
+            }
+        }
+        triplets.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices: Vec<usize> = Vec::with_capacity(triplets.len());
+        let mut values: Vec<f64> = Vec::with_capacity(triplets.len());
+        let mut last: Option<(usize, usize)> = None;
+        for (r, c, v) in triplets {
+            if last == Some((r, c)) {
+                // duplicate (r, c): sum contributions
+                *values.last_mut().unwrap() += v;
+            } else {
+                indices.push(c);
+                values.push(v);
+                last = Some((r, c));
+            }
+            indptr[r + 1] = indices.len();
+        }
+        // forward-fill indptr for empty rows
+        for r in 1..=rows {
+            indptr[r] = indptr[r].max(indptr[r - 1]);
+        }
+        Ok(CsrMatrix { rows, cols, indptr, indices, values })
+    }
+
+    pub fn from_dense(m: &DenseMatrix) -> CsrMatrix {
+        let mut indptr = Vec::with_capacity(m.rows + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for r in 0..m.rows {
+            for (c, &v) in m.row(r).iter().enumerate() {
+                if v != 0.0 {
+                    indices.push(c);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        CsrMatrix { rows: m.rows, cols: m.cols, indptr, indices, values }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn row_nnz(&self, r: usize) -> usize {
+        self.indptr[r + 1] - self.indptr[r]
+    }
+
+    /// Iterate a row's (col, value) pairs.
+    pub fn row_iter(&self, r: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let lo = self.indptr[r];
+        let hi = self.indptr[r + 1];
+        self.indices[lo..hi]
+            .iter()
+            .copied()
+            .zip(self.values[lo..hi].iter().copied())
+    }
+
+    /// Point lookup via binary search within the row.
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        let lo = self.indptr[r];
+        let hi = self.indptr[r + 1];
+        match self.indices[lo..hi].binary_search(&c) {
+            Ok(i) => self.values[lo + i],
+            Err(_) => 0.0,
+        }
+    }
+
+    pub fn to_dense(&self) -> DenseMatrix {
+        let mut out = DenseMatrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for (c, v) in self.row_iter(r) {
+                out.set(r, c, v);
+            }
+        }
+        out
+    }
+
+    /// CSR transpose (counting sort over columns) — O(nnz + rows + cols).
+    /// The paper's ALS distributes both M and M^T (§IV-B); this is how the
+    /// transposed copy is built.
+    pub fn transpose(&self) -> CsrMatrix {
+        let mut counts = vec![0usize; self.cols + 1];
+        for &c in &self.indices {
+            counts[c + 1] += 1;
+        }
+        for i in 1..=self.cols {
+            counts[i] += counts[i - 1];
+        }
+        let indptr = counts.clone();
+        let mut cursor = counts;
+        let mut indices = vec![0usize; self.nnz()];
+        let mut values = vec![0.0; self.nnz()];
+        for r in 0..self.rows {
+            for (c, v) in self.row_iter(r) {
+                let dst = cursor[c];
+                indices[dst] = r;
+                values[dst] = v;
+                cursor[c] += 1;
+            }
+        }
+        CsrMatrix {
+            rows: self.cols,
+            cols: self.rows,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// Sparse x dense multiply.
+    pub fn matmul_dense(&self, b: &DenseMatrix) -> DenseMatrix {
+        assert_eq!(self.cols, b.rows, "spmm shape mismatch");
+        let mut out = DenseMatrix::zeros(self.rows, b.cols);
+        for r in 0..self.rows {
+            let orow = out.row_mut(r);
+            for (c, v) in self.row_iter(r) {
+                let brow = b.row(c);
+                for (o, &bb) in orow.iter_mut().zip(brow) {
+                    *o += v * bb;
+                }
+            }
+        }
+        out
+    }
+
+    /// Sparse matvec.
+    pub fn matvec(&self, v: &[f64]) -> Result<Vec<f64>> {
+        if v.len() != self.cols {
+            return Err(Error::Shape(format!(
+                "spmv: {}x{} * {}",
+                self.rows,
+                self.cols,
+                v.len()
+            )));
+        }
+        Ok((0..self.rows)
+            .map(|r| self.row_iter(r).map(|(c, x)| x * v[c]).sum())
+            .collect())
+    }
+
+    /// Row slice as a new CSR (rows [lo, hi)) — used to partition ratings
+    /// across simulated machines.
+    pub fn row_slice(&self, lo: usize, hi: usize) -> CsrMatrix {
+        assert!(lo <= hi && hi <= self.rows);
+        let base = self.indptr[lo];
+        let indptr: Vec<usize> = self.indptr[lo..=hi].iter().map(|&p| p - base).collect();
+        CsrMatrix {
+            rows: hi - lo,
+            cols: self.cols,
+            indptr,
+            indices: self.indices[self.indptr[lo]..self.indptr[hi]].to_vec(),
+            values: self.values[self.indptr[lo]..self.indptr[hi]].to_vec(),
+        }
+    }
+
+    /// Horizontal tiling: repeat this matrix `times` across columns — the
+    /// paper's Netflix scale-up ("repeatedly tiling the Netflix dataset",
+    /// §IV-B) preserving sparsity structure.
+    pub fn tile_cols(&self, times: usize) -> CsrMatrix {
+        let mut indptr = vec![0usize; self.rows + 1];
+        let mut indices = Vec::with_capacity(self.nnz() * times);
+        let mut values = Vec::with_capacity(self.nnz() * times);
+        for r in 0..self.rows {
+            for t in 0..times {
+                for (c, v) in self.row_iter(r) {
+                    indices.push(c + t * self.cols);
+                    values.push(v);
+                }
+            }
+            indptr[r + 1] = indices.len();
+        }
+        CsrMatrix {
+            rows: self.rows,
+            cols: self.cols * times,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// Vertical tiling: repeat across rows.
+    pub fn tile_rows(&self, times: usize) -> CsrMatrix {
+        let mut indptr = Vec::with_capacity(self.rows * times + 1);
+        indptr.push(0);
+        let mut indices = Vec::with_capacity(self.nnz() * times);
+        let mut values = Vec::with_capacity(self.nnz() * times);
+        for _ in 0..times {
+            for r in 0..self.rows {
+                for (c, v) in self.row_iter(r) {
+                    indices.push(c);
+                    values.push(v);
+                }
+                indptr.push(indices.len());
+            }
+        }
+        CsrMatrix {
+            rows: self.rows * times,
+            cols: self.cols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CsrMatrix {
+        // [[1 0 2], [0 0 0], [3 4 0]]
+        CsrMatrix::from_triplets(3, 3, vec![(0, 0, 1.), (0, 2, 2.), (2, 0, 3.), (2, 1, 4.)])
+            .unwrap()
+    }
+
+    #[test]
+    fn triplets_and_lookup() {
+        let m = sample();
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.get(0, 0), 1.0);
+        assert_eq!(m.get(0, 1), 0.0);
+        assert_eq!(m.get(2, 1), 4.0);
+        assert_eq!(m.row_nnz(1), 0);
+        assert_eq!(m.row_iter(2).collect::<Vec<_>>(), vec![(0, 3.0), (1, 4.0)]);
+    }
+
+    #[test]
+    fn triplets_out_of_bounds() {
+        assert!(CsrMatrix::from_triplets(2, 2, vec![(2, 0, 1.)]).is_err());
+        assert!(CsrMatrix::from_triplets(2, 2, vec![(0, 5, 1.)]).is_err());
+    }
+
+    #[test]
+    fn unsorted_triplets() {
+        let m =
+            CsrMatrix::from_triplets(2, 3, vec![(1, 2, 5.), (0, 1, 1.), (1, 0, 2.)]).unwrap();
+        assert_eq!(m.get(0, 1), 1.0);
+        assert_eq!(m.get(1, 0), 2.0);
+        assert_eq!(m.get(1, 2), 5.0);
+    }
+
+    #[test]
+    fn duplicate_triplets_summed() {
+        let m = CsrMatrix::from_triplets(2, 2, vec![(0, 0, 1.), (0, 0, 2.5), (1, 1, 1.)])
+            .unwrap();
+        assert_eq!(m.get(0, 0), 3.5);
+        assert_eq!(m.nnz(), 2);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let m = sample();
+        let d = m.to_dense();
+        assert_eq!(CsrMatrix::from_dense(&d), m);
+    }
+
+    #[test]
+    fn transpose_correct() {
+        let m = sample();
+        let t = m.transpose();
+        assert_eq!(t.rows, 3);
+        let d = m.to_dense();
+        let td = t.to_dense();
+        for r in 0..3 {
+            for c in 0..3 {
+                assert_eq!(d.get(r, c), td.get(c, r));
+            }
+        }
+        // double transpose = identity
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        let m = sample();
+        let b = DenseMatrix::new(3, 2, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let got = m.matmul_dense(&b);
+        let want = m.to_dense().matmul(&b).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn spmv() {
+        let m = sample();
+        let got = m.matvec(&[1.0, 1.0, 1.0]).unwrap();
+        assert_eq!(got, vec![3.0, 0.0, 7.0]);
+        assert!(m.matvec(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn row_slice() {
+        let m = sample();
+        let s = m.row_slice(1, 3);
+        assert_eq!(s.rows, 2);
+        assert_eq!(s.get(0, 0), 0.0);
+        assert_eq!(s.get(1, 1), 4.0);
+        assert_eq!(s.nnz(), 2);
+    }
+
+    #[test]
+    fn tiling_preserves_sparsity_pattern() {
+        let m = sample();
+        let t = m.tile_cols(3);
+        assert_eq!(t.cols, 9);
+        assert_eq!(t.nnz(), 12);
+        assert_eq!(t.get(0, 3), 1.0); // second tile
+        assert_eq!(t.get(2, 7), 4.0);
+        let v = m.tile_rows(2);
+        assert_eq!(v.rows, 6);
+        assert_eq!(v.get(5, 1), 4.0);
+        // per-row density identical to original
+        assert_eq!(v.row_nnz(3), m.row_nnz(0));
+    }
+}

@@ -1,0 +1,232 @@
+//! MLVector — the vector type of the MLI API (Fig. A4 uses `MLVector` for
+//! weights, gradients, and table rows cast to feature vectors).
+
+use std::ops::{Add, Index, IndexMut, Mul, Sub};
+
+use crate::error::{Error, Result};
+
+/// Dense f64 vector with MATLAB-ish arithmetic.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MLVector {
+    data: Vec<f64>,
+}
+
+impl MLVector {
+    pub fn new(data: Vec<f64>) -> MLVector {
+        MLVector { data }
+    }
+
+    pub fn zeros(n: usize) -> MLVector {
+        MLVector { data: vec![0.0; n] }
+    }
+
+    pub fn ones(n: usize) -> MLVector {
+        MLVector { data: vec![1.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    pub fn from_f32(xs: &[f32]) -> MLVector {
+        MLVector::new(xs.iter().map(|&x| x as f64).collect())
+    }
+
+    /// Sub-vector `[lo, hi)` (Fig. A4: `vec.slice(1, vec.length)`).
+    pub fn slice(&self, lo: usize, hi: usize) -> MLVector {
+        MLVector::new(self.data[lo..hi].to_vec())
+    }
+
+    fn check_len(&self, other: &MLVector, op: &str) -> Result<()> {
+        if self.len() != other.len() {
+            return Err(Error::Shape(format!(
+                "{op}: length mismatch {} vs {}",
+                self.len(),
+                other.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Dot product (`x dot w` in Fig. A4).
+    pub fn dot(&self, other: &MLVector) -> Result<f64> {
+        self.check_len(other, "dot")?;
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a * b)
+            .sum())
+    }
+
+    /// `self + other` (Fig. A4 `_ plus _` in the reduce).
+    pub fn plus(&self, other: &MLVector) -> Result<MLVector> {
+        self.check_len(other, "plus")?;
+        Ok(MLVector::new(
+            self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
+        ))
+    }
+
+    pub fn minus(&self, other: &MLVector) -> Result<MLVector> {
+        self.check_len(other, "minus")?;
+        Ok(MLVector::new(
+            self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        ))
+    }
+
+    /// Scalar multiply (`x times (...)` in Fig. A4).
+    pub fn times(&self, s: f64) -> MLVector {
+        MLVector::new(self.data.iter().map(|a| a * s).collect())
+    }
+
+    /// In-place axpy: `self += alpha * other`. The SGD hot path —
+    /// avoids the two allocations of `plus(times(..))`.
+    pub fn axpy(&mut self, alpha: f64, other: &MLVector) -> Result<()> {
+        self.check_len(other, "axpy")?;
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, s: f64) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    pub fn norm2(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.is_empty() {
+            0.0
+        } else {
+            self.sum() / self.len() as f64
+        }
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, f64> {
+        self.data.iter()
+    }
+}
+
+impl Index<usize> for MLVector {
+    type Output = f64;
+    fn index(&self, i: usize) -> &f64 {
+        &self.data[i]
+    }
+}
+
+impl IndexMut<usize> for MLVector {
+    fn index_mut(&mut self, i: usize) -> &mut f64 {
+        &mut self.data[i]
+    }
+}
+
+impl Add for &MLVector {
+    type Output = MLVector;
+    fn add(self, rhs: &MLVector) -> MLVector {
+        self.plus(rhs).expect("vector add: length mismatch")
+    }
+}
+
+impl Sub for &MLVector {
+    type Output = MLVector;
+    fn sub(self, rhs: &MLVector) -> MLVector {
+        self.minus(rhs).expect("vector sub: length mismatch")
+    }
+}
+
+impl Mul<f64> for &MLVector {
+    type Output = MLVector;
+    fn mul(self, s: f64) -> MLVector {
+        self.times(s)
+    }
+}
+
+impl From<Vec<f64>> for MLVector {
+    fn from(v: Vec<f64>) -> MLVector {
+        MLVector::new(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let a = MLVector::new(vec![1., 2., 3.]);
+        let b = MLVector::new(vec![4., 5., 6.]);
+        assert_eq!(a.dot(&b).unwrap(), 32.0);
+        assert_eq!(a.plus(&b).unwrap().as_slice(), &[5., 7., 9.]);
+        assert_eq!(b.minus(&a).unwrap().as_slice(), &[3., 3., 3.]);
+        assert_eq!(a.times(2.0).as_slice(), &[2., 4., 6.]);
+        assert_eq!((&a + &b).as_slice(), &[5., 7., 9.]);
+        assert_eq!((&b - &a).as_slice(), &[3., 3., 3.]);
+        assert_eq!((&a * 3.0).as_slice(), &[3., 6., 9.]);
+    }
+
+    #[test]
+    fn length_mismatch_errors() {
+        let a = MLVector::zeros(2);
+        let b = MLVector::zeros(3);
+        assert!(a.dot(&b).is_err());
+        assert!(a.plus(&b).is_err());
+        assert!(a.minus(&b).is_err());
+        let mut c = a.clone();
+        assert!(c.axpy(1.0, &b).is_err());
+    }
+
+    #[test]
+    fn axpy_matches_plus_times() {
+        let mut a = MLVector::new(vec![1., 2.]);
+        let g = MLVector::new(vec![10., 20.]);
+        let want = a.plus(&g.times(-0.5)).unwrap();
+        a.axpy(-0.5, &g).unwrap();
+        assert_eq!(a, want);
+    }
+
+    #[test]
+    fn slice_and_norms() {
+        let v = MLVector::new(vec![3., 4., 5.]);
+        assert_eq!(v.slice(0, 2).as_slice(), &[3., 4.]);
+        assert!((v.slice(0, 2).norm2() - 5.0).abs() < 1e-12);
+        assert_eq!(v.sum(), 12.0);
+        assert_eq!(v.mean(), 4.0);
+        assert_eq!(MLVector::zeros(0).mean(), 0.0);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let v = MLVector::new(vec![1.5, -2.25]);
+        assert_eq!(MLVector::from_f32(&v.to_f32()), v);
+    }
+}

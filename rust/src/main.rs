@@ -1,0 +1,17 @@
+//! `mli` — launcher CLI for the MLI reproduction.
+//!
+//! Subcommands (see `mli help`): train, serve-info, bench, loc, selftest.
+
+use mli::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match mli::run_cli(args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}

@@ -1,0 +1,209 @@
+//! Metrics: counters, timer series, and table reporters used by the
+//! training loops and the bench harness.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::util;
+
+/// A named collection of counters and timing series.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: RefCell<BTreeMap<String, u64>>,
+    series: RefCell<BTreeMap<String, Vec<f64>>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn incr(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&self, name: &str, v: u64) {
+        *self.counters.borrow_mut().entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.borrow().get(name).copied().unwrap_or(0)
+    }
+
+    /// Append a sample (seconds, losses, whatever) to a named series.
+    pub fn observe(&self, name: &str, v: f64) {
+        self.series
+            .borrow_mut()
+            .entry(name.to_string())
+            .or_default()
+            .push(v);
+    }
+
+    pub fn series(&self, name: &str) -> Vec<f64> {
+        self.series.borrow().get(name).cloned().unwrap_or_default()
+    }
+
+    pub fn summary(&self, name: &str) -> (usize, f64, f64, f64) {
+        let s = self.series(name);
+        (s.len(), util::mean(&s), util::median(&s), util::stddev(&s))
+    }
+
+    /// Render everything as an aligned text report.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        let counters = self.counters.borrow();
+        if !counters.is_empty() {
+            out.push_str("counters:\n");
+            for (k, v) in counters.iter() {
+                let _ = writeln!(out, "  {k:<40} {v}");
+            }
+        }
+        let series = self.series.borrow();
+        if !series.is_empty() {
+            out.push_str("series (n / mean / median / stddev):\n");
+            for (k, s) in series.iter() {
+                let _ = writeln!(
+                    out,
+                    "  {k:<40} {:>6} / {:.6} / {:.6} / {:.6}",
+                    s.len(),
+                    util::mean(s),
+                    util::median(s),
+                    util::stddev(s)
+                );
+            }
+        }
+        out
+    }
+}
+
+/// A simple aligned-column table for bench output (markdown-ish, matches
+/// what EXPERIMENTS.md embeds).
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "table row width");
+        self.rows.push(cells);
+    }
+
+    /// Render as a markdown table.
+    pub fn to_markdown(&self) -> String {
+        
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("### {}\n\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                let _ = write!(line, " {c:<w$} |", w = w);
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{}-|", "-".repeat(w + 2 - 1));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as CSV (for plotting scripts).
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write both renderings under `results/` with the given stem.
+    pub fn save(&self, stem: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all("results")?;
+        std::fs::write(format!("results/{stem}.md"), self.to_markdown())?;
+        std::fs::write(format!("results/{stem}.csv"), self.to_csv())?;
+        Ok(())
+    }
+}
+
+/// Format seconds for tables: "DNF(oom)" for None.
+pub fn fmt_time(t: Option<f64>) -> String {
+    match t {
+        Some(s) => format!("{s:.2}"),
+        None => "DNF(oom)".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_series() {
+        let m = Metrics::new();
+        m.incr("tasks");
+        m.add("tasks", 4);
+        assert_eq!(m.counter("tasks"), 5);
+        assert_eq!(m.counter("missing"), 0);
+        m.observe("round_s", 1.0);
+        m.observe("round_s", 3.0);
+        let (n, mean, median, _) = m.summary("round_s");
+        assert_eq!(n, 2);
+        assert_eq!(mean, 2.0);
+        assert_eq!(median, 2.0);
+        let r = m.report();
+        assert!(r.contains("tasks") && r.contains("round_s"));
+    }
+
+    #[test]
+    fn table_render() {
+        let mut t = Table::new("Fig 2a", &["System", "LoC"]);
+        t.row(vec!["MLI".into(), "55".into()]);
+        t.row(vec!["Vowpal Wabbit".into(), "721".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| MLI"));
+        assert!(md.contains("Fig 2a"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("System,LoC\n"));
+        assert!(csv.contains("MLI,55"));
+    }
+
+    #[test]
+    #[should_panic(expected = "table row width")]
+    fn table_rejects_ragged() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn fmt_time_dnf() {
+        assert_eq!(fmt_time(Some(1.234)), "1.23");
+        assert_eq!(fmt_time(None), "DNF(oom)");
+    }
+}

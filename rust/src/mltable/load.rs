@@ -1,0 +1,234 @@
+//! Data loading: CSV with schema inference and raw-text loading — the
+//! paper's "load data in an unstructured or semi-structured format"
+//! entry point (`mc.textFile(...)` in Fig. A2).
+
+use std::path::Path;
+use std::rc::Rc;
+
+use super::row::MLRow;
+use super::schema::{Column, Schema};
+use super::table::MLTable;
+use super::value::{ColumnType, Value};
+use crate::engine::EngineContext;
+use crate::error::{Error, Result};
+
+/// Load a CSV string into an MLTable. `header=true` uses the first line
+/// as column names. Types are inferred per column over all rows with the
+/// widening order Int -> Scalar -> Str (Bool only if every value parses
+/// as bool); columns with any Empty stay at the inferred non-empty type.
+pub fn csv_from_str(
+    ctx: &Rc<EngineContext>,
+    text: &str,
+    header: bool,
+    partitions: usize,
+) -> Result<MLTable> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let names: Option<Vec<String>> = if header {
+        let h = lines
+            .next()
+            .ok_or_else(|| Error::Parse("csv: empty input with header=true".into()))?;
+        Some(split_csv_line(h).into_iter().map(|s| s.trim().to_string()).collect())
+    } else {
+        None
+    };
+
+    let mut raw_rows: Vec<Vec<Value>> = Vec::new();
+    let mut width = names.as_ref().map(|n| n.len());
+    for (i, line) in lines.enumerate() {
+        let cells: Vec<Value> = split_csv_line(line)
+            .into_iter()
+            .map(|tok| Value::parse_infer(&tok))
+            .collect();
+        match width {
+            None => width = Some(cells.len()),
+            Some(w) if w != cells.len() => {
+                return Err(Error::Parse(format!(
+                    "csv: line {} has {} fields, expected {w}",
+                    i + 1 + usize::from(header),
+                    cells.len()
+                )));
+            }
+            _ => {}
+        }
+        raw_rows.push(cells);
+    }
+    let width = width.unwrap_or(0);
+
+    // per-column type widening
+    let mut types: Vec<Option<ColumnType>> = vec![None; width];
+    for row in &raw_rows {
+        for (j, v) in row.iter().enumerate() {
+            let t = match v.column_type() {
+                None => continue, // Empty
+                Some(t) => t,
+            };
+            types[j] = Some(match (types[j], t) {
+                (None, t) => t,
+                (Some(a), b) if a == b => a,
+                // numeric widening
+                (Some(ColumnType::Int), ColumnType::Scalar)
+                | (Some(ColumnType::Scalar), ColumnType::Int) => ColumnType::Scalar,
+                // anything else widens to Str
+                _ => ColumnType::Str,
+            });
+        }
+    }
+
+    // coerce cells to the widened column types
+    let schema = Schema::new(
+        (0..width)
+            .map(|j| Column {
+                name: names.as_ref().map(|n| n[j].clone()),
+                ctype: types[j].unwrap_or(ColumnType::Str),
+            })
+            .collect(),
+    );
+    let rows: Vec<MLRow> = raw_rows
+        .into_iter()
+        .map(|cells| {
+            MLRow::new(
+                cells
+                    .into_iter()
+                    .enumerate()
+                    .map(|(j, v)| coerce(v, types[j].unwrap_or(ColumnType::Str)))
+                    .collect(),
+            )
+        })
+        .collect();
+
+    MLTable::from_rows(ctx, rows, schema, partitions.max(1))
+}
+
+fn coerce(v: Value, t: ColumnType) -> Value {
+    match (&v, t) {
+        (Value::Empty, _) => Value::Empty,
+        (Value::Int(i), ColumnType::Scalar) => Value::Scalar(*i as f64),
+        (Value::Int(i), ColumnType::Str) => Value::Str(i.to_string()),
+        (Value::Scalar(x), ColumnType::Str) => Value::Str(x.to_string()),
+        (Value::Bool(b), ColumnType::Str) => Value::Str(b.to_string()),
+        _ => v,
+    }
+}
+
+/// Minimal CSV field splitter with double-quote support.
+fn split_csv_line(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes && chars.peek() == Some(&'"') => {
+                cur.push('"');
+                chars.next();
+            }
+            '"' => in_quotes = !in_quotes,
+            ',' if !in_quotes => {
+                out.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    out.push(cur);
+    out
+}
+
+/// Load a CSV file.
+pub fn csv_from_file(
+    ctx: &Rc<EngineContext>,
+    path: impl AsRef<Path>,
+    header: bool,
+    partitions: usize,
+) -> Result<MLTable> {
+    let text = std::fs::read_to_string(path)?;
+    csv_from_str(ctx, &text, header, partitions)
+}
+
+/// Load raw text: one row per line, single Str column named "text"
+/// (Fig. A2 `mc.textFile(args(0))`).
+pub fn text_from_str(ctx: &Rc<EngineContext>, text: &str, partitions: usize) -> Result<MLTable> {
+    let rows: Vec<MLRow> = text
+        .lines()
+        .map(|l| MLRow::new(vec![Value::Str(l.to_string())]))
+        .collect();
+    MLTable::from_rows(
+        ctx,
+        rows,
+        Schema::new(vec![Column::named("text", ColumnType::Str)]),
+        partitions.max(1),
+    )
+}
+
+pub fn text_from_file(
+    ctx: &Rc<EngineContext>,
+    path: impl AsRef<Path>,
+    partitions: usize,
+) -> Result<MLTable> {
+    let text = std::fs::read_to_string(path)?;
+    text_from_str(ctx, &text, partitions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> Rc<EngineContext> {
+        EngineContext::new()
+    }
+
+    #[test]
+    fn csv_with_header_and_inference() {
+        let t = csv_from_str(
+            &ctx(),
+            "id,name,score,flag\n1,ann,0.5,true\n2,bob,1.5,false\n3,cat,,true\n",
+            true,
+            2,
+        )
+        .unwrap();
+        assert_eq!(t.num_cols(), 4);
+        assert_eq!(t.num_rows().unwrap(), 3);
+        assert_eq!(t.schema().index_of("score").unwrap(), 2);
+        assert_eq!(t.schema().columns[0].ctype, ColumnType::Int);
+        assert_eq!(t.schema().columns[1].ctype, ColumnType::Str);
+        assert_eq!(t.schema().columns[2].ctype, ColumnType::Scalar);
+        assert_eq!(t.schema().columns[3].ctype, ColumnType::Bool);
+        // the empty cell survived as Empty
+        let rows = t.collect().unwrap();
+        assert!(rows[2][2].is_empty());
+    }
+
+    #[test]
+    fn csv_widens_int_to_scalar_and_to_str() {
+        let t = csv_from_str(&ctx(), "1,7\n2.5,x\n3,9\n", false, 1).unwrap();
+        assert_eq!(t.schema().columns[0].ctype, ColumnType::Scalar);
+        assert_eq!(t.schema().columns[1].ctype, ColumnType::Str);
+        let rows = t.collect().unwrap();
+        // int cells coerced to the widened types
+        assert_eq!(rows[0][0], Value::Scalar(1.0));
+        assert_eq!(rows[0][1], Value::Str("7".into()));
+    }
+
+    #[test]
+    fn csv_rejects_ragged() {
+        assert!(csv_from_str(&ctx(), "1,2\n3\n", false, 1).is_err());
+    }
+
+    #[test]
+    fn quoted_fields() {
+        let t = csv_from_str(&ctx(), "\"a,b\",2\n\"say \"\"hi\"\"\",3\n", false, 1).unwrap();
+        let rows = t.collect().unwrap();
+        assert_eq!(rows[0][0], Value::Str("a,b".into()));
+        assert_eq!(rows[1][0], Value::Str("say \"hi\"".into()));
+    }
+
+    #[test]
+    fn text_loader() {
+        let t = text_from_str(&ctx(), "hello world\nsecond line\n", 2).unwrap();
+        assert_eq!(t.num_rows().unwrap(), 2);
+        assert_eq!(t.schema().columns[0].name.as_deref(), Some("text"));
+        assert_eq!(
+            t.collect().unwrap()[1][0],
+            Value::Str("second line".into())
+        );
+    }
+}

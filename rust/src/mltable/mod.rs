@@ -1,0 +1,19 @@
+//! MLTable — the paper's data-loading/feature-extraction abstraction
+//! (§III-A, API in Fig. A1): a schema'd, partitioned table with
+//! relational (project/union/filter/join) and MapReduce
+//! (map/flatMap/reduce/reduceByKey) operators plus the batch primitive
+//! `matrixBatchMap` that bridges to LocalMatrix compute.
+
+pub mod load;
+pub mod numeric;
+pub mod row;
+pub mod schema;
+pub mod table;
+pub mod value;
+
+pub use load::{csv_from_file, csv_from_str, text_from_file, text_from_str};
+pub use numeric::MLNumericTable;
+pub use row::MLRow;
+pub use schema::{Column, Schema};
+pub use table::MLTable;
+pub use value::{ColumnType, Value};

@@ -1,0 +1,162 @@
+//! MLNumericTable: an MLTable guaranteed all-numeric; each row is treated
+//! as one feature vector (paper §III-A). This is the input type of every
+//! Algorithm and the bridge to the XLA runtime (padded f32 partitions).
+
+use super::table::{rows_to_matrix, MLTable};
+use crate::engine::Dataset;
+use crate::error::{Error, Result};
+use crate::localmatrix::{DenseMatrix, LocalMatrix, MLVector};
+use crate::mltable::row::MLRow;
+
+/// A numeric table. Construction verifies the schema is numeric; row
+/// contents were validated when the underlying table was built.
+#[derive(Clone)]
+pub struct MLNumericTable {
+    table: MLTable,
+}
+
+impl MLNumericTable {
+    pub fn new(table: MLTable) -> Result<MLNumericTable> {
+        if !table.schema().is_numeric() {
+            return Err(Error::Schema(format!(
+                "MLNumericTable requires numeric columns, got {:?}",
+                table
+                    .schema()
+                    .columns
+                    .iter()
+                    .map(|c| c.ctype)
+                    .collect::<Vec<_>>()
+            )));
+        }
+        Ok(MLNumericTable { table })
+    }
+
+    pub fn table(&self) -> &MLTable {
+        &self.table
+    }
+
+    pub fn to_mltable(&self) -> MLTable {
+        self.table.clone()
+    }
+
+    pub fn num_rows(&self) -> Result<usize> {
+        self.table.num_rows()
+    }
+
+    pub fn num_cols(&self) -> usize {
+        self.table.num_cols()
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.table.num_partitions()
+    }
+
+    pub fn dataset(&self) -> &Dataset<MLRow> {
+        self.table.dataset()
+    }
+
+    pub fn cache(self) -> MLNumericTable {
+        MLNumericTable { table: self.table.cache() }
+    }
+
+    /// Partition `p` as a dense matrix (rows = feature vectors).
+    pub fn partition_matrix(&self, p: usize) -> Result<DenseMatrix> {
+        rows_to_matrix(&self.table.dataset().partition(p)?)
+    }
+
+    /// Whole table as one dense matrix (driver-side; small data only).
+    pub fn collect_matrix(&self) -> Result<DenseMatrix> {
+        let rows = self.table.collect()?;
+        rows_to_matrix(&rows)
+    }
+
+    /// Rows as MLVectors (Fig. A4 `data.toMLVectors` pattern).
+    pub fn collect_vectors(&self) -> Result<Vec<MLVector>> {
+        self.table
+            .collect()?
+            .iter()
+            .map(|r| r.to_vector())
+            .collect()
+    }
+
+    /// Per-partition matrix map (delegates to the MLTable op).
+    pub fn matrix_batch_map(
+        &self,
+        f: impl Fn(usize, &LocalMatrix) -> Result<LocalMatrix> + 'static,
+    ) -> Result<MLNumericTable> {
+        self.table.matrix_batch_map(f)
+    }
+
+    /// Partition `p` flattened to f32 row-major, **zero-padded** to
+    /// `(pad_rows, pad_cols)` — the XLA artifacts are shape-specialized,
+    /// so partitions are padded up to the artifact's (n, d). Padding rows
+    /// are all-zero; for logistic regression a zero row contributes
+    /// sigmoid(0)-0 = 0.5 residual times a zero feature vector = zero
+    /// gradient, so padding is exact (and tested).
+    pub fn partition_f32_padded(
+        &self,
+        p: usize,
+        pad_rows: usize,
+        pad_cols: usize,
+    ) -> Result<(Vec<f32>, usize)> {
+        let m = self.partition_matrix(p)?;
+        if m.rows > pad_rows || m.cols > pad_cols {
+            return Err(Error::Shape(format!(
+                "partition {p} is {}x{}, larger than artifact shape {pad_rows}x{pad_cols}",
+                m.rows, m.cols
+            )));
+        }
+        let mut out = vec![0.0f32; pad_rows * pad_cols];
+        for r in 0..m.rows {
+            for c in 0..m.cols {
+                out[r * pad_cols + c] = m.get(r, c) as f32;
+            }
+        }
+        Ok((out, m.rows))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineContext;
+    use crate::mltable::schema::{Column, Schema};
+    use crate::mltable::value::ColumnType;
+
+    #[test]
+    fn rejects_string_schema() {
+        let ctx = EngineContext::new();
+        let t = MLTable::from_rows(
+            &ctx,
+            vec![MLRow::new(vec!["x".into()])],
+            Schema::new(vec![Column::anon(ColumnType::Str)]),
+            1,
+        )
+        .unwrap();
+        assert!(MLNumericTable::new(t).is_err());
+    }
+
+    #[test]
+    fn partition_matrix_and_padding() {
+        let ctx = EngineContext::new();
+        let rows: Vec<MLRow> = (0..5).map(|i| MLRow::from_scalars(&[i as f64, 2.0 * i as f64])).collect();
+        let t = MLTable::from_rows(&ctx, rows, Schema::numeric(2), 2).unwrap();
+        let nt = t.to_numeric().unwrap();
+        assert_eq!(nt.num_cols(), 2);
+
+        let m0 = nt.partition_matrix(0).unwrap();
+        assert_eq!(m0.rows, 3); // balanced split: 3 + 2
+
+        let (padded, real) = nt.partition_f32_padded(0, 8, 4).unwrap();
+        assert_eq!(real, 3);
+        assert_eq!(padded.len(), 32);
+        assert_eq!(padded[1 * 4 + 1], 2.0); // row 1, col 1 = 2*1
+        assert_eq!(padded[3 * 4], 0.0); // padding row
+        assert!(nt.partition_f32_padded(0, 2, 2).is_err()); // too small
+
+        let full = nt.collect_matrix().unwrap();
+        assert_eq!(full.rows, 5);
+        let vecs = nt.collect_vectors().unwrap();
+        assert_eq!(vecs[4].as_slice(), &[4.0, 8.0]);
+    }
+}

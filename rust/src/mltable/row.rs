@@ -1,0 +1,118 @@
+//! MLRow: one record of an MLTable.
+
+use super::value::Value;
+use crate::error::{Error, Result};
+use crate::localmatrix::MLVector;
+
+/// One table row. Cheap to clone (the engine moves rows between
+/// transformations by value).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MLRow {
+    values: Vec<Value>,
+}
+
+impl MLRow {
+    pub fn new(values: Vec<Value>) -> MLRow {
+        MLRow { values }
+    }
+
+    /// All-scalar row from f64s (featurized data).
+    pub fn from_scalars(xs: &[f64]) -> MLRow {
+        MLRow {
+            values: xs.iter().map(|&x| Value::Scalar(x)).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn get(&self, i: usize) -> Option<&Value> {
+        self.values.get(i)
+    }
+
+    pub fn values(&self) -> &[Value] {
+        &self.values
+    }
+
+    pub fn into_values(self) -> Vec<Value> {
+        self.values
+    }
+
+    /// Numeric view of the whole row (fails on any Str cell).
+    pub fn to_vector(&self) -> Result<MLVector> {
+        let mut out = Vec::with_capacity(self.values.len());
+        for (i, v) in self.values.iter().enumerate() {
+            out.push(v.as_scalar().ok_or_else(|| {
+                Error::Schema(format!("cell {i} ({v:?}) is not numeric"))
+            })?);
+        }
+        Ok(MLVector::new(out))
+    }
+
+    /// Project to a subset of columns.
+    pub fn project(&self, idxs: &[usize]) -> Result<MLRow> {
+        let mut vals = Vec::with_capacity(idxs.len());
+        for &i in idxs {
+            vals.push(
+                self.values
+                    .get(i)
+                    .cloned()
+                    .ok_or_else(|| Error::Schema(format!("project: column {i} out of range")))?,
+            );
+        }
+        Ok(MLRow::new(vals))
+    }
+
+    /// Count of Empty cells.
+    pub fn empties(&self) -> usize {
+        self.values.iter().filter(|v| v.is_empty()).count()
+    }
+}
+
+impl From<Vec<Value>> for MLRow {
+    fn from(values: Vec<Value>) -> MLRow {
+        MLRow { values }
+    }
+}
+
+impl std::ops::Index<usize> for MLRow {
+    type Output = Value;
+    fn index(&self, i: usize) -> &Value {
+        &self.values[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let r = MLRow::new(vec![Value::Int(1), Value::Str("x".into()), Value::Empty]);
+        assert_eq!(r.len(), 3);
+        assert_eq!(r[0], Value::Int(1));
+        assert_eq!(r.get(5), None);
+        assert_eq!(r.empties(), 1);
+    }
+
+    #[test]
+    fn to_vector_coerces_or_fails() {
+        let ok = MLRow::new(vec![Value::Int(2), Value::Scalar(0.5), Value::Bool(true), Value::Empty]);
+        assert_eq!(ok.to_vector().unwrap().as_slice(), &[2.0, 0.5, 1.0, 0.0]);
+        let bad = MLRow::new(vec![Value::Str("nope".into())]);
+        assert!(bad.to_vector().is_err());
+    }
+
+    #[test]
+    fn project_row() {
+        let r = MLRow::from_scalars(&[1.0, 2.0, 3.0]);
+        let p = r.project(&[2, 0]).unwrap();
+        assert_eq!(p.values(), &[Value::Scalar(3.0), Value::Scalar(1.0)]);
+        assert!(r.project(&[9]).is_err());
+    }
+}

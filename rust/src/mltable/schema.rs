@@ -1,0 +1,199 @@
+//! Column schema for MLTable: each column has an optional name and a
+//! basic type (paper §III-A).
+
+use super::value::{ColumnType, Value};
+use crate::error::{Error, Result};
+
+/// One column: optional name + type.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Column {
+    pub name: Option<String>,
+    pub ctype: ColumnType,
+}
+
+impl Column {
+    pub fn named(name: &str, ctype: ColumnType) -> Column {
+        Column { name: Some(name.to_string()), ctype }
+    }
+
+    pub fn anon(ctype: ColumnType) -> Column {
+        Column { name: None, ctype }
+    }
+}
+
+/// Table schema: an ordered list of columns.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Schema {
+    pub columns: Vec<Column>,
+}
+
+impl Schema {
+    pub fn new(columns: Vec<Column>) -> Schema {
+        Schema { columns }
+    }
+
+    /// All-Scalar schema of width `d` (featurized data).
+    pub fn numeric(d: usize) -> Schema {
+        Schema {
+            columns: (0..d).map(|_| Column::anon(ColumnType::Scalar)).collect(),
+        }
+    }
+
+    /// Named numeric schema.
+    pub fn numeric_named(names: &[&str]) -> Schema {
+        Schema {
+            columns: names
+                .iter()
+                .map(|n| Column::named(n, ColumnType::Scalar))
+                .collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.columns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.columns.is_empty()
+    }
+
+    /// Column index by name.
+    pub fn index_of(&self, name: &str) -> Result<usize> {
+        self.columns
+            .iter()
+            .position(|c| c.name.as_deref() == Some(name))
+            .ok_or_else(|| Error::Schema(format!("no column named '{name}'")))
+    }
+
+    /// True if every column is numeric (Int/Scalar/Bool — castable to
+    /// MLNumericTable).
+    pub fn is_numeric(&self) -> bool {
+        self.columns
+            .iter()
+            .all(|c| matches!(c.ctype, ColumnType::Int | ColumnType::Scalar | ColumnType::Bool))
+    }
+
+    /// Validate a row against this schema (Empty matches any type).
+    pub fn check_row(&self, values: &[Value]) -> Result<()> {
+        if values.len() != self.len() {
+            return Err(Error::Schema(format!(
+                "row width {} != schema width {}",
+                values.len(),
+                self.len()
+            )));
+        }
+        for (i, (v, c)) in values.iter().zip(&self.columns).enumerate() {
+            if let Some(t) = v.column_type() {
+                if t != c.ctype {
+                    return Err(Error::Schema(format!(
+                        "column {i}: value {v:?} does not match type {:?}",
+                        c.ctype
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Union compatibility: identical types; names must match where both
+    /// sides have them.
+    pub fn union_compatible(&self, other: &Schema) -> Result<()> {
+        if self.len() != other.len() {
+            return Err(Error::Schema(format!(
+                "union: widths differ ({} vs {})",
+                self.len(),
+                other.len()
+            )));
+        }
+        for (i, (a, b)) in self.columns.iter().zip(&other.columns).enumerate() {
+            if a.ctype != b.ctype {
+                return Err(Error::Schema(format!(
+                    "union: column {i} types differ ({:?} vs {:?})",
+                    a.ctype, b.ctype
+                )));
+            }
+            if let (Some(na), Some(nb)) = (&a.name, &b.name) {
+                if na != nb {
+                    return Err(Error::Schema(format!(
+                        "union: column {i} names differ ('{na}' vs '{nb}')"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Schema of a projection.
+    pub fn project(&self, idxs: &[usize]) -> Result<Schema> {
+        let mut cols = Vec::with_capacity(idxs.len());
+        for &i in idxs {
+            let c = self
+                .columns
+                .get(i)
+                .ok_or_else(|| Error::Schema(format!("project: column {i} out of range")))?;
+            cols.push(c.clone());
+        }
+        Ok(Schema::new(cols))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn abc() -> Schema {
+        Schema::new(vec![
+            Column::named("a", ColumnType::Int),
+            Column::named("b", ColumnType::Str),
+            Column::anon(ColumnType::Scalar),
+        ])
+    }
+
+    #[test]
+    fn index_and_project() {
+        let s = abc();
+        assert_eq!(s.index_of("b").unwrap(), 1);
+        assert!(s.index_of("zz").is_err());
+        let p = s.project(&[2, 0]).unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.columns[1].name.as_deref(), Some("a"));
+        assert!(s.project(&[5]).is_err());
+    }
+
+    #[test]
+    fn row_validation() {
+        let s = abc();
+        assert!(s
+            .check_row(&[Value::Int(1), Value::Str("x".into()), Value::Scalar(0.5)])
+            .is_ok());
+        // Empty matches anything
+        assert!(s.check_row(&[Value::Empty, Value::Empty, Value::Empty]).is_ok());
+        // wrong type
+        assert!(s
+            .check_row(&[Value::Str("no".into()), Value::Str("x".into()), Value::Scalar(0.5)])
+            .is_err());
+        // wrong width
+        assert!(s.check_row(&[Value::Int(1)]).is_err());
+    }
+
+    #[test]
+    fn union_compat() {
+        let s = abc();
+        assert!(s.union_compatible(&abc()).is_ok());
+        let mut named_differently = abc();
+        named_differently.columns[0].name = Some("z".into());
+        assert!(s.union_compatible(&named_differently).is_err());
+        let mut anon_ok = abc();
+        anon_ok.columns[0].name = None; // one side anonymous: compatible
+        assert!(s.union_compatible(&anon_ok).is_ok());
+        assert!(s.union_compatible(&Schema::numeric(3)).is_err());
+        assert!(s.union_compatible(&Schema::numeric(2)).is_err());
+    }
+
+    #[test]
+    fn numeric_detection() {
+        assert!(Schema::numeric(4).is_numeric());
+        assert!(!abc().is_numeric());
+        assert_eq!(Schema::numeric_named(&["x", "y"]).index_of("y").unwrap(), 1);
+    }
+}

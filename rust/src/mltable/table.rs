@@ -1,0 +1,613 @@
+//! MLTable: the paper's table abstraction (Fig. A1 API), backed by the
+//! dataflow engine's `Dataset<MLRow>`.
+
+use std::hash::{Hash, Hasher};
+use std::rc::Rc;
+
+use super::numeric::MLNumericTable;
+use super::row::MLRow;
+use super::schema::Schema;
+use super::value::Value;
+use crate::engine::{Dataset, EngineContext};
+use crate::error::{Error, Result};
+use crate::localmatrix::{DenseMatrix, LocalMatrix};
+
+/// Hashable key wrapper so rows can be keyed by any cell value
+/// (Scalar keys hash by bit pattern; NaN keys are rejected upstream).
+#[derive(Debug, Clone, PartialEq)]
+pub struct KeyValue(pub Value);
+
+impl Eq for KeyValue {}
+
+impl Hash for KeyValue {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        match &self.0 {
+            Value::Str(s) => {
+                0u8.hash(state);
+                s.hash(state);
+            }
+            Value::Int(i) => {
+                1u8.hash(state);
+                i.hash(state);
+            }
+            Value::Bool(b) => {
+                2u8.hash(state);
+                b.hash(state);
+            }
+            Value::Scalar(x) => {
+                3u8.hash(state);
+                x.to_bits().hash(state);
+            }
+            Value::Empty => 4u8.hash(state),
+        }
+    }
+}
+
+/// The paper's MLTable: a schema'd, partitioned collection of rows.
+#[derive(Clone)]
+pub struct MLTable {
+    pub(crate) data: Dataset<MLRow>,
+    pub(crate) schema: Schema,
+}
+
+impl MLTable {
+    /// Build from rows (validates against the schema).
+    pub fn from_rows(
+        ctx: &Rc<EngineContext>,
+        rows: Vec<MLRow>,
+        schema: Schema,
+        partitions: usize,
+    ) -> Result<MLTable> {
+        for (i, r) in rows.iter().enumerate() {
+            schema.check_row(r.values()).map_err(|e| {
+                Error::Schema(format!("row {i}: {e}"))
+            })?;
+        }
+        Ok(MLTable {
+            data: ctx.parallelize(rows, partitions),
+            schema,
+        })
+    }
+
+    /// Wrap an existing dataset (caller guarantees schema conformance —
+    /// used by transformation outputs).
+    pub fn from_dataset(data: Dataset<MLRow>, schema: Schema) -> MLTable {
+        MLTable { data, schema }
+    }
+
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    pub fn dataset(&self) -> &Dataset<MLRow> {
+        &self.data
+    }
+
+    pub fn context(&self) -> Rc<EngineContext> {
+        self.data.context()
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.data.num_partitions()
+    }
+
+    // ---- Fig. A1 operations -------------------------------------------
+
+    /// `numRows` — row count (an action).
+    pub fn num_rows(&self) -> Result<usize> {
+        self.data.count()
+    }
+
+    /// `numCols` — schema width.
+    pub fn num_cols(&self) -> usize {
+        self.schema.len()
+    }
+
+    /// `project(Seq[Index])` — select a subset of columns.
+    pub fn project(&self, idxs: &[usize]) -> Result<MLTable> {
+        let schema = self.schema.project(idxs)?;
+        let idxs = idxs.to_vec();
+        let data = self.data.map(move |r| {
+            r.project(&idxs).expect("validated projection")
+        });
+        Ok(MLTable { data, schema })
+    }
+
+    /// Project by column names.
+    pub fn project_named(&self, names: &[&str]) -> Result<MLTable> {
+        let idxs = names
+            .iter()
+            .map(|n| self.schema.index_of(n))
+            .collect::<Result<Vec<_>>>()?;
+        self.project(&idxs)
+    }
+
+    /// `union(MLTable)` — concatenate tables with identical schemas.
+    pub fn union(&self, other: &MLTable) -> Result<MLTable> {
+        self.schema.union_compatible(&other.schema)?;
+        Ok(MLTable {
+            data: self.data.union(&other.data),
+            schema: self.schema.clone(),
+        })
+    }
+
+    /// `filter(MLRow => Bool)`.
+    pub fn filter(&self, f: impl Fn(&MLRow) -> bool + 'static) -> MLTable {
+        MLTable {
+            data: self.data.filter(f),
+            schema: self.schema.clone(),
+        }
+    }
+
+    /// `map(MLRow => MLRow)` — caller supplies the output schema.
+    pub fn map(&self, schema: Schema, f: impl Fn(&MLRow) -> MLRow + 'static) -> MLTable {
+        MLTable {
+            data: self.data.map(f),
+            schema,
+        }
+    }
+
+    /// `flatMap(MLRow => TraversableOnce[MLRow])`.
+    pub fn flat_map(
+        &self,
+        schema: Schema,
+        f: impl Fn(&MLRow) -> Vec<MLRow> + 'static,
+    ) -> MLTable {
+        MLTable {
+            data: self.data.flat_map(f),
+            schema,
+        }
+    }
+
+    /// `reduce(Seq[MLRow] => MLRow)` — associative+commutative combine of
+    /// all rows down to one.
+    pub fn reduce(&self, f: impl Fn(&MLRow, &MLRow) -> MLRow) -> Result<Option<MLRow>> {
+        self.data.reduce(|a, b| f(&a, &b))
+    }
+
+    /// `reduceByKey(keyCol, combine)` — combine rows per distinct value of
+    /// a key column. Returns a table with the same schema.
+    pub fn reduce_by_key(
+        &self,
+        key_col: usize,
+        f: impl Fn(&MLRow, &MLRow) -> MLRow + 'static,
+    ) -> Result<MLTable> {
+        if key_col >= self.schema.len() {
+            return Err(Error::Schema(format!("reduceByKey: column {key_col} out of range")));
+        }
+        let keyed = self.data.map(move |r| {
+            (KeyValue(r[key_col].clone()), r.clone())
+        });
+        let reduced = keyed.reduce_by_key(move |a, b| f(&a, &b));
+        Ok(MLTable {
+            data: reduced.map(|(_, r)| r.clone()),
+            schema: self.schema.clone(),
+        })
+    }
+
+    /// `join(other, Seq[Index])` — inner equi-join on shared columns
+    /// (indices interpreted in both schemas). Output schema: self's
+    /// columns followed by other's non-key columns.
+    pub fn join(&self, other: &MLTable, key_cols: &[usize]) -> Result<MLTable> {
+        for &k in key_cols {
+            if k >= self.schema.len() || k >= other.schema.len() {
+                return Err(Error::Schema(format!("join: key column {k} out of range")));
+            }
+        }
+        let kc: Vec<usize> = key_cols.to_vec();
+        let kc2 = kc.clone();
+        let keyed_a = self.data.map(move |r| {
+            let key: Vec<KeyValue> = kc.iter().map(|&i| KeyValue(r[i].clone())).collect();
+            (KeyHash(key), r.clone())
+        });
+        let keyed_b = other.data.map(move |r| {
+            let key: Vec<KeyValue> = kc2.iter().map(|&i| KeyValue(r[i].clone())).collect();
+            (KeyHash(key), r.clone())
+        });
+        let other_nonkey: Vec<usize> = (0..other.schema.len())
+            .filter(|i| !key_cols.contains(i))
+            .collect();
+        let ok2 = other_nonkey.clone();
+        let joined = keyed_a.join(&keyed_b).map(move |(_, (ra, rb))| {
+            let mut vals = ra.values().to_vec();
+            for &i in &ok2 {
+                vals.push(rb[i].clone());
+            }
+            MLRow::new(vals)
+        });
+        let mut cols = self.schema.columns.clone();
+        for &i in &other_nonkey {
+            cols.push(other.schema.columns[i].clone());
+        }
+        Ok(MLTable {
+            data: joined,
+            schema: Schema::new(cols),
+        })
+    }
+
+    /// `matrixBatchMap(LocalMatrix => LocalMatrix)` — run a batch function
+    /// on each partition's rows as a matrix; outputs concatenate into an
+    /// MLNumericTable (Fig. A1). The core primitive of the SGD optimizer
+    /// (Fig. A4 `data.matrixBatchMap(localSGD(...))`).
+    pub fn matrix_batch_map(
+        &self,
+        f: impl Fn(usize, &LocalMatrix) -> Result<LocalMatrix> + 'static,
+    ) -> Result<MLNumericTable> {
+        if !self.schema.is_numeric() {
+            return Err(Error::Schema(
+                "matrixBatchMap requires an all-numeric table; cast via to_numeric()".into(),
+            ));
+        }
+        let mapped = self.data.map_partitions(move |p, rows| {
+            let m = rows_to_matrix(rows)?;
+            let out = f(p, &LocalMatrix::Dense(m))?;
+            matrix_to_rows(&out)
+        });
+        // width of output is data-dependent; peek partition 0
+        let d = mapped.partition(0)?.first().map(|r| r.len()).unwrap_or(0);
+        MLNumericTable::new(MLTable {
+            data: mapped,
+            schema: Schema::numeric(d),
+        })
+    }
+
+    /// Cast to MLNumericTable (paper §III-A: "once data is featurized, it
+    /// can be cast into an MLNumericTable").
+    pub fn to_numeric(&self) -> Result<MLNumericTable> {
+        MLNumericTable::new(self.clone())
+    }
+
+    // ---- actions / utilities -----------------------------------------
+
+    pub fn collect(&self) -> Result<Vec<MLRow>> {
+        self.data.collect()
+    }
+
+    /// Deterministic Bernoulli sample of rows (fraction in [0, 1]).
+    pub fn sample(&self, fraction: f64, seed: u64) -> MLTable {
+        use std::cell::RefCell;
+        let rngs: RefCell<std::collections::HashMap<usize, crate::util::rng::Rng>> =
+            RefCell::new(std::collections::HashMap::new());
+        let data = self.data.map_partitions(move |p, rows| {
+            let mut rngs = rngs.borrow_mut();
+            let rng = rngs
+                .entry(p)
+                .or_insert_with(|| crate::util::rng::Rng::new(seed ^ (p as u64) << 17));
+            Ok(rows
+                .iter()
+                .filter(|_| rng.f64() < fraction)
+                .cloned()
+                .collect())
+        });
+        MLTable {
+            data,
+            schema: self.schema.clone(),
+        }
+    }
+
+    /// Distinct rows (driver-side dedup keyed on all cells; preserves
+    /// first occurrence order).
+    pub fn distinct(&self) -> Result<MLTable> {
+        let rows = self.data.collect()?;
+        let mut seen: std::collections::HashSet<Vec<KeyValue>> = std::collections::HashSet::new();
+        let mut out = Vec::new();
+        for r in rows {
+            let key: Vec<KeyValue> = r.values().iter().cloned().map(KeyValue).collect();
+            if seen.insert(key) {
+                out.push(r);
+            }
+        }
+        let parts = self.num_partitions();
+        Ok(MLTable {
+            data: self.context().parallelize(out, parts),
+            schema: self.schema.clone(),
+        })
+    }
+
+    /// First `n` rows (in partition order).
+    pub fn take(&self, n: usize) -> Result<Vec<MLRow>> {
+        let mut out = Vec::with_capacity(n);
+        for p in 0..self.num_partitions() {
+            if out.len() >= n {
+                break;
+            }
+            for r in self.data.partition(p)?.iter() {
+                if out.len() >= n {
+                    break;
+                }
+                out.push(r.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Sort by a column (driver-side; Scalars/Ints compare numerically,
+    /// Strs lexicographically, Empty sorts first).
+    pub fn sort_by(&self, col: usize, descending: bool) -> Result<MLTable> {
+        if col >= self.schema.len() {
+            return Err(Error::Schema(format!("sortBy: column {col} out of range")));
+        }
+        let mut rows = self.data.collect()?;
+        let key = |r: &MLRow| -> (u8, f64, String) {
+            match &r[col] {
+                Value::Empty => (0, 0.0, String::new()),
+                v => match v.as_scalar() {
+                    Some(x) => (1, x, String::new()),
+                    None => (2, 0.0, v.to_string()),
+                },
+            }
+        };
+        rows.sort_by(|a, b| {
+            let (ka, kb) = (key(a), key(b));
+            let ord = ka
+                .0
+                .cmp(&kb.0)
+                .then(ka.1.partial_cmp(&kb.1).unwrap_or(std::cmp::Ordering::Equal))
+                .then(ka.2.cmp(&kb.2));
+            if descending {
+                ord.reverse()
+            } else {
+                ord
+            }
+        });
+        let parts = self.num_partitions();
+        Ok(MLTable {
+            data: self.context().parallelize(rows, parts),
+            schema: self.schema.clone(),
+        })
+    }
+
+    pub fn cache(self) -> MLTable {
+        MLTable {
+            data: self.data.cache(),
+            schema: self.schema,
+        }
+    }
+}
+
+/// Composite join key.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct KeyHash(pub Vec<KeyValue>);
+
+/// Partition rows -> dense matrix (numeric cells only).
+pub(crate) fn rows_to_matrix(rows: &[MLRow]) -> Result<DenseMatrix> {
+    let r = rows.len();
+    let c = rows.first().map(|x| x.len()).unwrap_or(0);
+    let mut data = Vec::with_capacity(r * c);
+    for (i, row) in rows.iter().enumerate() {
+        if row.len() != c {
+            return Err(Error::Schema(format!(
+                "ragged partition: row {i} has {} cells, expected {c}",
+                row.len()
+            )));
+        }
+        for (j, v) in row.values().iter().enumerate() {
+            data.push(v.as_scalar().ok_or_else(|| {
+                Error::Schema(format!("non-numeric cell at ({i},{j}): {v:?}"))
+            })?);
+        }
+    }
+    DenseMatrix::new(r, c, data)
+}
+
+/// Matrix -> rows of Scalars.
+pub(crate) fn matrix_to_rows(m: &LocalMatrix) -> Result<Vec<MLRow>> {
+    let d = m.to_dense();
+    Ok((0..d.rows)
+        .map(|r| MLRow::from_scalars(d.row(r)))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::schema::Column;
+    use super::super::value::ColumnType;
+    use super::*;
+
+    fn ctx() -> Rc<EngineContext> {
+        EngineContext::new()
+    }
+
+    fn people(ctx: &Rc<EngineContext>) -> MLTable {
+        let schema = Schema::new(vec![
+            Column::named("id", ColumnType::Int),
+            Column::named("name", ColumnType::Str),
+            Column::named("score", ColumnType::Scalar),
+        ]);
+        let rows = vec![
+            MLRow::new(vec![1i64.into(), "ann".into(), 0.5.into()]),
+            MLRow::new(vec![2i64.into(), "bob".into(), 1.5.into()]),
+            MLRow::new(vec![3i64.into(), "cat".into(), 2.5.into()]),
+            MLRow::new(vec![1i64.into(), "ann2".into(), 3.5.into()]),
+        ];
+        MLTable::from_rows(ctx, rows, schema, 2).unwrap()
+    }
+
+    #[test]
+    fn schema_validated_on_construction() {
+        let c = ctx();
+        let schema = Schema::new(vec![Column::named("x", ColumnType::Int)]);
+        let bad = vec![MLRow::new(vec!["oops".into()])];
+        assert!(MLTable::from_rows(&c, bad, schema, 1).is_err());
+    }
+
+    #[test]
+    fn num_rows_cols_project() {
+        let c = ctx();
+        let t = people(&c);
+        assert_eq!(t.num_rows().unwrap(), 4);
+        assert_eq!(t.num_cols(), 3);
+        let p = t.project_named(&["score", "id"]).unwrap();
+        assert_eq!(p.num_cols(), 2);
+        let rows = p.collect().unwrap();
+        assert_eq!(rows[0].values()[0], Value::Scalar(0.5));
+        assert_eq!(rows[0].values()[1], Value::Int(1));
+    }
+
+    #[test]
+    fn filter_map_flatmap() {
+        let c = ctx();
+        let t = people(&c);
+        let f = t.filter(|r| r[2].as_scalar().unwrap() > 1.0);
+        assert_eq!(f.num_rows().unwrap(), 3);
+
+        let doubled = t.map(Schema::numeric(1), |r| {
+            MLRow::from_scalars(&[r[2].as_scalar().unwrap() * 2.0])
+        });
+        let vals: Vec<f64> = doubled
+            .collect()
+            .unwrap()
+            .iter()
+            .map(|r| r[0].as_scalar().unwrap())
+            .collect();
+        assert_eq!(vals, vec![1.0, 3.0, 5.0, 7.0]);
+
+        let fm = t.flat_map(Schema::numeric(1), |r| {
+            vec![
+                MLRow::from_scalars(&[r[0].as_int().unwrap() as f64]),
+                MLRow::from_scalars(&[0.0]),
+            ]
+        });
+        assert_eq!(fm.num_rows().unwrap(), 8);
+    }
+
+    #[test]
+    fn union_requires_compatible_schema() {
+        let c = ctx();
+        let t = people(&c);
+        let u = t.union(&people(&c)).unwrap();
+        assert_eq!(u.num_rows().unwrap(), 8);
+        let other = MLTable::from_rows(
+            &c,
+            vec![MLRow::from_scalars(&[1.0])],
+            Schema::numeric(1),
+            1,
+        )
+        .unwrap();
+        assert!(t.union(&other).is_err());
+    }
+
+    #[test]
+    fn reduce_by_key_combines_per_key() {
+        let c = ctx();
+        let t = people(&c);
+        let r = t
+            .reduce_by_key(0, |a, b| {
+                MLRow::new(vec![
+                    a[0].clone(),
+                    a[1].clone(),
+                    Value::Scalar(a[2].as_scalar().unwrap() + b[2].as_scalar().unwrap()),
+                ])
+            })
+            .unwrap();
+        let mut rows = r.collect().unwrap();
+        rows.sort_by_key(|r| r[0].as_int().unwrap());
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0][2].as_scalar().unwrap(), 4.0); // ids 1: 0.5+3.5
+        assert!(t.reduce_by_key(9, |a, _| a.clone()).is_err());
+    }
+
+    #[test]
+    fn join_on_key_column() {
+        let c = ctx();
+        let t = people(&c);
+        let extra = MLTable::from_rows(
+            &c,
+            vec![
+                MLRow::new(vec![1i64.into(), Value::Scalar(10.0)]),
+                MLRow::new(vec![3i64.into(), Value::Scalar(30.0)]),
+            ],
+            Schema::new(vec![
+                Column::named("id", ColumnType::Int),
+                Column::named("bonus", ColumnType::Scalar),
+            ]),
+            1,
+        )
+        .unwrap();
+        let j = t.join(&extra, &[0]).unwrap();
+        assert_eq!(j.num_cols(), 4); // id, name, score, bonus
+        let mut rows = j.collect().unwrap();
+        rows.sort_by_key(|r| (r[0].as_int().unwrap(), r[1].as_str().unwrap().to_string()));
+        assert_eq!(rows.len(), 3); // ids 1 (x2 rows), 3
+        assert_eq!(rows[0][3].as_scalar().unwrap(), 10.0);
+    }
+
+    #[test]
+    fn matrix_batch_map_runs_per_partition() {
+        let c = ctx();
+        let rows: Vec<MLRow> = (0..6).map(|i| MLRow::from_scalars(&[i as f64, 1.0])).collect();
+        let t = MLTable::from_rows(&c, rows, Schema::numeric(2), 3).unwrap();
+        // per-partition column sums -> one row per partition
+        let nt = t
+            .matrix_batch_map(|_, m| {
+                let d = m.to_dense();
+                let mut sums = vec![0.0; d.cols];
+                for r in 0..d.rows {
+                    for (j, s) in sums.iter_mut().enumerate() {
+                        *s += d.get(r, j);
+                    }
+                }
+                LocalMatrix::dense(1, d.cols, sums)
+            })
+            .unwrap();
+        assert_eq!(nt.num_rows().unwrap(), 3);
+        let m = nt.collect_matrix().unwrap();
+        assert_eq!(m.get(0, 1), 2.0); // partition 0 had 2 rows
+        let total: f64 = (0..3).map(|p| m.get(p, 0)).sum();
+        assert_eq!(total, 15.0);
+    }
+
+    #[test]
+    fn matrix_batch_map_rejects_non_numeric() {
+        let c = ctx();
+        let t = people(&c);
+        assert!(t.matrix_batch_map(|_, m| Ok(m.clone())).is_err());
+    }
+
+    #[test]
+    fn sample_deterministic_and_bounded() {
+        let c = ctx();
+        let rows: Vec<MLRow> = (0..1000).map(|i| MLRow::from_scalars(&[i as f64])).collect();
+        let t = MLTable::from_rows(&c, rows, Schema::numeric(1), 4).unwrap();
+        let s1 = t.sample(0.3, 7).num_rows().unwrap();
+        let s2 = t.sample(0.3, 7).num_rows().unwrap();
+        assert_eq!(s1, s2, "same seed, same sample");
+        assert!(s1 > 200 && s1 < 400, "fraction off: {s1}");
+        assert_eq!(t.sample(0.0, 1).num_rows().unwrap(), 0);
+        assert_eq!(t.sample(1.0, 1).num_rows().unwrap(), 1000);
+    }
+
+    #[test]
+    fn distinct_and_take() {
+        let c = ctx();
+        let rows = vec![
+            MLRow::from_scalars(&[1.0]),
+            MLRow::from_scalars(&[2.0]),
+            MLRow::from_scalars(&[1.0]),
+        ];
+        let t = MLTable::from_rows(&c, rows, Schema::numeric(1), 2).unwrap();
+        let d = t.distinct().unwrap();
+        assert_eq!(d.num_rows().unwrap(), 2);
+        let first = t.take(2).unwrap();
+        assert_eq!(first.len(), 2);
+        assert_eq!(first[0][0].as_scalar().unwrap(), 1.0);
+        assert_eq!(t.take(100).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn sort_by_column() {
+        let c = ctx();
+        let t = people(&c);
+        let sorted = t.sort_by(2, false).unwrap();
+        let scores: Vec<f64> = sorted
+            .collect()
+            .unwrap()
+            .iter()
+            .map(|r| r[2].as_scalar().unwrap())
+            .collect();
+        assert_eq!(scores, vec![0.5, 1.5, 2.5, 3.5]);
+        let desc = t.sort_by(1, true).unwrap();
+        assert_eq!(desc.collect().unwrap()[0][1].as_str().unwrap(), "cat");
+        assert!(t.sort_by(9, false).is_err());
+    }
+}

@@ -1,0 +1,165 @@
+//! Cell values for MLTable (paper §III-A): String, Integer, Boolean,
+//! Scalar, and the special "Empty" value any cell may hold.
+
+use std::fmt;
+
+/// One table cell.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Bool(bool),
+    Scalar(f64),
+    /// Missing data — first-class per the paper ("any cell in the table
+    /// can be 'Empty'").
+    Empty,
+}
+
+/// Column type tags (the schema side of [`Value`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ColumnType {
+    Str,
+    Int,
+    Bool,
+    Scalar,
+}
+
+impl Value {
+    pub fn column_type(&self) -> Option<ColumnType> {
+        match self {
+            Value::Str(_) => Some(ColumnType::Str),
+            Value::Int(_) => Some(ColumnType::Int),
+            Value::Bool(_) => Some(ColumnType::Bool),
+            Value::Scalar(_) => Some(ColumnType::Scalar),
+            Value::Empty => None, // Empty fits any column
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        matches!(self, Value::Empty)
+    }
+
+    /// Numeric view: Int/Scalar/Bool coerce; Empty maps to 0.0 (the
+    /// MATLAB-style convention MLNumericTable uses); Str fails.
+    pub fn as_scalar(&self) -> Option<f64> {
+        match self {
+            Value::Scalar(x) => Some(*x),
+            Value::Int(i) => Some(*i as f64),
+            Value::Bool(b) => Some(if *b { 1.0 } else { 0.0 }),
+            Value::Empty => Some(0.0),
+            Value::Str(_) => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            Value::Bool(b) => Some(i64::from(*b)),
+            _ => None,
+        }
+    }
+
+    /// Parse a raw CSV token with type inference priority
+    /// Int > Scalar > Bool > Str; empty string -> Empty.
+    pub fn parse_infer(tok: &str) -> Value {
+        let t = tok.trim();
+        if t.is_empty() {
+            return Value::Empty;
+        }
+        if let Ok(i) = t.parse::<i64>() {
+            return Value::Int(i);
+        }
+        if let Ok(f) = t.parse::<f64>() {
+            return Value::Scalar(f);
+        }
+        match t.to_ascii_lowercase().as_str() {
+            "true" => Value::Bool(true),
+            "false" => Value::Bool(false),
+            _ => Value::Str(t.to_string()),
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "{s}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Scalar(x) => write!(f, "{x}"),
+            Value::Empty => write!(f, ""),
+        }
+    }
+}
+
+impl From<f64> for Value {
+    fn from(x: f64) -> Value {
+        Value::Scalar(x)
+    }
+}
+impl From<i64> for Value {
+    fn from(x: i64) -> Value {
+        Value::Int(x)
+    }
+}
+impl From<bool> for Value {
+    fn from(x: bool) -> Value {
+        Value::Bool(x)
+    }
+}
+impl From<&str> for Value {
+    fn from(x: &str) -> Value {
+        Value::Str(x.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(x: String) -> Value {
+        Value::Str(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inference_priority() {
+        assert_eq!(Value::parse_infer("42"), Value::Int(42));
+        assert_eq!(Value::parse_infer("4.5"), Value::Scalar(4.5));
+        assert_eq!(Value::parse_infer("-1e3"), Value::Scalar(-1000.0));
+        assert_eq!(Value::parse_infer("true"), Value::Bool(true));
+        assert_eq!(Value::parse_infer("FALSE"), Value::Bool(false));
+        assert_eq!(Value::parse_infer("cat"), Value::Str("cat".into()));
+        assert_eq!(Value::parse_infer("  "), Value::Empty);
+    }
+
+    #[test]
+    fn scalar_coercion() {
+        assert_eq!(Value::Int(3).as_scalar(), Some(3.0));
+        assert_eq!(Value::Bool(true).as_scalar(), Some(1.0));
+        assert_eq!(Value::Empty.as_scalar(), Some(0.0));
+        assert_eq!(Value::Str("x".into()).as_scalar(), None);
+        assert_eq!(Value::Scalar(2.5).as_scalar(), Some(2.5));
+    }
+
+    #[test]
+    fn type_tags() {
+        assert_eq!(Value::Int(1).column_type(), Some(ColumnType::Int));
+        assert_eq!(Value::Empty.column_type(), None);
+        assert!(Value::Empty.is_empty());
+    }
+
+    #[test]
+    fn display_roundtrip_for_numerics() {
+        assert_eq!(Value::Int(7).to_string(), "7");
+        assert_eq!(Value::Scalar(1.5).to_string(), "1.5");
+        assert_eq!(Value::Empty.to_string(), "");
+    }
+}

@@ -1,0 +1,87 @@
+//! Optimization (paper §III-C): "we treat optimization as a first class
+//! citizen in our API, and the system is built to support new optimizers."
+//!
+//! The split mirrors Fig. A4: an *optimizer* ([`sgd::SGD`], [`gd::GD`])
+//! owns the distributed loop (rounds, parameter averaging, communication
+//! charging), while an *algorithm* supplies the partition-local compute as
+//! a [`LocalStepProvider`] — logistic regression plugs in an XLA-backed
+//! provider, linear regression / SVM plug in different gradients, which is
+//! exactly the paper's "simply changing the expression of the gradient
+//! function" claim.
+
+pub mod gd;
+pub mod prox;
+pub mod sgd;
+
+pub use gd::{GdParams, GD};
+pub use prox::Reg;
+pub use sgd::{SgdParams, SgdResult, SGD};
+
+use crate::error::Result;
+
+/// Partition-local compute for a distributed first-order optimizer.
+///
+/// Implementations hold their data already partitioned (and, for the XLA
+/// path, already padded into `Tensor`s) so the per-round hot path does no
+/// re-marshalling.
+pub trait LocalStepProvider {
+    /// Model dimension (padded, for XLA-backed providers).
+    fn dim(&self) -> usize;
+
+    /// Number of data partitions.
+    fn num_partitions(&self) -> usize;
+
+    /// Weight of partition `p` in the parameter average (its real row
+    /// count; padding rows contribute nothing).
+    fn partition_weight(&self, p: usize) -> f64;
+
+    /// One local SGD epoch over partition `p` starting from `w`
+    /// (Fig. A4 `localSGD`). Returns the locally-updated weights.
+    fn local_epoch(&self, p: usize, w: &[f32], lr: f32) -> Result<Vec<f32>>;
+
+    /// Full-batch gradient + loss contribution of partition `p` at `w`
+    /// (for GD and for loss curves). Returns (grad, loss, examples).
+    fn local_grad(&self, p: usize, w: &[f32]) -> Result<(Vec<f32>, f64, f64)>;
+
+    /// Serialized model size in bytes (what one allreduce moves).
+    fn model_bytes(&self) -> u64 {
+        (self.dim() * 4) as u64
+    }
+}
+
+/// Weighted average of per-partition weight vectors — the master-side
+/// combine of Fig. A4 (`.reduce(_ plus _) over data.partitions.length`,
+/// generalized to weight by partition size for unbalanced partitions).
+pub fn average_weights(locals: &[(Vec<f32>, f64)]) -> Vec<f32> {
+    assert!(!locals.is_empty());
+    let d = locals[0].0.len();
+    let total: f64 = locals.iter().map(|(_, w)| w).sum();
+    let mut out = vec![0.0f32; d];
+    for (vec, wt) in locals {
+        let f = (wt / total) as f32;
+        for (o, &x) in out.iter_mut().zip(vec) {
+            *o += f * x;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn average_weights_weighted() {
+        let a = (vec![1.0f32, 0.0], 1.0);
+        let b = (vec![0.0f32, 2.0], 3.0);
+        let avg = average_weights(&[a, b]);
+        assert!((avg[0] - 0.25).abs() < 1e-6);
+        assert!((avg[1] - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn average_single() {
+        let avg = average_weights(&[(vec![5.0f32], 2.0)]);
+        assert_eq!(avg, vec![5.0]);
+    }
+}

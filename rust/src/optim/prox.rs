@@ -1,0 +1,123 @@
+//! Regularization: L2 shrinkage and proximal operators for L1 / elastic
+//! net — the paper's "(L1, L2, elastic net)-regularized variants ... by
+//! adding a proximal operator in the case of L1-regularization" (§IV).
+
+/// Regularization spec.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Reg {
+    None,
+    /// L2 ridge with strength lambda (applied as multiplicative shrinkage
+    /// inside the gradient step).
+    L2(f64),
+    /// L1 lasso with strength lambda (applied as a prox / soft-threshold
+    /// after each averaging round).
+    L1(f64),
+    /// Elastic net: (l1, l2).
+    Elastic(f64, f64),
+}
+
+impl Reg {
+    /// The L2 component (0 if none).
+    pub fn l2(&self) -> f64 {
+        match self {
+            Reg::L2(l) => *l,
+            Reg::Elastic(_, l2) => *l2,
+            _ => 0.0,
+        }
+    }
+
+    /// The L1 component (0 if none).
+    pub fn l1(&self) -> f64 {
+        match self {
+            Reg::L1(l) => *l,
+            Reg::Elastic(l1, _) => *l1,
+            _ => 0.0,
+        }
+    }
+
+    /// Apply the proximal step for the non-smooth (L1) part and the
+    /// shrinkage for the L2 part, at step size `eta`, in place.
+    pub fn apply_prox(&self, w: &mut [f32], eta: f64) {
+        let l1 = self.l1();
+        let l2 = self.l2();
+        if l1 == 0.0 && l2 == 0.0 {
+            return;
+        }
+        let shrink = (1.0 / (1.0 + eta * l2)) as f32;
+        let thresh = (eta * l1) as f32;
+        for x in w.iter_mut() {
+            let mut v = *x * shrink;
+            if thresh > 0.0 {
+                v = soft_threshold(v, thresh);
+            }
+            *x = v;
+        }
+    }
+
+    /// Regularization term's contribution to the objective at `w`.
+    pub fn penalty(&self, w: &[f32]) -> f64 {
+        let l1: f64 = w.iter().map(|&x| x.abs() as f64).sum();
+        let l2: f64 = w.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        self.l1() * l1 + 0.5 * self.l2() * l2
+    }
+}
+
+/// Soft-thresholding operator: prox of `t * |.|`.
+pub fn soft_threshold(x: f32, t: f32) -> f32 {
+    if x > t {
+        x - t
+    } else if x < -t {
+        x + t
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn soft_threshold_cases() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(-0.5, 1.0), 0.0);
+    }
+
+    #[test]
+    fn l1_prox_sparsifies() {
+        let mut w = vec![0.05f32, -0.5, 2.0];
+        Reg::L1(1.0).apply_prox(&mut w, 0.1);
+        assert_eq!(w[0], 0.0);
+        assert!((w[1] + 0.4).abs() < 1e-6);
+        assert!((w[2] - 1.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn l2_shrinks_multiplicatively() {
+        let mut w = vec![1.0f32, -2.0];
+        Reg::L2(1.0).apply_prox(&mut w, 1.0);
+        assert!((w[0] - 0.5).abs() < 1e-6);
+        assert!((w[1] + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn elastic_combines() {
+        let mut w = vec![1.0f32];
+        Reg::Elastic(0.1, 1.0).apply_prox(&mut w, 1.0);
+        // first shrink to 0.5, then soft-threshold by 0.1 -> 0.4
+        assert!((w[0] - 0.4).abs() < 1e-6);
+        assert_eq!(Reg::None.l1(), 0.0);
+        assert!(Reg::Elastic(0.1, 1.0).penalty(&[1.0]) > 0.0);
+    }
+
+    #[test]
+    fn none_is_identity() {
+        let mut w = vec![1.5f32, -2.5];
+        let orig = w.clone();
+        Reg::None.apply_prox(&mut w, 0.5);
+        assert_eq!(w, orig);
+        assert_eq!(Reg::None.penalty(&w), 0.0);
+    }
+}

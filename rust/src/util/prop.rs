@@ -1,0 +1,108 @@
+//! Property-testing helper (offline replacement for `proptest`).
+//!
+//! `check` runs a property over `n` randomized cases drawn from a seeded
+//! [`Rng`]; on failure it re-runs the failing seed with shrunk "size"
+//! parameters to report the smallest size at which the property fails.
+//! Used by `rust/tests/proptests.rs` for engine/mltable/localmatrix
+//! invariants.
+
+use super::rng::Rng;
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub struct PropFailure {
+    pub case: usize,
+    pub seed: u64,
+    pub size: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for PropFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "property failed at case {} (seed={}, size={}): {}",
+            self.case, self.seed, self.size, self.message
+        )
+    }
+}
+
+/// Run `prop(rng, size)` for `cases` randomized cases with sizes cycling
+/// through 1..=max_size. `prop` returns Err(message) on violation. On
+/// failure, retries smaller sizes with the same seed to shrink before
+/// panicking with a reproducible report.
+pub fn check<F>(name: &str, seed: u64, cases: usize, max_size: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    let mut meta = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = meta.next_u64();
+        let size = 1 + (case % max_size);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // shrink: find the smallest size (same seed) that still fails
+            let mut smallest = (size, msg.clone());
+            for s in 1..size {
+                let mut r2 = Rng::new(case_seed);
+                if let Err(m2) = prop(&mut r2, s) {
+                    smallest = (s, m2);
+                    break;
+                }
+            }
+            panic!(
+                "{}",
+                PropFailure {
+                    case,
+                    seed: case_seed,
+                    size: smallest.0,
+                    message: format!("[{name}] {}", smallest.1),
+                }
+            );
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Approximate float equality for property bodies.
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    let scale = 1.0_f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add_commutes", 1, 50, 10, |rng, _| {
+            let (a, b) = (rng.f64(), rng.f64());
+            close(a + b, b + a, 1e-12)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always_fails")]
+    fn failing_property_reports() {
+        check("always_fails", 2, 10, 5, |_, _| ensure(false, "always_fails"));
+    }
+
+    #[test]
+    fn close_scales_tolerance() {
+        assert!(close(1e9, 1e9 + 1.0, 1e-6).is_ok());
+        assert!(close(1.0, 1.1, 1e-6).is_err());
+    }
+}

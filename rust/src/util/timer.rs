@@ -1,0 +1,81 @@
+//! Stopwatch + timing statistics helpers used by the bench harness and
+//! the engine's per-task accounting.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Measure `f`, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let sw = Stopwatch::start();
+    let r = f();
+    (r, sw.elapsed_secs())
+}
+
+/// Run `f` `warmup` times untimed then `iters` times timed; returns the
+/// per-iteration timings in seconds. The bench harness's core primitive
+/// (criterion surrogate).
+pub fn sample<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Vec<f64> {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    (0..iters)
+        .map(|_| {
+            let sw = Stopwatch::start();
+            std::hint::black_box(f());
+            sw.elapsed_secs()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_secs();
+        let b = sw.elapsed_secs();
+        assert!(b >= a && a >= 0.0);
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, s) = time_it(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn sample_counts() {
+        let mut calls = 0;
+        let t = sample(2, 5, || calls += 1);
+        assert_eq!(t.len(), 5);
+        assert_eq!(calls, 7);
+    }
+}

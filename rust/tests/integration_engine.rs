@@ -1,0 +1,132 @@
+//! Integration: engine + cluster — multi-stage dataflows, fault
+//! injection with recovery mid-pipeline, and simulated-time accounting
+//! across a full training-shaped loop.
+
+use mli::cluster::{CommTopology, SimCluster};
+use mli::engine::EngineContext;
+
+#[test]
+fn multi_stage_pipeline_with_shuffles() {
+    let ctx = EngineContext::new();
+    // word-count-like pipeline over synthetic records
+    let records = ctx.parallelize(
+        (0..1000).map(|i| format!("user{} action{}", i % 37, i % 5)).collect::<Vec<_>>(),
+        8,
+    );
+    let counts = records
+        .flat_map(|line| line.split(' ').map(|s| s.to_string()).collect::<Vec<_>>())
+        .map(|tok| (tok.clone(), 1u64))
+        .reduce_by_key(|a, b| a + b);
+    let total: u64 = counts.collect().unwrap().iter().map(|(_, c)| c).sum();
+    assert_eq!(total, 2000); // 2 tokens per record
+
+    // join the counts with a lookup table
+    let lookup = ctx.parallelize(
+        (0..37).map(|i| (format!("user{i}"), i)).collect::<Vec<_>>(),
+        4,
+    );
+    let joined = counts.join(&lookup);
+    let rows = joined.collect().unwrap();
+    assert_eq!(rows.len(), 37);
+    for (k, (count, id)) in rows {
+        assert!(k == format!("user{id}"));
+        // 1000 records over 37 users: 27 or 28 occurrences
+        assert!(count == 27 || count == 28, "{k}: {count}");
+    }
+}
+
+#[test]
+fn recovery_during_iterative_computation() {
+    // an iterative job that loses cached partitions midway and recovers
+    // (the paper's §IV motivation for Spark's lineage)
+    let ctx = EngineContext::new();
+    let base = ctx
+        .parallelize((0..400i64).collect::<Vec<_>>(), 8)
+        .map(|x| x * 3)
+        .cache();
+    base.materialize().unwrap();
+
+    let mut acc = 0i64;
+    for round in 0..6 {
+        if round == 2 {
+            base.invalidate_partition(1);
+            base.invalidate_partition(5);
+        }
+        if round == 4 {
+            base.invalidate_partition(1); // lose the same one again
+        }
+        acc += base.dataset_sum();
+    }
+    let expected: i64 = (0..400).map(|x| x * 3).sum::<i64>() * 6;
+    assert_eq!(acc, expected);
+    let (_, _, recoveries) = ctx.stats();
+    assert_eq!(recoveries, 3);
+}
+
+trait SumExt {
+    fn dataset_sum(&self) -> i64;
+}
+
+impl SumExt for mli::engine::Dataset<i64> {
+    fn dataset_sum(&self) -> i64 {
+        self.reduce(|a, b| a + b).unwrap().unwrap_or(0)
+    }
+}
+
+#[test]
+fn transient_task_failures_do_not_corrupt_results() {
+    let ctx = EngineContext::new();
+    let d = ctx.parallelize((0..100i64).collect::<Vec<_>>(), 4).map(|x| x + 1);
+    // partitions 0 and 2 fail twice each before succeeding
+    ctx.failures.fail_times(d.id(), 0, 2);
+    ctx.failures.fail_times(d.id(), 2, 2);
+    let out = d.collect().unwrap();
+    assert_eq!(out, (1..=100).collect::<Vec<_>>());
+}
+
+#[test]
+fn simulated_time_for_training_shaped_loop() {
+    // 4 machines, 8 partitions, 5 rounds of (compute + star allreduce):
+    // verify the ledger composes the way the model says it should.
+    let cluster = SimCluster::ec2(4);
+    let model_bytes = 512 * 4;
+    for _round in 0..5 {
+        cluster.begin_round();
+        for p in 0..8 {
+            let m = cluster.machine_of(p);
+            cluster.charge_compute(m, 0.1); // 2 tasks/machine
+        }
+        cluster.charge_allreduce(CommTopology::StarGatherBroadcast, model_bytes);
+        cluster.end_round();
+    }
+    assert_eq!(cluster.rounds(), 5);
+    // per round: 2 tasks x 0.1s on 8 cores -> 0.2/2 = 0.1s + comm
+    let t = cluster.total_sim_seconds();
+    assert!(t > 0.5 && t < 0.6, "sim time {t}");
+    // comm scales with machines: same loop on 16 machines costs more comm
+    let big = SimCluster::ec2(16);
+    for _ in 0..5 {
+        big.begin_round();
+        for p in 0..16 {
+            big.charge_compute(big.machine_of(p), 0.0);
+        }
+        big.charge_allreduce(CommTopology::StarGatherBroadcast, model_bytes);
+        big.end_round();
+    }
+    assert!(big.total_comm_seconds() > cluster.total_comm_seconds());
+}
+
+#[test]
+fn oom_surfaces_as_typed_error() {
+    let cluster = SimCluster::new(
+        2,
+        mli::cluster::MachineSpec::default().with_mem_bytes(1_000),
+        mli::cluster::NetworkModel::ec2_2013(),
+    );
+    cluster.alloc(0, 500).unwrap();
+    cluster.alloc(1, 900).unwrap();
+    let err = cluster.alloc(1, 200).unwrap_err();
+    assert!(err.is_oom());
+    // machine 0 still has room
+    assert!(cluster.alloc(0, 400).is_ok());
+}

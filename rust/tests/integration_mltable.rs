@@ -1,0 +1,169 @@
+//! Integration: the full MLTable data-preparation story — CSV in,
+//! relational + MapReduce ops, feature extraction, numeric cast, and the
+//! Fig. A2 pipeline wired end to end.
+
+use mli::algorithms::kmeans::{KMeans, KMeansParams};
+use mli::algorithms::Algorithm;
+use mli::cluster::SimCluster;
+use mli::data::text_gen::{self, CorpusConfig};
+use mli::engine::EngineContext;
+use mli::features::{ngrams, standard_scale, tfidf};
+use mli::localmatrix::LocalMatrix;
+use mli::mltable::{csv_from_str, MLRow, Schema, Value};
+
+#[test]
+fn csv_to_model_pipeline() {
+    let ctx = EngineContext::new();
+    // semi-structured input: names, empties, mixed numerics
+    let csv = "\
+name,age,height,city
+ann,34,1.62,berkeley
+bob,,1.80,oakland
+cat,29,,berkeley
+dan,41,1.75,albany
+eve,38,1.68,berkeley
+";
+    let t = csv_from_str(&ctx, csv, true, 2).unwrap();
+    assert_eq!(t.num_rows().unwrap(), 5);
+
+    // relational: filter + project
+    let berkeley = t
+        .filter(|r| r[3].as_str() == Some("berkeley"))
+        .project_named(&["age", "height"])
+        .unwrap();
+    assert_eq!(berkeley.num_rows().unwrap(), 3);
+
+    // empties coerce to 0.0 in the numeric cast
+    let numeric = berkeley.to_numeric().unwrap();
+    let m = numeric.collect_matrix().unwrap();
+    assert_eq!(m.rows, 3);
+    assert_eq!(m.get(1, 1), 0.0); // cat's missing height
+
+    // standardized features have mean ~0
+    let scaled = standard_scale(&numeric, 0).unwrap();
+    let sm = scaled.collect_matrix().unwrap();
+    let col0: f64 = (0..3).map(|r| sm.get(r, 0)).sum();
+    assert!(col0.abs() < 1e-9);
+}
+
+#[test]
+fn reduce_by_key_aggregation_report() {
+    let ctx = EngineContext::new();
+    let csv = "\
+city,sales
+berkeley,10
+oakland,5
+berkeley,7
+albany,2
+oakland,3
+";
+    let t = csv_from_str(&ctx, csv, true, 2).unwrap();
+    let per_city = t
+        .reduce_by_key(0, |a, b| {
+            MLRow::new(vec![
+                a[0].clone(),
+                Value::Int(a[1].as_int().unwrap() + b[1].as_int().unwrap()),
+            ])
+        })
+        .unwrap();
+    let mut rows = per_city.collect().unwrap();
+    rows.sort_by_key(|r| r[0].as_str().unwrap().to_string());
+    assert_eq!(rows.len(), 3);
+    assert_eq!(rows[1][0].as_str().unwrap(), "berkeley");
+    assert_eq!(rows[1][1].as_int().unwrap(), 17);
+}
+
+#[test]
+fn matrix_batch_map_distributed_gram() {
+    // distributed X^T X via per-partition grams + driver-side reduce —
+    // the canonical LocalMatrix "operate locally, combine globally"
+    // pattern of §III-B.
+    let ctx = EngineContext::new();
+    let rows: Vec<MLRow> = (0..40)
+        .map(|i| MLRow::from_scalars(&[(i % 7) as f64, (i % 3) as f64]))
+        .collect();
+    let t = mli::mltable::MLTable::from_rows(&ctx, rows.clone(), Schema::numeric(2), 4).unwrap();
+    let nt = t.to_numeric().unwrap();
+
+    let grams = nt
+        .matrix_batch_map(|_, part| {
+            let pt = part.transpose();
+            pt.times(part)
+        })
+        .unwrap();
+    // each partition contributed a 2x2 gram; stack is (4*2) x 2
+    assert_eq!(grams.num_rows().unwrap(), 8);
+    let stacked = grams.collect_matrix().unwrap();
+    let mut total = LocalMatrix::zeros(2, 2);
+    for p in 0..4 {
+        let block = LocalMatrix::dense(
+            2,
+            2,
+            vec![
+                stacked.get(p * 2, 0),
+                stacked.get(p * 2, 1),
+                stacked.get(p * 2 + 1, 0),
+                stacked.get(p * 2 + 1, 1),
+            ],
+        )
+        .unwrap();
+        total = total.try_add(&block).unwrap();
+    }
+    // reference: full X^T X
+    let full = nt.collect_matrix().unwrap();
+    let x = LocalMatrix::Dense(full);
+    let want = x.transpose().times(&x).unwrap();
+    for r in 0..2 {
+        for c in 0..2 {
+            assert!((total.get(r, c) - want.get(r, c)).abs() < 1e-9);
+        }
+    }
+}
+
+#[test]
+fn fig_a2_pipeline_text_to_clusters() {
+    // the paper's flagship data-prep example, end to end
+    let ctx = EngineContext::new();
+    let (raw, truth) = text_gen::generate_table(
+        &ctx,
+        &CorpusConfig {
+            docs: 120,
+            topics: 3,
+            vocab: 300,
+            words_per_doc: 50,
+            seed: 2,
+        },
+        4,
+    )
+    .unwrap();
+    let grams = ngrams(&raw, 0, 1, 256).unwrap();
+    let feats = tfidf(&grams.table).unwrap();
+    let model = KMeans::new(KMeansParams {
+        k: 3,
+        iters: 10,
+        seed: 5,
+        ..Default::default()
+    })
+    .train(&feats, &SimCluster::ec2(4))
+    .unwrap();
+    // purity above chance (1/3)
+    let assignments: Vec<usize> = feats
+        .collect_vectors()
+        .unwrap()
+        .iter()
+        .map(|v| {
+            use mli::algorithms::Model;
+            model.predict(v).unwrap() as usize
+        })
+        .collect();
+    let mut counts = vec![vec![0usize; 3]; 3];
+    for (a, &t) in assignments.iter().zip(&truth) {
+        counts[*a][t] += 1;
+    }
+    let purity: usize = counts.iter().map(|r| *r.iter().max().unwrap()).sum();
+    assert!(
+        purity as f64 / truth.len() as f64 > 0.5,
+        "purity {}",
+        purity as f64 / truth.len() as f64
+    );
+}

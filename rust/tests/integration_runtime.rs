@@ -1,0 +1,165 @@
+//! Integration: the AOT artifact contract — every artifact in the
+//! manifest loads, compiles, and produces outputs matching its manifest
+//! shape and the pure-rust reference math.
+
+use mli::runtime::{Runtime, Tensor};
+use mli::util::rng::Rng;
+
+fn rt() -> Runtime {
+    Runtime::new(Runtime::artifact_dir()).expect("artifacts present (run `make artifacts`)")
+}
+
+fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+    if shape.is_empty() {
+        return Tensor::Scalar(rng.f32() * 0.1);
+    }
+    let n: usize = shape.iter().product();
+    Tensor::F32(
+        (0..n).map(|_| rng.normal_f32() * 0.1).collect(),
+        shape.to_vec(),
+    )
+}
+
+#[test]
+fn every_artifact_loads_and_runs() {
+    let rt = rt();
+    let manifest = rt.manifest().clone();
+    let mut rng = Rng::new(99);
+    assert!(manifest.artifacts.len() >= 15, "expected a full artifact set");
+    for spec in &manifest.artifacts {
+        let inputs: Vec<Tensor> = spec
+            .inputs
+            .iter()
+            .map(|t| rand_tensor(&mut rng, &t.shape))
+            .collect();
+        let outs = rt
+            .execute(&spec.entry, &spec.variant, &inputs)
+            .unwrap_or_else(|e| panic!("{} failed: {e}", spec.key()));
+        assert_eq!(outs.len(), spec.outputs.len(), "{}", spec.key());
+        for (o, os) in outs.iter().zip(&spec.outputs) {
+            assert_eq!(o.len(), os.numel(), "{} output size", spec.key());
+            assert!(
+                o.iter().all(|x| x.is_finite()),
+                "{} produced non-finite values",
+                spec.key()
+            );
+        }
+    }
+}
+
+#[test]
+fn grad_matches_rust_reference() {
+    let rt = rt();
+    let mut rng = Rng::new(7);
+    let (n, d) = (256, 64);
+    let x: Vec<f32> = (0..n * d).map(|_| rng.normal_f32()).collect();
+    let y: Vec<f32> = (0..n).map(|_| f32::from(rng.f64() > 0.5)).collect();
+    let w: Vec<f32> = (0..d).map(|_| rng.normal_f32() * 0.1).collect();
+    let outs = rt
+        .execute(
+            "logreg_grad_batch",
+            "small",
+            &[
+                Tensor::F32(x.clone(), vec![n, d]),
+                Tensor::F32(y.clone(), vec![n]),
+                Tensor::F32(w.clone(), vec![d]),
+            ],
+        )
+        .unwrap();
+    // rust reference
+    let mut grad = vec![0.0f64; d];
+    let mut loss = 0.0f64;
+    for i in 0..n {
+        let margin: f64 = (0..d).map(|j| (x[i * d + j] * w[j]) as f64).sum();
+        let p = 1.0 / (1.0 + (-margin).exp());
+        let r = p - y[i] as f64;
+        loss += (1.0 + margin.exp()).ln() - y[i] as f64 * margin;
+        for j in 0..d {
+            grad[j] += r * x[i * d + j] as f64;
+        }
+    }
+    for j in 0..d {
+        assert!(
+            (outs[0][j] as f64 - grad[j]).abs() < 1e-2,
+            "grad[{j}]: {} vs {}",
+            outs[0][j],
+            grad[j]
+        );
+    }
+    assert!((outs[1][0] as f64 - loss).abs() < 0.05 * loss.abs().max(1.0));
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let rt = rt();
+    let x = Tensor::F32(vec![0.0; 256 * 64], vec![256, 64]);
+    let w = Tensor::F32(vec![0.0; 64], vec![64]);
+    assert_eq!(rt.cached_executables(), 0);
+    let _ = rt.execute("logreg_predict", "small", &[x.clone(), w.clone()]).unwrap();
+    assert_eq!(rt.cached_executables(), 1);
+    let _ = rt.execute("logreg_predict", "small", &[x, w]).unwrap();
+    assert_eq!(rt.cached_executables(), 1, "recompiled instead of cache hit");
+}
+
+#[test]
+fn shape_mismatch_rejected_before_xla() {
+    let rt = rt();
+    let bad = Tensor::F32(vec![0.0; 10], vec![10]);
+    let err = rt
+        .execute("logreg_predict", "small", &[bad.clone(), bad])
+        .unwrap_err();
+    assert!(err.to_string().contains("shape"), "{err}");
+    let err = rt.execute("logreg_predict", "small", &[]).unwrap_err();
+    assert!(err.to_string().contains("inputs"), "{err}");
+    assert!(rt.execute("nope", "small", &[]).is_err());
+}
+
+#[test]
+fn scan_epoch_equals_manual_minibatch_sgd() {
+    // local_sgd_epoch (scan+pallas) == sequential rust minibatch SGD
+    let rt = rt();
+    let mut rng = Rng::new(3);
+    let (n, d, block) = (256usize, 64usize, 64usize);
+    let x: Vec<f32> = (0..n * d).map(|_| rng.normal_f32() * 0.5).collect();
+    let y: Vec<f32> = (0..n).map(|_| f32::from(rng.f64() > 0.5)).collect();
+    let w0: Vec<f32> = vec![0.0; d];
+    let lr = 0.05f32;
+    let outs = rt
+        .execute(
+            "local_sgd_epoch",
+            "small",
+            &[
+                Tensor::F32(x.clone(), vec![n, d]),
+                Tensor::F32(y.clone(), vec![n]),
+                Tensor::F32(w0.clone(), vec![d]),
+                Tensor::Scalar(lr),
+            ],
+        )
+        .unwrap();
+    // rust reference: sequential minibatches of `block`
+    let mut w: Vec<f64> = w0.iter().map(|&v| v as f64).collect();
+    let mut s = 0;
+    while s < n {
+        let e = (s + block).min(n);
+        let mut g = vec![0.0f64; d];
+        for i in s..e {
+            let margin: f64 = (0..d).map(|j| x[i * d + j] as f64 * w[j]).sum();
+            let r = 1.0 / (1.0 + (-margin).exp()) - y[i] as f64;
+            for j in 0..d {
+                g[j] += r * x[i * d + j] as f64;
+            }
+        }
+        for j in 0..d {
+            w[j] -= lr as f64 * g[j];
+        }
+        s = e;
+    }
+    for j in 0..d {
+        assert!(
+            (outs[0][j] as f64 - w[j]).abs() < 5e-3,
+            "w[{j}]: {} vs {}",
+            outs[0][j],
+            w[j]
+        );
+    }
+}

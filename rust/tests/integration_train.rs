@@ -1,0 +1,209 @@
+//! Integration: full training runs across systems — the cross-system
+//! claims the paper makes, verified end to end at test scale.
+
+use mli::algorithms::als::{AlsParams, ALS};
+use mli::algorithms::logreg::{Backend, LogRegParams, LogisticRegression};
+use mli::algorithms::Algorithm;
+use mli::baselines::{graphlab, mahout, matlab, vw, SystemProfile};
+use mli::data::netflix::{self, NetflixConfig};
+use mli::data::dense_gen;
+use mli::engine::EngineContext;
+use mli::optim::{GdParams, SgdParams};
+
+fn logreg_data(n: usize, d: usize, parts: usize) -> mli::mltable::MLNumericTable {
+    let ctx = EngineContext::new();
+    dense_gen::generate(&ctx, n, d, parts, 77).unwrap().table
+}
+
+/// Median simulated time over repeated runs: single-core wall-clock
+/// measurements jitter heavily (XLA thread pool, allocator, page cache),
+/// so ordering assertions use medians.
+fn median_time(reps: usize, mut f: impl FnMut() -> f64) -> f64 {
+    let times: Vec<f64> = (0..reps).map(|_| f()).collect();
+    mli::util::median(&times)
+}
+
+#[test]
+fn mli_vs_vw_same_quality_different_time() {
+    // compute-dominated scale (the paper's regime): per-partition XLA
+    // epochs cost milliseconds, comm costs fractions of that. At tiny
+    // compute the orderings legitimately invert (latency-dominated; see
+    // the ablation_comm bench), so this test uses the bench artifact.
+    let data = logreg_data(4 * 2048, 512, 4);
+    let sgd = SgdParams {
+        iters: 4,
+        learning_rate: 0.03,
+        track_loss: true,
+        ..Default::default()
+    };
+
+    // MLI (once, for quality) then medians for timing
+    let mli_profile = SystemProfile::mli();
+    let cluster = mli_profile.cluster(4);
+    let model = LogisticRegression::new(LogRegParams {
+        sgd: sgd.clone(),
+        backend: Backend::Xla,
+    })
+    .train(&data, &cluster)
+    .unwrap();
+    let mli_loss = *model.loss_history.last().unwrap();
+
+    // VW: same math (weights identical up to topology-independent
+    // averaging), so losses match; time differs via compute factor
+    let run = vw::run_logreg(&data, 4, &sgd, Backend::Xla).unwrap();
+    let vw_loss = run.quality.unwrap();
+    assert!((mli_loss - vw_loss).abs() < 1e-6, "{mli_loss} vs {vw_loss}");
+
+    let mli_time = median_time(3, || {
+        let cluster = SystemProfile::mli().cluster(4);
+        LogisticRegression::new(LogRegParams {
+            sgd: sgd.clone(),
+            backend: Backend::Xla,
+        })
+        .train(&data, &cluster)
+        .unwrap();
+        cluster.total_sim_seconds()
+    });
+    let vw_time = median_time(3, || {
+        vw::run_logreg(&data, 4, &sgd, Backend::Xla)
+            .unwrap()
+            .sim_seconds
+            .unwrap()
+    });
+    // VW's C++ factor makes it faster at this compute-dominated scale
+    // (paper: "on average 35% faster"), but never 2x (paper: "never
+    // twice as fast"). Allow measurement slack on the shared single core.
+    assert!(
+        vw_time < mli_time * 1.1,
+        "vw {vw_time} vs mli {mli_time}"
+    );
+    assert!(mli_time / vw_time < 2.5, "vw more than ~2x faster");
+}
+
+#[test]
+fn matlab_gd_competitive_small_but_oom_at_scale() {
+    // small data: MATLAB completes and converges
+    let data = logreg_data(256, 16, 2);
+    let run = matlab::run_logreg(
+        &data,
+        &GdParams {
+            iters: 10,
+            track_loss: true,
+            ..Default::default()
+        },
+        false,
+        false,
+    )
+    .unwrap();
+    assert!(run.sim_seconds.is_some());
+    assert!(run.quality.unwrap() < 0.7);
+    // the OOM boundary itself is asserted in baselines::matlab tests
+}
+
+#[test]
+fn als_all_systems_comparable_error() {
+    // the paper: "ALS methods from all systems achieved comparable error
+    // rates at the end of 10 iterations"
+    let data = netflix::generate(&NetflixConfig {
+        users: 160,
+        items: 48,
+        rank: 4,
+        mean_nnz_per_user: 8,
+        max_nnz_per_user: 16,
+        noise: 0.1,
+        seed: 5,
+        ..Default::default()
+    });
+    let params = AlsParams {
+        rank: 6,
+        iters: 5,
+        lambda: 0.05,
+        track_rmse: true,
+        ..Default::default()
+    };
+
+    // MLI (xla)
+    let profile = SystemProfile::mli();
+    let cluster = profile.cluster(4);
+    let mut p = params.clone();
+    p.use_xla = true;
+    let mli = ALS::new(p).train_ratings(&data, &cluster).unwrap();
+    let mli_rmse = *mli.rmse_history.last().unwrap();
+
+    let gl = graphlab::run_als(&data, 4, &params).unwrap();
+    let mh = mahout::run_als(&data, 4, &params).unwrap();
+
+    for (name, q) in [("graphlab", gl.quality.unwrap()), ("mahout", mh.quality.unwrap())] {
+        assert!(
+            (q - mli_rmse).abs() < 0.05,
+            "{name} rmse {q} vs mli {mli_rmse}"
+        );
+    }
+
+    // ordering of simulated walltime: graphlab < mli < mahout (fig 3b)
+    let mli_t = cluster.total_sim_seconds();
+    assert!(gl.sim_seconds.unwrap() < mli_t);
+    assert!(mh.sim_seconds.unwrap() > mli_t);
+}
+
+#[test]
+fn weak_scaling_time_grows_sublinearly_for_mli() {
+    // weak scaling: data/machine fixed; ideal = flat. With the star
+    // topology comm grows ~linearly in machines but stays a small
+    // fraction at this model size -> relative walltime should stay < 3x
+    // from 1 to 8 machines (paper fig 2c shows ~1.0-1.5x).
+    let sgd = SgdParams {
+        iters: 4,
+        ..Default::default()
+    };
+    let mut times = Vec::new();
+    for &m in &[1usize, 8] {
+        // per-machine work must dominate the per-round comm (paper
+        // regime): 4096 x 256 rust epochs cost ~ms
+        let data = logreg_data(4096 * m, 256, m);
+        let t = median_time(3, || {
+            let cluster = SystemProfile::mli().cluster(m);
+            LogisticRegression::new(LogRegParams {
+                sgd: sgd.clone(),
+                backend: Backend::Rust,
+            })
+            .train(&data, &cluster)
+            .unwrap();
+            cluster.total_sim_seconds()
+        });
+        times.push(t);
+    }
+    let rel = times[1] / times[0];
+    assert!(rel < 3.0, "weak-scaling blowup: {rel}");
+}
+
+#[test]
+fn strong_scaling_uses_more_machines_effectively() {
+    // fixed data, more machines => less simulated time (until comm wins)
+    let sgd = SgdParams {
+        iters: 4,
+        ..Default::default()
+    };
+    // 16 partitions fixed: at 1 machine that is 2 waves on 8 cores; at 4
+    // machines 1 wave of 4 tasks/machine — XLA epochs (~ms) dominate the
+    // ~1ms comm, so 4 machines must win (medians, see median_time).
+    let data = logreg_data(16 * 2048, 512, 16);
+    let mut times = Vec::new();
+    for &m in &[1usize, 4] {
+        let t = median_time(3, || {
+            let cluster = SystemProfile::mli().cluster(m);
+            LogisticRegression::new(LogRegParams {
+                sgd: sgd.clone(),
+                backend: Backend::Xla,
+            })
+            .train(&data, &cluster)
+            .unwrap();
+            cluster.total_sim_seconds()
+        });
+        times.push(t);
+    }
+    assert!(
+        times[1] < times[0],
+        "4 machines should beat 1: {times:?}"
+    );
+}

@@ -1,0 +1,223 @@
+//! Property-based tests (util::prop, the in-tree proptest surrogate) over
+//! the coordinator's invariants: engine routing/partitioning, shuffle
+//! key-locality, lineage-recovery idempotence, LocalMatrix algebra, the
+//! cluster cost model, and SGD averaging.
+
+use mli::cluster::{CommTopology, NetworkModel, SimCluster};
+use mli::engine::EngineContext;
+use mli::localmatrix::{linalg, CsrMatrix, DenseMatrix, LocalMatrix};
+use mli::optim::average_weights;
+use mli::util::prop::{check, close, ensure};
+use mli::util::rng::Rng;
+
+#[test]
+fn prop_partitioning_preserves_multiset_and_order() {
+    check("partitioning", 11, 60, 12, |rng, size| {
+        let n = rng.below(50 * size + 1);
+        let parts = 1 + rng.below(size.max(1) * 2);
+        let data: Vec<i64> = (0..n).map(|_| rng.next_u64() as i64).collect();
+        let ctx = EngineContext::new();
+        let d = ctx.parallelize(data.clone(), parts);
+        // collect reproduces the exact sequence
+        ensure(d.collect().unwrap() == data, "collect != input")?;
+        // partition sizes balanced within 1
+        let sizes: Vec<usize> = (0..parts)
+            .map(|p| d.partition(p).unwrap().len())
+            .collect();
+        let (mn, mx) = (
+            sizes.iter().min().copied().unwrap(),
+            sizes.iter().max().copied().unwrap(),
+        );
+        ensure(mx - mn <= 1, format!("unbalanced: {sizes:?}"))?;
+        ensure(sizes.iter().sum::<usize>() == n, "size sum")
+    });
+}
+
+#[test]
+fn prop_shuffle_reduce_matches_hashmap() {
+    check("reduce_by_key", 13, 40, 8, |rng, size| {
+        let n = rng.below(100 * size + 1);
+        let keys = 1 + rng.below(20);
+        let data: Vec<(u64, u64)> = (0..n)
+            .map(|_| (rng.next_u64() % keys as u64, rng.next_u64() % 100))
+            .collect();
+        let mut want = std::collections::HashMap::new();
+        for (k, v) in &data {
+            *want.entry(*k).or_insert(0u64) += v;
+        }
+        let ctx = EngineContext::new();
+        let parts = 1 + rng.below(6);
+        let got: std::collections::HashMap<u64, u64> = ctx
+            .parallelize(data, parts)
+            .reduce_by_key(|a, b| a + b)
+            .collect()
+            .unwrap()
+            .into_iter()
+            .collect();
+        ensure(got == want, "reduce_by_key mismatch")
+    });
+}
+
+#[test]
+fn prop_lineage_recovery_is_idempotent() {
+    check("recovery", 17, 30, 6, |rng, size| {
+        let n = 20 * (size + 1);
+        let parts = 1 + rng.below(size + 1);
+        let data: Vec<i64> = (0..n as i64).collect();
+        let ctx = EngineContext::new();
+        let d = ctx.parallelize(data, parts).map(|x| x * 7 + 1).cache();
+        d.materialize().unwrap();
+        let want = d.collect().unwrap();
+        // lose random partitions, possibly repeatedly
+        for _ in 0..rng.below(2 * parts + 1) {
+            d.invalidate_partition(rng.below(parts));
+        }
+        ensure(d.collect().unwrap() == want, "recovered data differs")
+    });
+}
+
+#[test]
+fn prop_csr_roundtrip_and_transpose_involution() {
+    check("csr", 19, 40, 8, |rng, size| {
+        let rows = 1 + rng.below(10 * size);
+        let cols = 1 + rng.below(10 * size);
+        let nnz = rng.below(rows * cols / 2 + 1);
+        let triplets: Vec<(usize, usize, f64)> = (0..nnz)
+            .map(|_| (rng.below(rows), rng.below(cols), rng.f64() + 0.1))
+            .collect();
+        let m = CsrMatrix::from_triplets(rows, cols, triplets).unwrap();
+        // dense roundtrip
+        ensure(
+            CsrMatrix::from_dense(&m.to_dense()) == m,
+            "dense roundtrip",
+        )?;
+        // transpose twice = identity
+        ensure(m.transpose().transpose() == m, "transpose involution")?;
+        // transpose preserves nnz and flips lookup
+        let t = m.transpose();
+        ensure(t.nnz() == m.nnz(), "nnz")?;
+        for _ in 0..5.min(nnz) {
+            let r = rng.below(rows);
+            let c = rng.below(cols);
+            ensure(m.get(r, c) == t.get(c, r), "lookup flip")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_solve_residual_small() {
+    check("lu_solve", 23, 30, 8, |rng, size| {
+        let n = 1 + rng.below(size + 2);
+        let mut r = Rng::new(rng.next_u64());
+        let a = DenseMatrix::randn(n, n, &mut r);
+        // ensure well-conditioned-ish: add n*I
+        let a = a.zip(&DenseMatrix::eye(n), |x, e| x + (n as f64) * e).unwrap();
+        let x_true = DenseMatrix::randn(n, 1, &mut r);
+        let b = a.matmul(&x_true).unwrap();
+        let x = linalg::solve(&a, &b).unwrap();
+        for i in 0..n {
+            close(x.get(i, 0), x_true.get(i, 0), 1e-6)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_matrix_algebra_identities() {
+    check("algebra", 29, 30, 6, |rng, size| {
+        let mut r = Rng::new(rng.next_u64());
+        let n = 1 + rng.below(size + 3);
+        let m = 1 + rng.below(size + 3);
+        let a = LocalMatrix::Dense(DenseMatrix::randn(n, m, &mut r));
+        let b = LocalMatrix::Dense(DenseMatrix::randn(n, m, &mut r));
+        // (A + B) - B = A
+        let ab = a.try_add(&b).unwrap().try_sub(&b).unwrap();
+        close(ab.frob_norm(), a.frob_norm(), 1e-9)?;
+        // (A^T)^T = A
+        ensure(a.transpose().transpose() == a, "transpose involution")?;
+        // frobenius via dot
+        close(a.dot(&a).unwrap(), a.frob_norm().powi(2), 1e-9)?;
+        // composition shapes
+        let v = a.on(&b).unwrap();
+        ensure(v.dims() == (2 * n, m), "on dims")?;
+        let h = a.then(&b).unwrap();
+        ensure(h.dims() == (n, 2 * m), "then dims")
+    });
+}
+
+#[test]
+fn prop_topology_costs_sane() {
+    check("topology", 31, 50, 10, |rng, _| {
+        let net = NetworkModel::ec2_2013();
+        let m = 2 + rng.below(63);
+        let bytes = 1 + rng.next_u64() % 10_000_000;
+        for topo in [
+            CommTopology::StarGatherBroadcast,
+            CommTopology::AllReduceTree,
+            CommTopology::PeerToPeer,
+        ] {
+            let t = topo.allreduce_time(&net, m, bytes);
+            ensure(t.is_finite() && t > 0.0, "non-positive cost")?;
+            // monotone in machines and bytes
+            ensure(
+                topo.allreduce_time(&net, m + 1, bytes) >= t * 0.999,
+                "not monotone in machines",
+            )?;
+            ensure(
+                topo.allreduce_time(&net, m, bytes * 2) >= t,
+                "not monotone in bytes",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_average_weights_convexity() {
+    check("averaging", 37, 50, 8, |rng, size| {
+        let d = 1 + rng.below(size + 4);
+        let parts = 1 + rng.below(6);
+        let locals: Vec<(Vec<f32>, f64)> = (0..parts)
+            .map(|_| {
+                (
+                    (0..d).map(|_| rng.f32() * 2.0 - 1.0).collect(),
+                    1.0 + rng.f64() * 9.0,
+                )
+            })
+            .collect();
+        let avg = average_weights(&locals);
+        // average stays inside the coordinate-wise hull
+        for j in 0..d {
+            let lo = locals.iter().map(|(v, _)| v[j]).fold(f32::INFINITY, f32::min);
+            let hi = locals
+                .iter()
+                .map(|(v, _)| v[j])
+                .fold(f32::NEG_INFINITY, f32::max);
+            ensure(
+                avg[j] >= lo - 1e-5 && avg[j] <= hi + 1e-5,
+                format!("avg[{j}]={} outside [{lo}, {hi}]", avg[j]),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_round_time_dominated_by_slowest_machine() {
+    check("round_time", 41, 40, 8, |rng, _| {
+        let machines = 1 + rng.below(16);
+        let cluster = SimCluster::ec2(machines);
+        cluster.begin_round();
+        let mut max_t = 0.0f64;
+        for m in 0..machines {
+            let t = rng.f64();
+            cluster.charge_compute(m, t);
+            max_t = max_t.max(t);
+        }
+        let stats = cluster.end_round();
+        let round = stats.round_time(&cluster.specs);
+        // one task/machine: round == slowest machine's time
+        close(round, max_t, 1e-9)
+    });
+}

@@ -15,7 +15,7 @@
 //! EXPERIMENTS.md §e2e.
 
 use std::io::Write as _;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use mli::algorithms::glm::{GlmData, XlaLogregStep};
 use mli::baselines::SystemProfile;
@@ -44,7 +44,7 @@ fn main() -> mli::Result<()> {
     let rt = Runtime::global()?;
     let (variant, n_pad, d_pad) = XlaLogregStep::pick_variant(&rt, N / MACHINES, D)?;
     println!("artifact: local_sgd_epoch__{variant} ({n_pad} x {d_pad})");
-    let glm = Rc::new(GlmData::prepare(&data.table, n_pad, d_pad, 128)?);
+    let glm = Arc::new(GlmData::prepare(&data.table, n_pad, d_pad, 128)?);
     let step = XlaLogregStep::new(glm, rt.clone(), &variant)?;
 
     // simulated cluster + optimizer
@@ -86,7 +86,8 @@ fn main() -> mli::Result<()> {
     println!(
         "XLA executions:       {}",
         rt.exec_count
-            .borrow()
+            .lock()
+            .unwrap()
             .values()
             .sum::<u64>()
     );

@@ -29,6 +29,7 @@ fn main() -> mli::Result<()> {
         backend: Backend::Xla,
         seed: 42,
         reps: 1,
+        threads: 0,
     };
     let t = logreg_scaling(&cfg, ScalingMode::Weak)?;
     println!("{}", t.to_markdown());

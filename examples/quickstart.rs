@@ -4,8 +4,6 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use std::rc::Rc;
-
 use mli::algorithms::logreg::{Backend, LogRegParams, LogisticRegression};
 use mli::algorithms::{Algorithm, Model};
 use mli::cluster::SimCluster;
@@ -82,8 +80,3 @@ fn main() -> mli::Result<()> {
     println!("quickstart OK");
     Ok(())
 }
-
-// Rc is used by library internals; silence the unused-import lint if the
-// example stops needing it.
-#[allow(unused)]
-fn _keep(_: Rc<()>) {}

@@ -20,6 +20,7 @@ fn main() {
             backend: Backend::Xla,
             seed: 42,
             reps: 1,
+            threads: 0,
         }
     } else {
         LogregBenchConfig {
@@ -30,6 +31,7 @@ fn main() {
             backend: Backend::Xla,
             seed: 42,
             reps: 3,
+            threads: 0,
         }
     };
     let table = logreg_scaling(&cfg, ScalingMode::Weak).expect("fig2 bench failed");

@@ -19,6 +19,7 @@ fn main() {
             backend: Backend::Xla,
             seed: 43,
             reps: 1,
+            threads: 0,
         }
     } else {
         LogregBenchConfig {
@@ -29,6 +30,7 @@ fn main() {
             backend: Backend::Xla,
             seed: 43,
             reps: 3,
+            threads: 0,
         }
     };
     let table = logreg_scaling(&cfg, ScalingMode::Strong).expect("figA5 bench failed");

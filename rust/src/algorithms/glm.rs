@@ -4,7 +4,7 @@
 //! [`LocalStepProvider`] backends — XLA (AOT artifacts on the PJRT
 //! runtime, logistic only) and pure rust (any [`GlmGradient`]).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::mltable::MLNumericTable;
@@ -141,8 +141,8 @@ impl GlmData {
 /// python/compile/model.py). One `Tensor` per partition is built at
 /// construction; per-round marshalling is just the weight vector.
 pub struct XlaLogregStep {
-    data: Rc<GlmData>,
-    rt: Rc<Runtime>,
+    data: Arc<GlmData>,
+    rt: Arc<Runtime>,
     variant: String,
     /// Device-resident (x, y) buffers per partition: transferred once at
     /// construction, reused every round (zero per-round marshalling of
@@ -152,7 +152,7 @@ pub struct XlaLogregStep {
 
 impl XlaLogregStep {
     /// Build over prepared data; verifies the artifact shapes match.
-    pub fn new(data: Rc<GlmData>, rt: Rc<Runtime>, variant: &str) -> Result<XlaLogregStep> {
+    pub fn new(data: Arc<GlmData>, rt: Arc<Runtime>, variant: &str) -> Result<XlaLogregStep> {
         let spec = rt
             .manifest()
             .find("local_sgd_epoch", variant)
@@ -285,10 +285,10 @@ pub fn make_logreg_provider(
             .find("local_sgd_epoch", &variant)
             .and_then(|a| a.block)
             .unwrap_or(256);
-        let glm = Rc::new(GlmData::prepare(data, n_pad, d_pad, block)?);
+        let glm = Arc::new(GlmData::prepare(data, n_pad, d_pad, block)?);
         Ok(Box::new(XlaLogregStep::new(glm, rt, &variant)?))
     } else {
-        let glm = Rc::new(GlmData::prepare(data, max_rows, d, 256.min(max_rows))?);
+        let glm = Arc::new(GlmData::prepare(data, max_rows, d, 256.min(max_rows))?);
         Ok(Box::new(RustGlmStep::new(glm, GlmGradient::Logistic)))
     }
 }
@@ -301,12 +301,12 @@ pub fn make_logreg_provider(
 /// LinearRegression / LinearSVM (no XLA artifact for those gradients) and
 /// as the reference in differential tests against the XLA path.
 pub struct RustGlmStep {
-    data: Rc<GlmData>,
+    data: Arc<GlmData>,
     grad: GlmGradient,
 }
 
 impl RustGlmStep {
-    pub fn new(data: Rc<GlmData>, grad: GlmGradient) -> RustGlmStep {
+    pub fn new(data: Arc<GlmData>, grad: GlmGradient) -> RustGlmStep {
         RustGlmStep { data, grad }
     }
 }
@@ -444,7 +444,7 @@ mod tests {
             })
             .collect();
         let t = table(rows, 2);
-        let g = Rc::new(GlmData::prepare(&t, 32, 2, 8).unwrap());
+        let g = Arc::new(GlmData::prepare(&t, 32, 2, 8).unwrap());
         let step = RustGlmStep::new(g, GlmGradient::Logistic);
         let w0 = vec![0.0f32; 2];
         let (_, l0, _) = step.local_grad(0, &w0).unwrap();

@@ -260,41 +260,53 @@ impl Algorithm for KMeans {
             let mut gsums = vec![0.0f64; k * d];
             let mut gcounts = vec![0.0f64; k];
             let mut gsse = 0.0f64;
-            for (p, m) in parts.iter().enumerate() {
+            // pad centroids once per round: rows beyond k get far-away
+            // sentinels so no real point selects them
+            let cp: Vec<f32> = match &xla {
+                Some((_, _, _, d_pad, c_art, _)) => {
+                    let mut cp = vec![0.0f32; c_art * d_pad];
+                    for c in 0..k {
+                        for j in 0..d {
+                            cp[c * d_pad + j] = centroids.get(c, j) as f32;
+                        }
+                    }
+                    for c in k..*c_art {
+                        cp[c * d_pad] = 1.0e15;
+                    }
+                    cp
+                }
+                None => Vec::new(),
+            };
+            // per-partition statistics in parallel (one task per
+            // partition); sums folded below in partition index order so
+            // centroid updates are identical for any thread count
+            let stage = crate::exec::TaskSet::new("kmeans-stats", parts.len());
+            let results = stage.run(cluster.pool().as_deref(), |p| {
                 let machine = cluster.machine_of(p);
-                let (sums, counts, sse) = match &xla {
+                match &xla {
                     Some((rt, variant, n_pad, d_pad, c_art, tensors)) => {
-                        // pad centroids: rows beyond k get far-away
-                        // sentinels so no real point selects them
-                        let mut cp = vec![0.0f32; c_art * d_pad];
-                        for c in 0..k {
-                            for j in 0..d {
-                                cp[c * d_pad + j] = centroids.get(c, j) as f32;
-                            }
-                        }
-                        for c in k..*c_art {
-                            cp[c * d_pad] = 1.0e15;
-                        }
                         let (x, rows) = &tensors[p];
-                        let stats = cluster.run_task(machine, || {
+                        let (s_full, counts, sse) = cluster.run_task(machine, || {
                             Self::xla_partition_stats(
                                 rt, variant, x, *rows, *n_pad, &cp, *c_art, *d_pad, k,
                             )
                         })?;
                         // trim sums to (k, d)
-                        let (s_full, counts, sse) = stats;
                         let mut s = vec![0.0f64; k * d];
                         for c in 0..k {
                             for j in 0..d {
                                 s[c * d + j] = s_full[c * d_pad + j];
                             }
                         }
-                        (s, counts, sse)
+                        Ok((s, counts, sse))
                     }
-                    None => cluster.run_task(machine, || {
-                        Self::rust_partition_stats(m, &centroids)
-                    }),
-                };
+                    None => Ok(cluster.run_task(machine, || {
+                        Self::rust_partition_stats(&parts[p], &centroids)
+                    })),
+                }
+            });
+            for r in results {
+                let (sums, counts, sse) = r?;
                 for (g, s) in gsums.iter_mut().zip(&sums) {
                     *g += s;
                 }
@@ -385,11 +397,30 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "requires AOT artifacts (make artifacts)"]
     fn xla_backend_recovers_blobs() {
         check_recovers_blobs(true);
     }
 
     #[test]
+    fn parallel_clustering_matches_serial() {
+        let t = blob_table(&[[0.0, 0.0], [10.0, 0.0], [0.0, 10.0]], 40, 6);
+        let params = KMeansParams {
+            k: 3,
+            iters: 6,
+            ..Default::default()
+        };
+        let serial = KMeans::new(params.clone())
+            .train(&t, &SimCluster::ec2(4))
+            .unwrap();
+        let cluster = SimCluster::ec2(4).with_executor(4);
+        let par = KMeans::new(params).train(&t, &cluster).unwrap();
+        assert_eq!(serial.centroids.data, par.centroids.data);
+        assert_eq!(serial.sse_history, par.sse_history);
+    }
+
+    #[test]
+    #[ignore = "requires AOT artifacts (make artifacts)"]
     fn xla_and_rust_agree() {
         let t = blob_table(&[[0.0, 0.0], [5.0, 5.0]], 30, 2);
         let params = |use_xla| KMeansParams {

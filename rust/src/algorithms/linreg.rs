@@ -2,7 +2,7 @@
 //! extends ... simply by changing the expression of the gradient
 //! function" (§IV): same optimizer, [`GlmGradient::Squared`] plugged in.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use super::glm::{GlmData, GlmGradient, RustGlmStep};
 use super::{Algorithm, Model};
@@ -43,7 +43,7 @@ impl Algorithm for LinearRegression {
         for p in 0..data.num_partitions() {
             max_rows = max_rows.max(data.dataset().partition(p)?.len());
         }
-        let glm = Rc::new(GlmData::prepare(data, max_rows, d, 32.min(max_rows))?);
+        let glm = Arc::new(GlmData::prepare(data, max_rows, d, 32.min(max_rows))?);
         let step = RustGlmStep::new(glm, GlmGradient::Squared);
         let res = SGD::run(&step, cluster, &self.sgd)?;
         Ok(LinRegModel {

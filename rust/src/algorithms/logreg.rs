@@ -139,12 +139,46 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "requires AOT artifacts (make artifacts)"]
     fn xla_backend_learns() {
         // requires `make artifacts`; the small variant fits 256/4=64 rows, d=16
         train_and_check(Backend::Xla);
     }
 
     #[test]
+    fn parallel_training_matches_serial() {
+        // same data + params, cluster with and without an executor: the
+        // trained weights must be bitwise-identical (exec determinism
+        // contract), only wall-clock changes
+        let ctx = EngineContext::new();
+        let data = dense_gen::generate(&ctx, 256, 16, 8, 13).unwrap();
+        let params = LogRegParams {
+            sgd: SgdParams {
+                learning_rate: 0.05,
+                iters: 8,
+                ..Default::default()
+            },
+            backend: Backend::Rust,
+        };
+        let serial = LogisticRegression::new(params.clone())
+            .train(&data.table, &SimCluster::ec2(8))
+            .unwrap();
+        for threads in [2, 8] {
+            let cluster = SimCluster::ec2(8).with_executor(threads);
+            let par = LogisticRegression::new(params.clone())
+                .train(&data.table, &cluster)
+                .unwrap();
+            for j in 0..16 {
+                assert_eq!(
+                    serial.weights[j], par.weights[j],
+                    "dim {j} differs at {threads} threads"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[ignore = "requires AOT artifacts (make artifacts)"]
     fn xla_and_rust_agree() {
         // identical data, params -> near-identical weights (f32 round-off)
         let ctx = EngineContext::new();

@@ -1,7 +1,7 @@
 //! Linear SVM via distributed SGD (hinge loss + L2) — the second entry in
 //! the paper's "naturally extends to linear SVMs ..." list (§IV).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use super::glm::{GlmData, GlmGradient, RustGlmStep};
 use super::{Algorithm, Model};
@@ -47,7 +47,7 @@ impl Algorithm for LinearSVM {
         for p in 0..data.num_partitions() {
             max_rows = max_rows.max(data.dataset().partition(p)?.len());
         }
-        let glm = Rc::new(GlmData::prepare(data, max_rows, d, 32.min(max_rows))?);
+        let glm = Arc::new(GlmData::prepare(data, max_rows, d, 32.min(max_rows))?);
         let step = RustGlmStep::new(glm, GlmGradient::Hinge);
         let res = SGD::run(&step, cluster, &self.sgd)?;
         Ok(SvmModel {

@@ -38,6 +38,9 @@ pub struct LogregBenchConfig {
     /// Repetitions per point; the median is reported (single-core hosts
     /// jitter 2-3x run to run; see EXPERIMENTS.md §Scale-down caveats).
     pub reps: usize,
+    /// Host exec-pool threads for the MLI runs (0 = serial evaluation).
+    /// Shrinks real wall-clock only; simulated times are unaffected.
+    pub threads: usize,
 }
 
 impl Default for LogregBenchConfig {
@@ -50,6 +53,7 @@ impl Default for LogregBenchConfig {
             backend: Backend::Xla,
             seed: 42,
             reps: 3,
+            threads: 0,
         }
     }
 }
@@ -92,7 +96,10 @@ pub fn logreg_scaling(cfg: &LogregBenchConfig, mode: ScalingMode) -> Result<Tabl
         // MLI
         let mli_times: Vec<f64> = (0..reps)
             .map(|_| {
-                let cluster = SystemProfile::mli().cluster(m);
+                let mut cluster = SystemProfile::mli().cluster(m);
+                if cfg.threads > 0 {
+                    cluster = cluster.with_executor(cfg.threads);
+                }
                 LogisticRegression::new(LogRegParams {
                     sgd: sgd.clone(),
                     backend: cfg.backend.clone(),
@@ -183,6 +190,8 @@ pub struct AlsBenchConfig {
     pub use_xla: bool,
     /// Repetitions per point; medians reported.
     pub reps: usize,
+    /// Host exec-pool threads for the MLI runs (0 = serial evaluation).
+    pub threads: usize,
 }
 
 impl Default for AlsBenchConfig {
@@ -196,6 +205,7 @@ impl Default for AlsBenchConfig {
             lambda: 0.01,
             use_xla: true,
             reps: 3,
+            threads: 0,
         }
     }
 }
@@ -266,7 +276,10 @@ pub fn als_scaling(cfg: &AlsBenchConfig, mode: ScalingMode) -> Result<Table> {
         p.topology = profile.topology;
         let mli_times: Vec<Option<f64>> = (0..reps)
             .map(|_| {
-                let cluster = profile.cluster(m);
+                let mut cluster = profile.cluster(m);
+                if cfg.threads > 0 {
+                    cluster = cluster.with_executor(cfg.threads);
+                }
                 ALS::new(p.clone())
                     .train_ratings(&data, &cluster)
                     .map(|_| Some(cluster.total_sim_seconds()))
@@ -320,6 +333,7 @@ mod tests {
             backend: Backend::Rust,
             seed: 1,
             reps: 1,
+            threads: 0,
         };
         let t = logreg_scaling(&cfg, ScalingMode::Weak).unwrap();
         assert_eq!(t.rows.len(), 2);
@@ -349,6 +363,7 @@ mod tests {
             lambda: 0.01,
             use_xla: false,
             reps: 1,
+            threads: 0,
         };
         let t = als_scaling(&cfg, ScalingMode::Weak).unwrap();
         assert_eq!(t.rows.len(), 2);

@@ -15,12 +15,13 @@
 //! let t = cluster.total_sim_seconds();
 //! ```
 
-use std::cell::RefCell;
+use std::sync::{Arc, Mutex};
 
 use super::machine::MachineSpec;
 use super::network::NetworkModel;
 use super::topology::CommTopology;
 use crate::error::{Error, Result};
+use crate::exec::ThreadPool;
 use crate::util::timer::Stopwatch;
 
 /// Per-round accounting.
@@ -111,13 +112,16 @@ pub struct SimLedger {
 
 /// A simulated cluster: machine fleet + network + time ledger.
 ///
-/// Interior mutability (RefCell) because tasks borrow the cluster
-/// read-only while recording; single-threaded by design (one host core).
+/// Interior mutability is mutex-guarded (`Send + Sync`) so that tasks
+/// running concurrently on the `exec` thread pool can record compute time
+/// into the ledger; charges are commutative sums, so simulated time is
+/// independent of the host thread count.
 pub struct SimCluster {
     pub specs: Vec<MachineSpec>,
     pub net: NetworkModel,
-    pub straggler: std::cell::Cell<StragglerModel>,
-    ledger: RefCell<SimLedger>,
+    pub straggler: Mutex<StragglerModel>,
+    ledger: Mutex<SimLedger>,
+    executor: Mutex<Option<Arc<ThreadPool>>>,
 }
 
 impl SimCluster {
@@ -128,8 +132,9 @@ impl SimCluster {
         SimCluster {
             specs: vec![spec; machines],
             net,
-            straggler: std::cell::Cell::new(StragglerModel::Max),
-            ledger: RefCell::new(ledger),
+            straggler: Mutex::new(StragglerModel::Max),
+            ledger: Mutex::new(ledger),
+            executor: Mutex::new(None),
         }
     }
 
@@ -152,7 +157,7 @@ impl SimCluster {
     /// Charge `bytes` of resident memory on a machine; simulated OOM if
     /// capacity is exceeded (the paper's MATLAB 16x/25x failures).
     pub fn alloc(&self, machine: usize, bytes: u64) -> Result<()> {
-        let mut l = self.ledger.borrow_mut();
+        let mut l = self.ledger.lock().unwrap();
         let resident = &mut l.resident_bytes[machine];
         let cap = self.specs[machine].mem_bytes;
         if *resident + bytes > cap {
@@ -168,19 +173,19 @@ impl SimCluster {
     }
 
     pub fn free(&self, machine: usize, bytes: u64) {
-        let mut l = self.ledger.borrow_mut();
+        let mut l = self.ledger.lock().unwrap();
         let r = &mut l.resident_bytes[machine];
         *r = r.saturating_sub(bytes);
     }
 
     pub fn resident(&self, machine: usize) -> u64 {
-        self.ledger.borrow().resident_bytes[machine]
+        self.ledger.lock().unwrap().resident_bytes[machine]
     }
 
     // -- round lifecycle --------------------------------------------------
 
     pub fn begin_round(&self) {
-        let mut l = self.ledger.borrow_mut();
+        let mut l = self.ledger.lock().unwrap();
         assert!(l.current.is_none(), "begin_round inside an open round");
         l.current = Some(RoundStats::new(self.specs.len()));
     }
@@ -191,7 +196,7 @@ impl SimCluster {
         let sw = Stopwatch::start();
         let out = f();
         let secs = sw.elapsed_secs();
-        let mut l = self.ledger.borrow_mut();
+        let mut l = self.ledger.lock().unwrap();
         let cur = l
             .current
             .as_mut()
@@ -204,7 +209,7 @@ impl SimCluster {
     /// Charge pre-measured compute seconds (used when a task's cost was
     /// measured once and replayed for many simulated machines).
     pub fn charge_compute(&self, machine: usize, secs: f64) {
-        let mut l = self.ledger.borrow_mut();
+        let mut l = self.ledger.lock().unwrap();
         let cur = l.current.as_mut().expect("charge_compute outside round");
         cur.machine_compute_s[machine] += secs;
         cur.machine_tasks[machine] += 1;
@@ -213,7 +218,7 @@ impl SimCluster {
     /// Charge one model-allreduce with the given topology.
     pub fn charge_allreduce(&self, topo: CommTopology, bytes: u64) {
         let t = topo.allreduce_time(&self.net, self.specs.len(), bytes);
-        let mut l = self.ledger.borrow_mut();
+        let mut l = self.ledger.lock().unwrap();
         let m = self.specs.len() as u64;
         let cur = l.current.as_mut().expect("charge_allreduce outside round");
         cur.comm_s += t;
@@ -223,7 +228,7 @@ impl SimCluster {
     /// Charge a master broadcast.
     pub fn charge_broadcast(&self, topo: CommTopology, bytes: u64) {
         let t = topo.broadcast_time(&self.net, self.specs.len(), bytes);
-        let mut l = self.ledger.borrow_mut();
+        let mut l = self.ledger.lock().unwrap();
         let m = self.specs.len() as u64;
         let cur = l.current.as_mut().expect("charge_broadcast outside round");
         cur.comm_s += t;
@@ -244,7 +249,7 @@ impl SimCluster {
         let avg_in = total as f64 / m as f64;
         let t = self.net.latency_s * (m as f64).log2().max(1.0)
             + max_out.max(avg_in) / self.net.bandwidth_bps;
-        let mut l = self.ledger.borrow_mut();
+        let mut l = self.ledger.lock().unwrap();
         let cur = l.current.as_mut().expect("charge_shuffle outside round");
         cur.comm_s += t;
         cur.net_bytes += total;
@@ -255,7 +260,7 @@ impl SimCluster {
     pub fn charge_hdfs_roundtrip(&self, bytes_per_machine: u64) {
         let t = self.net.hdfs_write_time(bytes_per_machine)
             + self.net.hdfs_read_time(bytes_per_machine);
-        let mut l = self.ledger.borrow_mut();
+        let mut l = self.ledger.lock().unwrap();
         let cur = l.current.as_mut().expect("charge_hdfs outside round");
         cur.disk_s += t;
     }
@@ -263,22 +268,43 @@ impl SimCluster {
     /// Charge a fixed job-startup overhead (Hadoop JVM spawn).
     pub fn charge_job_startup(&self) {
         let t = self.net.job_startup_s;
-        let mut l = self.ledger.borrow_mut();
+        let mut l = self.ledger.lock().unwrap();
         let cur = l.current.as_mut().expect("charge_job_startup outside round");
         cur.disk_s += t;
     }
 
     /// Switch the straggler model (see [`StragglerModel`]).
     pub fn with_straggler(self, s: StragglerModel) -> SimCluster {
-        self.straggler.set(s);
+        *self.straggler.lock().unwrap() = s;
         self
+    }
+
+    /// Attach a work-stealing [`ThreadPool`] so algorithm layers can fan
+    /// partition tasks out across host threads (`SimCluster::ec2(8)
+    /// .with_executor(4)`). `threads == 0` picks a default sized by the
+    /// host (`ThreadPool::default_threads`) capped at the fleet size —
+    /// more host threads than simulated machines buys nothing in a
+    /// bulk-synchronous round. Simulated time is unaffected either way.
+    pub fn with_executor(self, threads: usize) -> SimCluster {
+        let n = if threads == 0 {
+            ThreadPool::default_threads().min(self.num_machines()).max(1)
+        } else {
+            threads
+        };
+        *self.executor.lock().unwrap() = Some(ThreadPool::new(n));
+        self
+    }
+
+    /// The attached executor, if any.
+    pub fn pool(&self) -> Option<Arc<ThreadPool>> {
+        self.executor.lock().unwrap().clone()
     }
 
     /// Close the round: fold it into the total and return its stats.
     pub fn end_round(&self) -> RoundStats {
-        let mut l = self.ledger.borrow_mut();
+        let mut l = self.ledger.lock().unwrap();
         let cur = l.current.take().expect("end_round without begin_round");
-        let t = cur.round_time_with(&self.specs, self.straggler.get());
+        let t = cur.round_time_with(&self.specs, *self.straggler.lock().unwrap());
         l.total_s += t;
         l.total_comm_s += cur.comm_s;
         l.total_disk_s += cur.disk_s;
@@ -290,28 +316,28 @@ impl SimCluster {
     // -- queries ----------------------------------------------------------
 
     pub fn total_sim_seconds(&self) -> f64 {
-        self.ledger.borrow().total_s
+        self.ledger.lock().unwrap().total_s
     }
 
     pub fn total_comm_seconds(&self) -> f64 {
-        self.ledger.borrow().total_comm_s
+        self.ledger.lock().unwrap().total_comm_s
     }
 
     pub fn total_disk_seconds(&self) -> f64 {
-        self.ledger.borrow().total_disk_s
+        self.ledger.lock().unwrap().total_disk_s
     }
 
     pub fn total_net_bytes(&self) -> u64 {
-        self.ledger.borrow().total_net_bytes
+        self.ledger.lock().unwrap().total_net_bytes
     }
 
     pub fn rounds(&self) -> usize {
-        self.ledger.borrow().rounds
+        self.ledger.lock().unwrap().rounds
     }
 
     /// Reset the ledger (memory accounting persists).
     pub fn reset_time(&self) {
-        let mut l = self.ledger.borrow_mut();
+        let mut l = self.ledger.lock().unwrap();
         l.total_s = 0.0;
         l.total_comm_s = 0.0;
         l.total_disk_s = 0.0;
@@ -435,5 +461,21 @@ mod tests {
     fn task_outside_round_panics() {
         let c = SimCluster::ec2(1);
         c.charge_compute(0, 1.0);
+    }
+
+    #[test]
+    fn executor_attach_and_parallel_run_task() {
+        let c = SimCluster::ec2(4).with_executor(2);
+        let pool = c.pool().expect("pool attached");
+        assert_eq!(pool.threads(), 2);
+        // concurrent run_task charges from pool workers all land
+        c.begin_round();
+        let outs = pool.run(8, |p| c.run_task(c.machine_of(p), || p * 2));
+        assert_eq!(outs, (0..8).map(|p| p * 2).collect::<Vec<_>>());
+        let stats = c.end_round();
+        assert_eq!(stats.machine_tasks.iter().sum::<usize>(), 8);
+        // default sizing caps at fleet size
+        let c1 = SimCluster::ec2(1).with_executor(0);
+        assert_eq!(c1.pool().unwrap().threads(), 1);
     }
 }

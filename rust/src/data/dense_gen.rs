@@ -6,7 +6,7 @@
 //! exercises the identical code path at configurable scale: x ~ N(0, I),
 //! y ~ Bernoulli(sigmoid(x . w*)) with a fixed planted w*.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::engine::EngineContext;
 use crate::error::Result;
@@ -27,7 +27,7 @@ pub struct ClassificationData {
 
 /// Generate `n` examples with `d` features over `partitions` partitions.
 pub fn generate(
-    ctx: &Rc<EngineContext>,
+    ctx: &Arc<EngineContext>,
     n: usize,
     d: usize,
     partitions: usize,

@@ -3,7 +3,7 @@
 //! topics; each topic has a preferred vocabulary slice, so a correct
 //! pipeline recovers the clusters.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::engine::EngineContext;
 use crate::error::Result;
@@ -77,7 +77,7 @@ pub fn generate(cfg: &CorpusConfig) -> Corpus {
 
 /// Generate and load as an MLTable (one row per document).
 pub fn generate_table(
-    ctx: &Rc<EngineContext>,
+    ctx: &Arc<EngineContext>,
     cfg: &CorpusConfig,
     partitions: usize,
 ) -> Result<(MLTable, Vec<usize>)> {

@@ -1,25 +1,32 @@
 //! Dataset<T>: the RDD surrogate — lazy, partitioned, lineage-tracked.
+//!
+//! Everything here is `Send + Sync` (compute closures, cache, lineage) so
+//! actions can evaluate one task per partition on the [`crate::exec`]
+//! thread pool when [`EngineContext::with_executor`] attached one. The
+//! merge order of every action is fixed (partition index), so results are
+//! bitwise-identical for any thread count, including the serial path.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::hash::Hash;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use super::shuffle;
 use super::EngineContext;
 use crate::error::{Error, Result};
+use crate::exec::TaskSet;
+use std::sync::atomic::Ordering;
 
 /// The compute closure: produce partition `p` from parents (captured).
-type ComputeFn<T> = Rc<dyn Fn(usize) -> Result<Vec<T>>>;
+type ComputeFn<T> = Arc<dyn Fn(usize) -> Result<Vec<T>> + Send + Sync>;
 
 struct Core<T> {
     id: usize,
-    ctx: Rc<EngineContext>,
+    ctx: Arc<EngineContext>,
     num_partitions: usize,
     compute: ComputeFn<T>,
     /// Some(slots) iff cached. A slot is None until computed or after
     /// invalidation (simulated executor loss).
-    cache: RefCell<Option<Vec<Option<Rc<Vec<T>>>>>>,
+    cache: Mutex<Option<Vec<Option<Arc<Vec<T>>>>>>,
 }
 
 /// An immutable, partitioned, lineage-tracked collection.
@@ -30,20 +37,22 @@ struct Core<T> {
 /// exactly Spark's semantics (and the reason the Mahout baseline, which
 /// rereads HDFS instead, loses on iterative workloads).
 pub struct Dataset<T> {
-    core: Rc<Core<T>>,
+    core: Arc<Core<T>>,
 }
 
 impl<T> Clone for Dataset<T> {
     fn clone(&self) -> Self {
-        Dataset { core: self.core.clone() }
+        Dataset {
+            core: self.core.clone(),
+        }
     }
 }
 
-impl<T: Clone + 'static> Dataset<T> {
+impl<T: Clone + Send + Sync + 'static> Dataset<T> {
     // ---- constructors ---------------------------------------------------
 
     pub(crate) fn from_vec(
-        ctx: Rc<EngineContext>,
+        ctx: Arc<EngineContext>,
         data: Vec<T>,
         partitions: usize,
     ) -> Dataset<T> {
@@ -63,7 +72,7 @@ impl<T: Clone + 'static> Dataset<T> {
             }
             out
         };
-        let chunks = Rc::new(chunks);
+        let chunks = Arc::new(chunks);
         Dataset::new(ctx, partitions, {
             let chunks = chunks.clone();
             move |p| Ok(chunks[p].clone())
@@ -71,18 +80,18 @@ impl<T: Clone + 'static> Dataset<T> {
     }
 
     pub(crate) fn new(
-        ctx: Rc<EngineContext>,
+        ctx: Arc<EngineContext>,
         num_partitions: usize,
-        compute: impl Fn(usize) -> Result<Vec<T>> + 'static,
+        compute: impl Fn(usize) -> Result<Vec<T>> + Send + Sync + 'static,
     ) -> Dataset<T> {
         let id = ctx.fresh_id();
         Dataset {
-            core: Rc::new(Core {
+            core: Arc::new(Core {
                 id,
                 ctx,
                 num_partitions,
-                compute: Rc::new(compute),
-                cache: RefCell::new(None),
+                compute: Arc::new(compute),
+                cache: Mutex::new(None),
             }),
         }
     }
@@ -97,55 +106,71 @@ impl<T: Clone + 'static> Dataset<T> {
         self.core.id
     }
 
-    pub fn context(&self) -> Rc<EngineContext> {
+    pub fn context(&self) -> Arc<EngineContext> {
         self.core.ctx.clone()
     }
 
     // ---- materialization -------------------------------------------------
 
     /// Compute (or fetch cached) partition `p`.
-    pub fn partition(&self, p: usize) -> Result<Rc<Vec<T>>> {
+    pub fn partition(&self, p: usize) -> Result<Arc<Vec<T>>> {
         if p >= self.core.num_partitions {
             return Err(Error::Engine(format!(
                 "partition {p} out of range (dataset has {})",
                 self.core.num_partitions
             )));
         }
-        // cached?
-        {
-            let cache = self.core.cache.borrow();
+        // cached? was this a cached dataset whose slot was invalidated?
+        // (checked under the lock, computed outside it so sibling
+        // partitions don't serialize)
+        let was_invalidated = {
+            let cache = self.core.cache.lock().unwrap();
             if let Some(slots) = cache.as_ref() {
                 if let Some(v) = &slots[p] {
-                    *self.core.ctx.cache_hits.borrow_mut() += 1;
+                    self.core.ctx.cache_hits.fetch_add(1, Ordering::Relaxed);
                     return Ok(v.clone());
                 }
             }
-        }
-        // was this a cached dataset whose slot was invalidated? count a
-        // recovery (lineage recomputation after simulated loss).
-        let was_invalidated = {
-            let cache = self.core.cache.borrow();
             cache.as_ref().is_some_and(|s| s[p].is_none())
                 && self.core.ctx.failures.was_lost(self.core.id, p)
         };
         // compute through lineage, honoring task-failure injection
-        let v = self.compute_with_retries(p)?;
-        let v = Rc::new(v);
+        let v = Arc::new(self.compute_with_retries(p)?);
         if was_invalidated {
-            *self.core.ctx.recoveries.borrow_mut() += 1;
+            // count a lineage recomputation after simulated loss
+            self.core.ctx.recoveries.fetch_add(1, Ordering::Relaxed);
         }
-        let mut cache = self.core.cache.borrow_mut();
+        let mut cache = self.core.cache.lock().unwrap();
         if let Some(slots) = cache.as_mut() {
+            // if a racing task cached this slot first, serve its copy so
+            // every consumer shares one allocation
+            if let Some(existing) = &slots[p] {
+                return Ok(existing.clone());
+            }
             slots[p] = Some(v.clone());
         }
         Ok(v)
+    }
+
+    /// Materialize every partition — one task per partition on the
+    /// attached executor (serially without one) — returned in partition
+    /// index order. The first error, by lowest partition index, wins.
+    pub fn partitions(&self) -> Result<Vec<Arc<Vec<T>>>> {
+        let pool = self.core.ctx.executor();
+        TaskSet::new(
+            format!("dataset-{}-eval", self.core.id),
+            self.core.num_partitions,
+        )
+        .run(pool.as_deref(), |p| self.partition(p))
+        .into_iter()
+        .collect()
     }
 
     fn compute_with_retries(&self, p: usize) -> Result<Vec<T>> {
         const MAX_ATTEMPTS: usize = 4; // Spark's spark.task.maxFailures default
         let mut last_err = None;
         for _attempt in 0..MAX_ATTEMPTS {
-            *self.core.ctx.tasks_run.borrow_mut() += 1;
+            self.core.ctx.tasks_run.fetch_add(1, Ordering::Relaxed);
             if self.core.ctx.failures.should_fail(self.core.id, p) {
                 last_err = Some(Error::Engine(format!(
                     "injected task failure (dataset {}, partition {p})",
@@ -161,7 +186,7 @@ impl<T: Clone + 'static> Dataset<T> {
     /// Enable caching (Spark `.cache()`); returns self for chaining.
     pub fn cache(self) -> Dataset<T> {
         {
-            let mut c = self.core.cache.borrow_mut();
+            let mut c = self.core.cache.lock().unwrap();
             if c.is_none() {
                 *c = Some(vec![None; self.core.num_partitions]);
             }
@@ -172,7 +197,7 @@ impl<T: Clone + 'static> Dataset<T> {
     /// Simulate losing a cached partition (executor death). The next
     /// `partition(p)` recomputes through lineage and re-caches.
     pub fn invalidate_partition(&self, p: usize) {
-        let mut c = self.core.cache.borrow_mut();
+        let mut c = self.core.cache.lock().unwrap();
         if let Some(slots) = c.as_mut() {
             if slots[p].take().is_some() {
                 self.core.ctx.failures.mark_lost(self.core.id, p);
@@ -184,7 +209,8 @@ impl<T: Clone + 'static> Dataset<T> {
     pub fn is_cached(&self, p: usize) -> bool {
         self.core
             .cache
-            .borrow()
+            .lock()
+            .unwrap()
             .as_ref()
             .is_some_and(|s| s[p].is_some())
     }
@@ -193,34 +219,34 @@ impl<T: Clone + 'static> Dataset<T> {
 
     /// Materialize all partitions, in order.
     pub fn collect(&self) -> Result<Vec<T>> {
+        let parts = self.partitions()?;
         let mut out = Vec::new();
-        for p in 0..self.core.num_partitions {
-            out.extend(self.partition(p)?.iter().cloned());
+        for part in parts {
+            out.extend(part.iter().cloned());
         }
         Ok(out)
     }
 
     /// Force-compute every partition (into cache if enabled).
     pub fn materialize(&self) -> Result<()> {
-        for p in 0..self.core.num_partitions {
-            self.partition(p)?;
-        }
+        self.partitions()?;
         Ok(())
     }
 
     pub fn count(&self) -> Result<usize> {
-        let mut n = 0;
-        for p in 0..self.core.num_partitions {
-            n += self.partition(p)?.len();
-        }
-        Ok(n)
+        Ok(self.partitions()?.iter().map(|p| p.len()).sum())
     }
 
     /// Tree-free associative reduce over all elements (Fig. A1 `reduce`).
+    ///
+    /// Partitions are *computed* in parallel (when a pool is attached) but
+    /// *folded* on the calling thread in element order, so the result is
+    /// identical to the serial path even for non-associative `f`.
     pub fn reduce(&self, f: impl Fn(T, T) -> T) -> Result<Option<T>> {
+        let parts = self.partitions()?;
         let mut acc: Option<T> = None;
-        for p in 0..self.core.num_partitions {
-            for x in self.partition(p)?.iter().cloned() {
+        for part in parts {
+            for x in part.iter().cloned() {
                 acc = Some(match acc {
                     None => x,
                     Some(a) => f(a, x),
@@ -231,16 +257,17 @@ impl<T: Clone + 'static> Dataset<T> {
     }
 
     /// Per-partition fold then combine — the engine primitive behind
-    /// MLTable's `matrixBatchMap(...).reduce` pattern in Fig. A4.
+    /// MLTable's `matrixBatchMap(...).reduce` pattern in Fig. A4. Combine
+    /// runs in partition index order (deterministic merge).
     pub fn aggregate<U: Clone + 'static>(
         &self,
         zero: U,
         seq: impl Fn(U, &T) -> U,
         comb: impl Fn(U, U) -> U,
     ) -> Result<U> {
+        let parts = self.partitions()?;
         let mut acc = zero.clone();
-        for p in 0..self.core.num_partitions {
-            let part = self.partition(p)?;
+        for part in parts {
             let mut local = zero.clone();
             for x in part.iter() {
                 local = seq(local, x);
@@ -252,14 +279,17 @@ impl<T: Clone + 'static> Dataset<T> {
 
     // ---- narrow transformations ------------------------------------------
 
-    pub fn map<U: Clone + 'static>(&self, f: impl Fn(&T) -> U + 'static) -> Dataset<U> {
+    pub fn map<U: Clone + Send + Sync + 'static>(
+        &self,
+        f: impl Fn(&T) -> U + Send + Sync + 'static,
+    ) -> Dataset<U> {
         let parent = self.clone();
         Dataset::new(self.core.ctx.clone(), self.num_partitions(), move |p| {
             Ok(parent.partition(p)?.iter().map(|x| f(x)).collect())
         })
     }
 
-    pub fn filter(&self, f: impl Fn(&T) -> bool + 'static) -> Dataset<T> {
+    pub fn filter(&self, f: impl Fn(&T) -> bool + Send + Sync + 'static) -> Dataset<T> {
         let parent = self.clone();
         Dataset::new(self.core.ctx.clone(), self.num_partitions(), move |p| {
             Ok(parent
@@ -271,9 +301,9 @@ impl<T: Clone + 'static> Dataset<T> {
         })
     }
 
-    pub fn flat_map<U: Clone + 'static>(
+    pub fn flat_map<U: Clone + Send + Sync + 'static>(
         &self,
-        f: impl Fn(&T) -> Vec<U> + 'static,
+        f: impl Fn(&T) -> Vec<U> + Send + Sync + 'static,
     ) -> Dataset<U> {
         let parent = self.clone();
         Dataset::new(self.core.ctx.clone(), self.num_partitions(), move |p| {
@@ -283,9 +313,9 @@ impl<T: Clone + 'static> Dataset<T> {
 
     /// Whole-partition transformation — the engine primitive behind
     /// `matrixBatchMap` (Fig. A1). `f` receives (partition_index, rows).
-    pub fn map_partitions<U: Clone + 'static>(
+    pub fn map_partitions<U: Clone + Send + Sync + 'static>(
         &self,
-        f: impl Fn(usize, &[T]) -> Result<Vec<U>> + 'static,
+        f: impl Fn(usize, &[T]) -> Result<Vec<U>> + Send + Sync + 'static,
     ) -> Dataset<U> {
         let parent = self.clone();
         Dataset::new(self.core.ctx.clone(), self.num_partitions(), move |p| {
@@ -312,7 +342,10 @@ impl<T: Clone + 'static> Dataset<T> {
     }
 
     /// Zip co-partitioned datasets elementwise.
-    pub fn zip<U: Clone + 'static>(&self, other: &Dataset<U>) -> Result<Dataset<(T, U)>> {
+    pub fn zip<U: Clone + Send + Sync + 'static>(
+        &self,
+        other: &Dataset<U>,
+    ) -> Result<Dataset<(T, U)>> {
         if self.num_partitions() != other.num_partitions() {
             return Err(Error::Engine(format!(
                 "zip: partition counts differ ({} vs {})",
@@ -344,14 +377,15 @@ impl<T: Clone + 'static> Dataset<T> {
     pub fn repartition(&self, parts: usize) -> Dataset<T> {
         assert!(parts > 0);
         let parent = self.clone();
-        let buckets: Rc<RefCell<Option<Vec<Vec<T>>>>> = Rc::new(RefCell::new(None));
+        let buckets: Arc<Mutex<Option<Vec<Vec<T>>>>> = Arc::new(Mutex::new(None));
         Dataset::new(self.core.ctx.clone(), parts, move |p| {
-            let mut b = buckets.borrow_mut();
+            let mut b = buckets.lock().unwrap();
             if b.is_none() {
+                let src = parent.partitions()?;
                 let mut out = vec![Vec::new(); parts];
                 let mut i = 0usize;
-                for q in 0..parent.num_partitions() {
-                    for x in parent.partition(q)?.iter() {
+                for part in &src {
+                    for x in part.iter() {
                         out[i % parts].push(x.clone());
                         i += 1;
                     }
@@ -367,20 +401,25 @@ impl<T: Clone + 'static> Dataset<T> {
 
 impl<K, V> Dataset<(K, V)>
 where
-    K: Clone + Hash + Eq + 'static,
-    V: Clone + 'static,
+    K: Clone + Hash + Eq + Send + Sync + 'static,
+    V: Clone + Send + Sync + 'static,
 {
     /// Combine values per key with an associative, commutative function
     /// (Fig. A1 `reduceByKey`). Hash-partitions keys across the existing
     /// partition count (a wide dependency: first access materializes all
-    /// parent partitions, as a real shuffle would).
-    pub fn reduce_by_key(&self, f: impl Fn(V, V) -> V + 'static) -> Dataset<(K, V)> {
+    /// parent partitions, as a real shuffle would). Output order is
+    /// first-seen order by (source partition, position) — deterministic
+    /// and independent of thread count.
+    pub fn reduce_by_key(
+        &self,
+        f: impl Fn(V, V) -> V + Send + Sync + 'static,
+    ) -> Dataset<(K, V)> {
         let parent = self.clone();
         let parts = self.num_partitions();
-        let shuffled: Rc<RefCell<Option<Vec<Vec<(K, V)>>>>> = Rc::new(RefCell::new(None));
-        let f = Rc::new(f);
+        let shuffled: Arc<Mutex<Option<Vec<Vec<(K, V)>>>>> = Arc::new(Mutex::new(None));
+        let f = Arc::new(f);
         Dataset::new(self.core.ctx.clone(), parts, move |p| {
-            let mut s = shuffled.borrow_mut();
+            let mut s = shuffled.lock().unwrap();
             if s.is_none() {
                 *s = Some(shuffle::shuffle_reduce(&parent, parts, f.as_ref())?);
             }
@@ -392,10 +431,9 @@ where
     pub fn group_by_key(&self) -> Dataset<(K, Vec<V>)> {
         let parent = self.clone();
         let parts = self.num_partitions();
-        let shuffled: Rc<RefCell<Option<Vec<Vec<(K, Vec<V>)>>>>> =
-            Rc::new(RefCell::new(None));
+        let shuffled: Arc<Mutex<Option<Vec<Vec<(K, Vec<V>)>>>>> = Arc::new(Mutex::new(None));
         Dataset::new(self.core.ctx.clone(), parts, move |p| {
-            let mut s = shuffled.borrow_mut();
+            let mut s = shuffled.lock().unwrap();
             if s.is_none() {
                 *s = Some(shuffle::shuffle_group(&parent, parts)?);
             }
@@ -404,27 +442,29 @@ where
     }
 
     /// Inner join on key (Fig. A1 `join`).
-    pub fn join<W: Clone + 'static>(
+    pub fn join<W: Clone + Send + Sync + 'static>(
         &self,
         other: &Dataset<(K, W)>,
     ) -> Dataset<(K, (V, W))> {
         let a = self.clone();
         let b = other.clone();
         let parts = self.num_partitions();
-        let built: Rc<RefCell<Option<Vec<Vec<(K, (V, W))>>>>> = Rc::new(RefCell::new(None));
+        let built: Arc<Mutex<Option<Vec<Vec<(K, (V, W))>>>>> = Arc::new(Mutex::new(None));
         Dataset::new(self.core.ctx.clone(), parts, move |p| {
-            let mut s = built.borrow_mut();
+            let mut s = built.lock().unwrap();
             if s.is_none() {
-                // build hash map from b, stream a through it, hash-partition out
+                // build hash map from b, stream a through it in partition
+                // order (lookup-only map: output order follows a, so it is
+                // deterministic), hash-partition out
                 let mut rhs: HashMap<K, Vec<W>> = HashMap::new();
-                for q in 0..b.num_partitions() {
-                    for (k, w) in b.partition(q)?.iter() {
+                for part in b.partitions()? {
+                    for (k, w) in part.iter() {
                         rhs.entry(k.clone()).or_default().push(w.clone());
                     }
                 }
                 let mut out = vec![Vec::new(); parts];
-                for q in 0..a.num_partitions() {
-                    for (k, v) in a.partition(q)?.iter() {
+                for part in a.partitions()? {
+                    for (k, v) in part.iter() {
                         if let Some(ws) = rhs.get(k) {
                             let slot = shuffle::bucket_of(k, parts);
                             for w in ws {
@@ -445,7 +485,7 @@ mod tests {
     use super::super::EngineContext;
     use super::*;
 
-    fn ctx() -> Rc<EngineContext> {
+    fn ctx() -> Arc<EngineContext> {
         EngineContext::new()
     }
 
@@ -576,5 +616,24 @@ mod tests {
         let out = derived.collect().unwrap();
         assert_eq!(out, (0..20).map(|x| x * 2).filter(|x| x % 4 == 0).collect::<Vec<_>>());
         assert!(c.stats().2 >= 2);
+    }
+
+    #[test]
+    fn parallel_actions_match_serial() {
+        let serial = ctx();
+        let par = EngineContext::new().with_executor(4);
+        let mk = |c: &Arc<EngineContext>| {
+            c.parallelize((0..1000).collect::<Vec<i64>>(), 8)
+                .map(|x| x * 3 + 1)
+                .filter(|x| x % 2 == 0)
+        };
+        let a = mk(&serial);
+        let b = mk(&par);
+        assert_eq!(a.collect().unwrap(), b.collect().unwrap());
+        assert_eq!(a.count().unwrap(), b.count().unwrap());
+        assert_eq!(
+            a.reduce(|x, y| x + y).unwrap(),
+            b.reduce(|x, y| x + y).unwrap()
+        );
     }
 }

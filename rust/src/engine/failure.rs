@@ -3,8 +3,8 @@
 //! motivation for building on Spark: "automatic recovery from node
 //! failure is a necessity").
 
-use std::cell::RefCell;
 use std::collections::{HashMap, HashSet};
+use std::sync::Mutex;
 
 /// Deterministic failure plan shared by all datasets of a context.
 ///
@@ -14,24 +14,30 @@ use std::collections::{HashMap, HashSet};
 ///   retries up to Spark's default 4 attempts.
 /// * **partition loss** — recorded by `Dataset::invalidate_partition` via
 ///   `mark_lost`, used to count lineage recoveries.
+///
+/// `Send + Sync` (mutex-guarded) so retry accounting stays correct when
+/// partition tasks race on the `exec` thread pool: budget decrements are
+/// atomic per attempt, and a (dataset, partition) budget is only ever
+/// consumed by the one task computing that partition.
 #[derive(Default)]
 pub struct FailurePlan {
-    fail_budget: RefCell<HashMap<(usize, usize), usize>>,
-    lost: RefCell<HashSet<(usize, usize)>>,
+    fail_budget: Mutex<HashMap<(usize, usize), usize>>,
+    lost: Mutex<HashSet<(usize, usize)>>,
 }
 
 impl FailurePlan {
     /// Make the next `n` compute attempts of (dataset, partition) fail.
     pub fn fail_times(&self, dataset: usize, partition: usize, n: usize) {
         self.fail_budget
-            .borrow_mut()
+            .lock()
+            .unwrap()
             .insert((dataset, partition), n);
     }
 
     /// Called by the scheduler before each attempt; consumes one failure
     /// from the budget if present.
     pub fn should_fail(&self, dataset: usize, partition: usize) -> bool {
-        let mut b = self.fail_budget.borrow_mut();
+        let mut b = self.fail_budget.lock().unwrap();
         match b.get_mut(&(dataset, partition)) {
             Some(n) if *n > 0 => {
                 *n -= 1;
@@ -42,16 +48,16 @@ impl FailurePlan {
     }
 
     pub(crate) fn mark_lost(&self, dataset: usize, partition: usize) {
-        self.lost.borrow_mut().insert((dataset, partition));
+        self.lost.lock().unwrap().insert((dataset, partition));
     }
 
     pub(crate) fn was_lost(&self, dataset: usize, partition: usize) -> bool {
-        self.lost.borrow().contains(&(dataset, partition))
+        self.lost.lock().unwrap().contains(&(dataset, partition))
     }
 
     /// Total partitions ever marked lost (for reporting).
     pub fn losses(&self) -> usize {
-        self.lost.borrow().len()
+        self.lost.lock().unwrap().len()
     }
 }
 

@@ -18,6 +18,18 @@
 //!   partition intermediate state ([`shuffle`]).
 //! * **Broadcast** — [`EngineContext::broadcast`] mirrors
 //!   `sc.broadcast` (Fig. A9 uses it for ALS factor shipping).
+//! * **Parallel execution** — attach a work-stealing thread pool with
+//!   [`EngineContext::with_executor`] and actions evaluate one task per
+//!   partition on it ([`crate::exec`]). Without a pool, actions run
+//!   serially on the calling thread. Results are bitwise-identical either
+//!   way: every parallel stage merges per-partition results in partition
+//!   index order, and task retries/lineage recovery go through the same
+//!   `Send + Sync` failure plan.
+//!
+//! Note the two clocks: the executor shrinks *real* wall-clock time, while
+//! *simulated* cluster time (the `SimCluster` ledger the benches report)
+//! is charged analytically per round and is unaffected by how many local
+//! threads computed the round.
 //!
 //! The engine is deliberately *pure dataflow*: simulated-time charging is
 //! done by the algorithm layer (which knows message sizes and topologies),
@@ -30,68 +42,101 @@ pub mod shuffle;
 pub use dataset::Dataset;
 pub use failure::FailurePlan;
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
-/// Shared engine state: id allocator, failure plan, task metrics.
+use crate::exec::ThreadPool;
+
+/// Shared engine state: id allocator, failure plan, task metrics, and the
+/// optional task executor. All counters are atomics so partition tasks on
+/// pool workers can record into them directly.
 pub struct EngineContext {
-    next_id: RefCell<usize>,
-    pub failures: Rc<FailurePlan>,
+    next_id: AtomicUsize,
+    pub failures: Arc<FailurePlan>,
     /// Tasks executed (partition computations), for overhead benches.
-    pub tasks_run: RefCell<u64>,
+    pub tasks_run: AtomicU64,
     /// Cache hits (partition served from memory).
-    pub cache_hits: RefCell<u64>,
+    pub cache_hits: AtomicU64,
     /// Partition recomputations triggered by invalidation (recoveries).
-    pub recoveries: RefCell<u64>,
+    pub recoveries: AtomicU64,
+    executor: Mutex<Option<Arc<ThreadPool>>>,
 }
 
 impl EngineContext {
-    pub fn new() -> Rc<EngineContext> {
-        Rc::new(EngineContext {
-            next_id: RefCell::new(0),
-            failures: Rc::new(FailurePlan::default()),
-            tasks_run: RefCell::new(0),
-            cache_hits: RefCell::new(0),
-            recoveries: RefCell::new(0),
+    pub fn new() -> Arc<EngineContext> {
+        Arc::new(EngineContext {
+            next_id: AtomicUsize::new(0),
+            failures: Arc::new(FailurePlan::default()),
+            tasks_run: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            recoveries: AtomicU64::new(0),
+            executor: Mutex::new(None),
         })
     }
 
+    /// Attach a work-stealing executor with `threads` workers; subsequent
+    /// actions evaluate partitions in parallel. Returns the context for
+    /// chaining: `EngineContext::new().with_executor(4)`.
+    pub fn with_executor(self: &Arc<Self>, threads: usize) -> Arc<Self> {
+        *self.executor.lock().unwrap() = Some(ThreadPool::new(threads));
+        self.clone()
+    }
+
+    /// Share an existing pool (e.g. the `SimCluster`'s) instead of
+    /// spawning a new one.
+    pub fn set_executor(&self, pool: Option<Arc<ThreadPool>>) {
+        *self.executor.lock().unwrap() = pool;
+    }
+
+    /// The attached executor, if any.
+    pub fn executor(&self) -> Option<Arc<ThreadPool>> {
+        self.executor.lock().unwrap().clone()
+    }
+
     pub(crate) fn fresh_id(&self) -> usize {
-        let mut id = self.next_id.borrow_mut();
-        *id += 1;
-        *id
+        self.next_id.fetch_add(1, Ordering::Relaxed) + 1
     }
 
     /// Create a dataset from local data, split into `partitions` chunks
     /// (Spark's `sc.parallelize`).
-    pub fn parallelize<T: Clone + 'static>(
-        self: &Rc<Self>,
+    pub fn parallelize<T: Clone + Send + Sync + 'static>(
+        self: &Arc<Self>,
         data: Vec<T>,
         partitions: usize,
     ) -> Dataset<T> {
         Dataset::from_vec(self.clone(), data, partitions)
     }
 
-    /// Broadcast a value to all (simulated) machines. Cheap Rc clone
+    /// Broadcast a value to all (simulated) machines. Cheap Arc clone
     /// in-process; the *cost* is charged by the caller via
     /// `SimCluster::charge_broadcast` (algorithms know the byte size).
     pub fn broadcast<T>(&self, value: T) -> Broadcast<T> {
-        Broadcast { value: Rc::new(value) }
+        Broadcast {
+            value: Arc::new(value),
+        }
     }
 
     pub fn stats(&self) -> (u64, u64, u64) {
         (
-            *self.tasks_run.borrow(),
-            *self.cache_hits.borrow(),
-            *self.recoveries.borrow(),
+            self.tasks_run.load(Ordering::Relaxed),
+            self.cache_hits.load(Ordering::Relaxed),
+            self.recoveries.load(Ordering::Relaxed),
         )
     }
 }
 
-/// A broadcast variable (Fig. A9: `ctx.broadcast(V)`).
-#[derive(Clone)]
+/// A broadcast variable (Fig. A9: `ctx.broadcast(V)`). Clone is O(1) and
+/// the payload is shared across worker threads.
 pub struct Broadcast<T> {
-    value: Rc<T>,
+    value: Arc<T>,
+}
+
+impl<T> Clone for Broadcast<T> {
+    fn clone(&self) -> Self {
+        Broadcast {
+            value: self.value.clone(),
+        }
+    }
 }
 
 impl<T> Broadcast<T> {
@@ -123,5 +168,17 @@ mod tests {
         let _ = d.collect().unwrap();
         let (tasks, _, _) = ctx.stats();
         assert!(tasks >= 2); // at least one task per partition
+    }
+
+    #[test]
+    fn executor_attach_and_share() {
+        let ctx = EngineContext::new().with_executor(2);
+        let pool = ctx.executor().expect("pool attached");
+        assert_eq!(pool.threads(), 2);
+        let other = EngineContext::new();
+        other.set_executor(Some(pool.clone()));
+        assert!(other.executor().is_some());
+        other.set_executor(None);
+        assert!(other.executor().is_none());
     }
 }

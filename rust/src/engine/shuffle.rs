@@ -1,5 +1,13 @@
 //! Shuffle machinery: hash partitioning + shuffle-side combine for the
 //! wide dependencies (`reduce_by_key`, `group_by_key`, `join`).
+//!
+//! All intermediate state uses *insertion-ordered* maps ([`OrderedMap`])
+//! instead of `std::collections::HashMap`, whose per-instance random seed
+//! would make output order (and, for non-commutative combine functions,
+//! even values) vary run to run. With insertion ordering, shuffle output
+//! is a pure function of the input stream order — identical across runs
+//! and across executor thread counts, which is the engine's determinism
+//! contract (see `crate::exec`).
 
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
@@ -15,6 +23,41 @@ pub fn bucket_of<K: Hash>(key: &K, parts: usize) -> usize {
     (h.finish() % parts as u64) as usize
 }
 
+/// A hash map that remembers first-insertion order: `entries` is the
+/// canonical (ordered) storage, `idx` the key -> position index.
+pub(crate) struct OrderedMap<K, V> {
+    idx: HashMap<K, usize>,
+    entries: Vec<(K, V)>,
+}
+
+impl<K: Clone + Hash + Eq, V: Clone> OrderedMap<K, V> {
+    pub(crate) fn new() -> OrderedMap<K, V> {
+        OrderedMap {
+            idx: HashMap::new(),
+            entries: Vec::new(),
+        }
+    }
+
+    /// Insert, or combine with the existing value via `f(old, new)`.
+    pub(crate) fn upsert(&mut self, k: K, v: V, f: &impl Fn(V, V) -> V) {
+        match self.idx.get(&k) {
+            Some(&i) => {
+                let old = self.entries[i].1.clone();
+                self.entries[i].1 = f(old, v);
+            }
+            None => {
+                self.idx.insert(k.clone(), self.entries.len());
+                self.entries.push((k, v));
+            }
+        }
+    }
+
+    /// Entries in first-insertion order.
+    pub(crate) fn into_entries(self) -> Vec<(K, V)> {
+        self.entries
+    }
+}
+
 /// Map-side combine + hash shuffle + reduce-side merge. Returns one bucket
 /// of combined (K, V) pairs per output partition.
 ///
@@ -22,46 +65,35 @@ pub fn bucket_of<K: Hash>(key: &K, parts: usize) -> usize {
 /// combine), so shuffle volume is O(distinct keys) not O(records) — the
 /// difference the paper leans on when it calls Mahout's SGD
 /// "communication intensive".
+///
+/// Deterministic: source partitions are drained in index order, keys keep
+/// first-seen order, and values combine in stream order.
 pub fn shuffle_reduce<K, V>(
     parent: &Dataset<(K, V)>,
     parts: usize,
     f: &impl Fn(V, V) -> V,
 ) -> Result<Vec<Vec<(K, V)>>>
 where
-    K: Clone + Hash + Eq + 'static,
-    V: Clone + 'static,
+    K: Clone + Hash + Eq + Send + Sync + 'static,
+    V: Clone + Send + Sync + 'static,
 {
-    let mut buckets: Vec<HashMap<K, V>> = (0..parts).map(|_| HashMap::new()).collect();
-    for p in 0..parent.num_partitions() {
+    // materialize parents (parallel when the context has an executor and
+    // this runs on the driver thread; inline-serial inside a pool task)
+    let src = parent.partitions()?;
+    let mut buckets: Vec<OrderedMap<K, V>> = (0..parts).map(|_| OrderedMap::new()).collect();
+    for part in &src {
         // map-side combine
-        let mut local: HashMap<K, V> = HashMap::new();
-        for (k, v) in parent.partition(p)?.iter() {
-            match local.remove(k) {
-                None => {
-                    local.insert(k.clone(), v.clone());
-                }
-                Some(prev) => {
-                    local.insert(k.clone(), f(prev, v.clone()));
-                }
-            }
+        let mut local: OrderedMap<K, V> = OrderedMap::new();
+        for (k, v) in part.iter() {
+            local.upsert(k.clone(), v.clone(), f);
         }
         // shuffle into reduce-side buckets
-        for (k, v) in local {
+        for (k, v) in local.into_entries() {
             let b = bucket_of(&k, parts);
-            match buckets[b].remove(&k) {
-                None => {
-                    buckets[b].insert(k, v);
-                }
-                Some(prev) => {
-                    buckets[b].insert(k, f(prev, v));
-                }
-            }
+            buckets[b].upsert(k, v, f);
         }
     }
-    Ok(buckets
-        .into_iter()
-        .map(|m| m.into_iter().collect())
-        .collect())
+    Ok(buckets.into_iter().map(|m| m.into_entries()).collect())
 }
 
 /// Hash shuffle with grouping (no combine function).
@@ -70,22 +102,21 @@ pub fn shuffle_group<K, V>(
     parts: usize,
 ) -> Result<Vec<Vec<(K, Vec<V>)>>>
 where
-    K: Clone + Hash + Eq + 'static,
-    V: Clone + 'static,
+    K: Clone + Hash + Eq + Send + Sync + 'static,
+    V: Clone + Send + Sync + 'static,
 {
-    let mut buckets: Vec<HashMap<K, Vec<V>>> = (0..parts).map(|_| HashMap::new()).collect();
-    for p in 0..parent.num_partitions() {
-        for (k, v) in parent.partition(p)?.iter() {
-            buckets[bucket_of(k, parts)]
-                .entry(k.clone())
-                .or_default()
-                .push(v.clone());
+    let src = parent.partitions()?;
+    let mut buckets: Vec<OrderedMap<K, Vec<V>>> =
+        (0..parts).map(|_| OrderedMap::new()).collect();
+    for part in &src {
+        for (k, v) in part.iter() {
+            buckets[bucket_of(k, parts)].upsert(k.clone(), vec![v.clone()], &|mut a, b| {
+                a.extend(b);
+                a
+            });
         }
     }
-    Ok(buckets
-        .into_iter()
-        .map(|m| m.into_iter().collect())
-        .collect())
+    Ok(buckets.into_iter().map(|m| m.into_entries()).collect())
 }
 
 #[cfg(test)]
@@ -134,5 +165,20 @@ mod tests {
         let all: Vec<(&str, Vec<i32>)> = buckets.into_iter().flatten().collect();
         let a = all.iter().find(|(k, _)| *k == "a").unwrap();
         assert_eq!(a.1.len(), 2);
+    }
+
+    #[test]
+    fn shuffle_output_order_is_deterministic() {
+        // two identical runs produce byte-identical output order (no
+        // HashMap RandomState leakage)
+        let run = || {
+            let ctx = EngineContext::new();
+            let d = ctx.parallelize(
+                (0..200).map(|i| (i % 17, i as u64)).collect::<Vec<_>>(),
+                4,
+            );
+            shuffle_reduce(&d, 4, &|a, b| a + b).unwrap()
+        };
+        assert_eq!(run(), run());
     }
 }

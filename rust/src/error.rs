@@ -2,56 +2,81 @@
 //!
 //! Everything user-facing returns [`Result`]; internal invariant
 //! violations panic (they indicate bugs, not user errors).
+//!
+//! `Display`/`Error` are hand-implemented (no `thiserror` in this
+//! offline sandbox).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for the MLI crate.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Schema mismatch in an MLTable operation (union/join/cast).
-    #[error("schema error: {0}")]
     Schema(String),
 
     /// Shape mismatch in LocalMatrix algebra.
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// Numerical failure (singular solve, non-convergence).
-    #[error("numerical error: {0}")]
     Numerical(String),
 
     /// Engine / scheduler failure (lost partition beyond retry budget,
     /// missing dependency, bad partitioning).
-    #[error("engine error: {0}")]
     Engine(String),
 
     /// Simulated out-of-memory: a workload exceeded a machine's capacity.
     /// Benches report this as DNF, mirroring the paper's MATLAB OOMs.
-    #[error("out of memory: {0}")]
     Oom(String),
 
     /// PJRT runtime failure (artifact missing, shape mismatch at the
     /// XLA boundary, execution error).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Configuration / CLI parse error.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Malformed input data (CSV/JSON/text loaders).
-    #[error("parse error: {0}")]
     Parse(String),
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    #[error("xla error: {0}")]
     Xla(String),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Schema(m) => write!(f, "schema error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Numerical(m) => write!(f, "numerical error: {m}"),
+            Error::Engine(m) => write!(f, "engine error: {m}"),
+            Error::Oom(m) => write!(f, "out of memory: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<crate::xla::Error> for Error {
+    fn from(e: crate::xla::Error) -> Self {
         Error::Xla(e.to_string())
     }
 }

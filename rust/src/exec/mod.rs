@@ -1,0 +1,33 @@
+//! `exec`: the multi-threaded work-stealing task executor.
+//!
+//! The paper's MLI sits on Spark precisely because a real execution engine
+//! schedules one task per partition onto parallel workers. This module is
+//! that substrate for our Spark surrogate: a fixed-size [`ThreadPool`]
+//! with per-worker deques and work stealing ([`queue::TaskQueue`]), a
+//! [`TaskSet`] abstraction for one-task-per-partition stages, and
+//! per-worker execution metrics ([`WorkerStats`]: tasks run, steals,
+//! busy/idle nanos) exportable into [`crate::metrics::Metrics`].
+//!
+//! Two layers attach a pool:
+//!
+//! * [`crate::engine::EngineContext::with_executor`] — `Dataset` actions
+//!   (`collect`, `count`, `reduce`, `aggregate`, `materialize`) evaluate
+//!   partitions in parallel.
+//! * [`crate::cluster::SimCluster::with_executor`] — the algorithm hot
+//!   loops (SGD/GD local steps, ALS factor solves, k-means stats) fan
+//!   their per-partition tasks out.
+//!
+//! **Determinism contract:** scheduling order varies with thread count and
+//! stealing, but every stage merges results *by task index*, so all
+//! actions produce bitwise-identical results for any thread count
+//! (including the serial no-pool path). Real wall-clock time shrinks;
+//! *simulated* time (the `SimCluster` ledger) is unchanged by
+//! construction — see `cluster/sim.rs` for the distinction.
+
+pub mod pool;
+pub mod queue;
+pub mod worker;
+
+pub use pool::{TaskSet, ThreadPool};
+pub use queue::TaskQueue;
+pub use worker::{is_pool_thread, WorkerStats};

@@ -1,0 +1,74 @@
+//! Per-worker task deques + the shared injector queue.
+//!
+//! Each worker owns one [`TaskQueue`]. The owner pushes and pops at the
+//! *back* (LIFO: freshly-submitted partition tasks stay cache-warm);
+//! thieves steal from the *front* (FIFO: the oldest — and on skewed
+//! stages, typically the largest-remaining — work migrates first). This is
+//! the classic work-stealing discipline (Chase–Lev), implemented over a
+//! `Mutex<VecDeque>` rather than a lock-free ring: partition tasks here are
+//! milliseconds, not nanoseconds, so queue overhead is irrelevant and the
+//! mutex keeps the code obviously correct.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use super::pool::Task;
+
+/// A mutex-protected double-ended task queue.
+#[derive(Default)]
+pub struct TaskQueue {
+    inner: Mutex<VecDeque<Task>>,
+}
+
+impl TaskQueue {
+    pub fn new() -> TaskQueue {
+        TaskQueue::default()
+    }
+
+    /// Owner-side push (back of the deque).
+    pub(crate) fn push(&self, task: Task) {
+        self.inner.lock().unwrap().push_back(task);
+    }
+
+    /// Owner-side pop (back of the deque, LIFO).
+    pub(crate) fn pop(&self) -> Option<Task> {
+        self.inner.lock().unwrap().pop_back()
+    }
+
+    /// Thief-side steal (front of the deque, FIFO).
+    pub(crate) fn steal(&self) -> Option<Task> {
+        self.inner.lock().unwrap().pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn noop() -> Task {
+        Task::detached(Box::new(|| {}))
+    }
+
+    #[test]
+    fn lifo_for_owner_fifo_for_thief() {
+        let q = TaskQueue::new();
+        assert!(q.is_empty());
+        q.push(noop());
+        q.push(noop());
+        q.push(noop());
+        assert_eq!(q.len(), 3);
+        assert!(q.pop().is_some());
+        assert!(q.steal().is_some());
+        assert!(q.pop().is_some());
+        assert!(q.pop().is_none());
+        assert!(q.steal().is_none());
+    }
+}

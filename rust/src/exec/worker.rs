@@ -1,0 +1,119 @@
+//! Worker thread loop + per-worker execution metrics.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::pool::{Shared, Task};
+
+/// Per-worker counters, written by the worker thread with relaxed atomics
+/// and snapshotted by [`super::ThreadPool::worker_stats`].
+#[derive(Default)]
+pub struct WorkerMetrics {
+    pub tasks: AtomicU64,
+    pub steals: AtomicU64,
+    pub busy_nanos: AtomicU64,
+    pub idle_nanos: AtomicU64,
+}
+
+/// Read-only snapshot of one worker's metrics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerStats {
+    pub worker: usize,
+    pub tasks: u64,
+    pub steals: u64,
+    pub busy_nanos: u64,
+    pub idle_nanos: u64,
+}
+
+impl WorkerMetrics {
+    pub fn snapshot(&self, worker: usize) -> WorkerStats {
+        WorkerStats {
+            worker,
+            tasks: self.tasks.load(Ordering::Relaxed),
+            steals: self.steals.load(Ordering::Relaxed),
+            busy_nanos: self.busy_nanos.load(Ordering::Relaxed),
+            idle_nanos: self.idle_nanos.load(Ordering::Relaxed),
+        }
+    }
+}
+
+thread_local! {
+    static IS_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True when the current thread is a pool worker. Scoped stages use this
+/// to run nested stages inline instead of re-submitting to the pool (which
+/// could deadlock a task that blocks on its own pool).
+pub fn is_pool_thread() -> bool {
+    IS_POOL_WORKER.with(|f| f.get())
+}
+
+/// The worker main loop: drain own deque (LIFO), then the shared injector,
+/// then steal from siblings (FIFO); park when there is nothing anywhere.
+pub(crate) fn run(shared: Arc<Shared>, idx: usize) {
+    IS_POOL_WORKER.with(|f| f.set(true));
+    loop {
+        if let Some(task) = find_task(&shared, idx) {
+            execute(&shared, idx, task);
+            continue;
+        }
+        // Park. The lock-ordering dance matters: submitters notify while
+        // holding `park_lock`, and we re-check for work while holding it,
+        // so a task pushed between our failed scan and the wait cannot be
+        // missed.
+        let guard = shared.park_lock.lock().unwrap();
+        if shared.is_shutdown() {
+            break;
+        }
+        if shared.has_work() {
+            continue;
+        }
+        let sw = crate::util::timer::Stopwatch::start();
+        // Timeout is belt-and-braces only; correctness comes from the
+        // re-check above.
+        let _ = shared
+            .park_cv
+            .wait_timeout(guard, Duration::from_millis(100))
+            .unwrap();
+        shared.metrics[idx]
+            .idle_nanos
+            .fetch_add(sw.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+}
+
+fn execute(shared: &Arc<Shared>, idx: usize, task: Task) {
+    let sw = crate::util::timer::Stopwatch::start();
+    let Task { job, done } = task;
+    // A panicking task must not kill the worker or wedge its stage: catch
+    // the unwind (the stage re-raises it on the submitting thread via the
+    // task's empty result slot), and signal completion only after the job
+    // and everything it borrowed have been dropped.
+    let _ = catch_unwind(AssertUnwindSafe(job));
+    let m = &shared.metrics[idx];
+    m.tasks.fetch_add(1, Ordering::Relaxed);
+    m.busy_nanos
+        .fetch_add(sw.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    if let Some(done) = done {
+        done.signal();
+    }
+}
+
+fn find_task(shared: &Arc<Shared>, idx: usize) -> Option<Task> {
+    if let Some(t) = shared.queues[idx].pop() {
+        return Some(t);
+    }
+    if let Some(t) = shared.injector.steal() {
+        return Some(t);
+    }
+    let n = shared.queues.len();
+    for k in 1..n {
+        if let Some(t) = shared.queues[(idx + k) % n].steal() {
+            shared.metrics[idx].steals.fetch_add(1, Ordering::Relaxed);
+            return Some(t);
+        }
+    }
+    None
+}

@@ -3,7 +3,7 @@
 //! each document to its n-gram count vector.
 
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use super::tokenize::tokenize;
 use crate::error::{Error, Result};
@@ -13,7 +13,7 @@ use crate::mltable::{MLNumericTable, MLRow, MLTable, Schema};
 /// (index -> n-gram), needed to interpret the columns downstream.
 pub struct NGramsOutput {
     pub table: MLNumericTable,
-    pub vocab: Rc<Vec<String>>,
+    pub vocab: Arc<Vec<String>>,
 }
 
 /// Extract n-gram counts. `text_col` must be a Str column; the output has
@@ -46,8 +46,8 @@ pub fn ngrams(table: &MLTable, text_col: usize, n: usize, top: usize) -> Result<
     let mut sorted: Vec<(String, u64)> = counts;
     sorted.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
     sorted.truncate(top);
-    let vocab: Rc<Vec<String>> = Rc::new(sorted.into_iter().map(|(g, _)| g).collect());
-    let index: Rc<HashMap<String, usize>> = Rc::new(
+    let vocab: Arc<Vec<String>> = Arc::new(sorted.into_iter().map(|(g, _)| g).collect());
+    let index: Arc<HashMap<String, usize>> = Arc::new(
         vocab
             .iter()
             .enumerate()

@@ -1,7 +1,7 @@
 //! Column standardization: (x - mean) / std per column — the usual
 //! preprocessing before SGD on raw features.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::error::Result;
 use crate::mltable::{MLNumericTable, MLRow, Schema};
@@ -45,8 +45,8 @@ pub fn standard_scale(t: &MLNumericTable, skip_cols: usize) -> Result<MLNumericT
         .zip(&mean)
         .map(|(q, m)| ((q / n.max(1.0)) - m * m).max(0.0).sqrt())
         .collect();
-    let mean = Rc::new(mean);
-    let std = Rc::new(std);
+    let mean = Arc::new(mean);
+    let std = Arc::new(std);
 
     let table = t.table().map(Schema::numeric(d), move |r| {
         let out: Vec<f64> = (0..d)

@@ -34,7 +34,7 @@ pub fn tfidf(counts: &MLNumericTable) -> Result<MLNumericTable> {
         })?
         .unwrap_or_else(|| vec![0.0; d]);
 
-    let idf: std::rc::Rc<Vec<f64>> = std::rc::Rc::new(
+    let idf: std::sync::Arc<Vec<f64>> = std::sync::Arc::new(
         df.iter().map(|&dfj| (n_docs / (1.0 + dfj)).ln().max(0.0)).collect(),
     );
 

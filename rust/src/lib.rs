@@ -14,6 +14,18 @@
 //! [`runtime`] through the PJRT CPU client. Python never runs on the
 //! training path.
 //!
+//! Beneath the engine sits [`exec`], a multi-threaded work-stealing task
+//! executor. Attaching a pool (`SimCluster::with_executor` /
+//! `EngineContext::with_executor`, or `--threads` on the CLI) makes
+//! per-partition stages — dataset actions, SGD/GD epochs, ALS solves,
+//! k-means assignment — evaluate concurrently on host threads. Two clocks
+//! are in play: the executor shrinks *real* wall-clock time, while the
+//! *simulated* cluster time charged by [`cluster::SimCluster`]'s analytic
+//! ledger is unaffected by host thread count. Results are bitwise
+//! identical for any thread count: workers compute per-partition pieces
+//! in parallel, but every merge/fold happens on the calling thread in
+//! partition-index order.
+//!
 //! Layout mirrors DESIGN.md §4; every paper table/figure has a bench in
 //! `rust/benches/` (DESIGN.md §5).
 
@@ -25,6 +37,7 @@ pub mod config;
 pub mod data;
 pub mod engine;
 pub mod error;
+pub mod exec;
 pub mod features;
 pub mod localmatrix;
 pub mod metrics;
@@ -32,6 +45,7 @@ pub mod mltable;
 pub mod optim;
 pub mod runtime;
 pub mod util;
+pub mod xla;
 
 
 pub use error::{Error, Result};
@@ -45,6 +59,7 @@ pub mod prelude {
     pub use crate::cluster::{CommTopology, SimCluster};
     pub use crate::engine::EngineContext;
     pub use crate::error::{Error, Result};
+    pub use crate::exec::{TaskSet, ThreadPool};
     pub use crate::features::{ngrams, standard_scale, tfidf};
     pub use crate::localmatrix::{CsrMatrix, DenseMatrix, LocalMatrix, MLVector};
     pub use crate::mltable::{
@@ -88,17 +103,31 @@ pub fn run_cli(args: util::cli::Args) -> Result<()> {
             Ok(())
         }
         Some("train") => {
-            // mli train --algo logreg|als --machines M --iters N [--xla false]
+            // mli train --algo logreg|als --machines M --iters N [--threads T]
             let machines = args.get_usize("machines", 4)?;
             let iters = args.get_usize("iters", 10)?;
             let use_xla = !args.has_flag("no-xla");
+            // --threads T attaches the exec pool (T=0 or bare --threads:
+            // fleet-capped default); omitting it keeps evaluation serial
+            let threads = if args.has_flag("threads") {
+                Some(0)
+            } else {
+                args.get("threads").map(|_| args.get_usize("threads", 0)).transpose()?
+            };
+            let make_cluster = |m: usize| {
+                let c = cluster::SimCluster::ec2(m);
+                match threads {
+                    Some(t) => c.with_executor(t),
+                    None => c,
+                }
+            };
             match args.get_str("algo", "logreg").as_str() {
                 "logreg" => {
                     let ctx = engine::EngineContext::new();
                     let n = args.get_usize("n", 2048)?;
                     let d = args.get_usize("d", 64)?;
                     let data = data::dense_gen::generate(&ctx, n, d, machines, 1)?;
-                    let cluster = cluster::SimCluster::ec2(machines);
+                    let cluster = make_cluster(machines);
                     let algo = algorithms::LogisticRegression::new(
                         algorithms::logreg::LogRegParams {
                             sgd: optim::SgdParams {
@@ -121,7 +150,7 @@ pub fn run_cli(args: util::cli::Args) -> Result<()> {
                         items: args.get_usize("items", 96)?,
                         ..Default::default()
                     });
-                    let cluster = cluster::SimCluster::ec2(machines);
+                    let cluster = make_cluster(machines);
                     let model = algorithms::ALS::new(algorithms::AlsParams {
                         rank: args.get_usize("rank", 10)?,
                         iters,
@@ -157,6 +186,7 @@ pub fn run_cli(args: util::cli::Args) -> Result<()> {
                         backend: Backend::Xla,
                         seed: 42,
                         reps: 1,
+                        threads: args.get_usize("threads", 0)?,
                     };
                     println!("{}", logreg_scaling(&c, mode)?.to_markdown());
                 }
@@ -169,12 +199,82 @@ pub fn run_cli(args: util::cli::Args) -> Result<()> {
                     let c = AlsBenchConfig {
                         machines,
                         iters,
+                        threads: args.get_usize("threads", 0)?,
                         ..Default::default()
                     };
                     println!("{}", als_scaling(&c, mode)?.to_markdown());
                 }
                 other => return Err(Error::Config(format!("unknown --figure '{other}'"))),
             }
+            Ok(())
+        }
+        Some("exec-bench") => {
+            // mli exec-bench [--threads 1,2,4,8] [--partitions P] [--n N] [--d D]
+            //
+            // Thread-scaling table for the exec pool: trains the same logreg
+            // workload (Rust backend — no AOT artifacts needed) at each host
+            // thread count and reports real wall-clock, speedup over 1 thread,
+            // and the pool's task/steal counters. Results are checked to be
+            // bitwise identical across thread counts; simulated cluster time
+            // is thread-independent by construction.
+            let thread_counts = args.get_usize_list("threads", &[1, 2, 4, 8])?;
+            let parts = args.get_usize("partitions", 8)?;
+            let n = args.get_usize("n", 8192)?;
+            let d = args.get_usize("d", 64)?;
+            let iters = args.get_usize("iters", 10)?;
+            let mut table = metrics::Table::new(
+                "exec thread scaling (logreg, Rust backend)",
+                &["threads", "wall_ms", "speedup", "tasks", "steals", "sim_s"],
+            );
+            let mut base_wall: Option<f64> = None;
+            let mut base_weights: Option<localmatrix::MLVector> = None;
+            for &t in &thread_counts {
+                let ctx = engine::EngineContext::new();
+                let data = data::dense_gen::generate(&ctx, n, d, parts, 7)?;
+                let cluster = cluster::SimCluster::ec2(parts).with_executor(t.max(1));
+                let algo = algorithms::LogisticRegression::new(
+                    algorithms::logreg::LogRegParams {
+                        sgd: optim::SgdParams { iters, ..Default::default() },
+                        backend: Backend::Rust,
+                    },
+                );
+                use algorithms::Algorithm;
+                let start = std::time::Instant::now();
+                let model = algo.train(&data.table, &cluster)?;
+                let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+                match &base_weights {
+                    None => base_weights = Some(model.weights.clone()),
+                    Some(b) => {
+                        if b != &model.weights {
+                            return Err(Error::Engine(format!(
+                                "exec-bench: weights diverged at {t} threads \
+                                 (determinism contract violated)"
+                            )));
+                        }
+                    }
+                }
+                let (tasks, steals) = cluster
+                    .pool()
+                    .map(|p| {
+                        let s = p.worker_stats();
+                        (
+                            s.iter().map(|w| w.tasks).sum::<u64>(),
+                            s.iter().map(|w| w.steals).sum::<u64>(),
+                        )
+                    })
+                    .unwrap_or((0, 0));
+                let base = *base_wall.get_or_insert(wall_ms);
+                table.row(vec![
+                    t.to_string(),
+                    format!("{wall_ms:.1}"),
+                    format!("{:.2}x", base / wall_ms),
+                    tasks.to_string(),
+                    steals.to_string(),
+                    format!("{:.3}", cluster.total_sim_seconds()),
+                ]);
+            }
+            println!("{}", table.to_markdown());
+            println!("(results bitwise-identical across all thread counts)");
             Ok(())
         }
         Some("loc") => {
@@ -190,8 +290,15 @@ pub fn run_cli(args: util::cli::Args) -> Result<()> {
             println!("  selftest                              compile+run one AOT artifact");
             println!("  train --algo logreg|als --machines M  train on the simulated cluster");
             println!("  bench --figure fig2|figA5|fig3|figA7  regenerate a paper figure (CLI scale)");
+            println!("  exec-bench [--threads 1,2,4,8]        exec pool thread-scaling table");
             println!("  loc                                   Fig 2a/3a lines-of-code tables");
             println!("  help                                  this message");
+            println!();
+            println!("  --threads T   evaluate partitions on a T-thread work-stealing pool");
+            println!("                (T=0: one thread per simulated machine, host-capped;");
+            println!("                affects real wall-clock only — simulated time and");
+            println!("                results are identical for any T)");
+            println!("                e.g. `mli train --algo logreg --machines 8 --threads 4`");
             println!();
             println!("full-scale figures: `cargo bench` (see rust/benches/)");
             Ok(())

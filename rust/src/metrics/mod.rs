@@ -1,17 +1,19 @@
 //! Metrics: counters, timer series, and table reporters used by the
 //! training loops and the bench harness.
 
-use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
+use std::sync::Mutex;
 
 use crate::util;
 
-/// A named collection of counters and timing series.
+/// A named collection of counters and timing series. Mutex-guarded
+/// (`Send + Sync`) so `exec` pool workers and the driver can record into
+/// one registry.
 #[derive(Debug, Default)]
 pub struct Metrics {
-    counters: RefCell<BTreeMap<String, u64>>,
-    series: RefCell<BTreeMap<String, Vec<f64>>>,
+    counters: Mutex<BTreeMap<String, u64>>,
+    series: Mutex<BTreeMap<String, Vec<f64>>>,
 }
 
 impl Metrics {
@@ -24,24 +26,35 @@ impl Metrics {
     }
 
     pub fn add(&self, name: &str, v: u64) {
-        *self.counters.borrow_mut().entry(name.to_string()).or_insert(0) += v;
+        *self
+            .counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert(0) += v;
     }
 
     pub fn counter(&self, name: &str) -> u64 {
-        self.counters.borrow().get(name).copied().unwrap_or(0)
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
     }
 
     /// Append a sample (seconds, losses, whatever) to a named series.
     pub fn observe(&self, name: &str, v: f64) {
         self.series
-            .borrow_mut()
+            .lock()
+            .unwrap()
             .entry(name.to_string())
             .or_default()
             .push(v);
     }
 
     pub fn series(&self, name: &str) -> Vec<f64> {
-        self.series.borrow().get(name).cloned().unwrap_or_default()
+        self.series
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .unwrap_or_default()
     }
 
     pub fn summary(&self, name: &str) -> (usize, f64, f64, f64) {
@@ -52,14 +65,14 @@ impl Metrics {
     /// Render everything as an aligned text report.
     pub fn report(&self) -> String {
         let mut out = String::new();
-        let counters = self.counters.borrow();
+        let counters = self.counters.lock().unwrap();
         if !counters.is_empty() {
             out.push_str("counters:\n");
             for (k, v) in counters.iter() {
                 let _ = writeln!(out, "  {k:<40} {v}");
             }
         }
-        let series = self.series.borrow();
+        let series = self.series.lock().unwrap();
         if !series.is_empty() {
             out.push_str("series (n / mean / median / stddev):\n");
             for (k, s) in series.iter() {

@@ -3,7 +3,7 @@
 //! entry point (`mc.textFile(...)` in Fig. A2).
 
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use super::row::MLRow;
 use super::schema::{Column, Schema};
@@ -17,7 +17,7 @@ use crate::error::{Error, Result};
 /// widening order Int -> Scalar -> Str (Bool only if every value parses
 /// as bool); columns with any Empty stay at the inferred non-empty type.
 pub fn csv_from_str(
-    ctx: &Rc<EngineContext>,
+    ctx: &Arc<EngineContext>,
     text: &str,
     header: bool,
     partitions: usize,
@@ -135,7 +135,7 @@ fn split_csv_line(line: &str) -> Vec<String> {
 
 /// Load a CSV file.
 pub fn csv_from_file(
-    ctx: &Rc<EngineContext>,
+    ctx: &Arc<EngineContext>,
     path: impl AsRef<Path>,
     header: bool,
     partitions: usize,
@@ -146,7 +146,7 @@ pub fn csv_from_file(
 
 /// Load raw text: one row per line, single Str column named "text"
 /// (Fig. A2 `mc.textFile(args(0))`).
-pub fn text_from_str(ctx: &Rc<EngineContext>, text: &str, partitions: usize) -> Result<MLTable> {
+pub fn text_from_str(ctx: &Arc<EngineContext>, text: &str, partitions: usize) -> Result<MLTable> {
     let rows: Vec<MLRow> = text
         .lines()
         .map(|l| MLRow::new(vec![Value::Str(l.to_string())]))
@@ -160,7 +160,7 @@ pub fn text_from_str(ctx: &Rc<EngineContext>, text: &str, partitions: usize) -> 
 }
 
 pub fn text_from_file(
-    ctx: &Rc<EngineContext>,
+    ctx: &Arc<EngineContext>,
     path: impl AsRef<Path>,
     partitions: usize,
 ) -> Result<MLTable> {
@@ -172,7 +172,7 @@ pub fn text_from_file(
 mod tests {
     use super::*;
 
-    fn ctx() -> Rc<EngineContext> {
+    fn ctx() -> Arc<EngineContext> {
         EngineContext::new()
     }
 

@@ -82,7 +82,7 @@ impl MLNumericTable {
     /// Per-partition matrix map (delegates to the MLTable op).
     pub fn matrix_batch_map(
         &self,
-        f: impl Fn(usize, &LocalMatrix) -> Result<LocalMatrix> + 'static,
+        f: impl Fn(usize, &LocalMatrix) -> Result<LocalMatrix> + Send + Sync + 'static,
     ) -> Result<MLNumericTable> {
         self.table.matrix_batch_map(f)
     }

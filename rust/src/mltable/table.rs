@@ -2,7 +2,7 @@
 //! dataflow engine's `Dataset<MLRow>`.
 
 use std::hash::{Hash, Hasher};
-use std::rc::Rc;
+use std::sync::Arc;
 
 use super::numeric::MLNumericTable;
 use super::row::MLRow;
@@ -53,7 +53,7 @@ pub struct MLTable {
 impl MLTable {
     /// Build from rows (validates against the schema).
     pub fn from_rows(
-        ctx: &Rc<EngineContext>,
+        ctx: &Arc<EngineContext>,
         rows: Vec<MLRow>,
         schema: Schema,
         partitions: usize,
@@ -83,7 +83,7 @@ impl MLTable {
         &self.data
     }
 
-    pub fn context(&self) -> Rc<EngineContext> {
+    pub fn context(&self) -> Arc<EngineContext> {
         self.data.context()
     }
 
@@ -132,7 +132,7 @@ impl MLTable {
     }
 
     /// `filter(MLRow => Bool)`.
-    pub fn filter(&self, f: impl Fn(&MLRow) -> bool + 'static) -> MLTable {
+    pub fn filter(&self, f: impl Fn(&MLRow) -> bool + Send + Sync + 'static) -> MLTable {
         MLTable {
             data: self.data.filter(f),
             schema: self.schema.clone(),
@@ -140,7 +140,11 @@ impl MLTable {
     }
 
     /// `map(MLRow => MLRow)` — caller supplies the output schema.
-    pub fn map(&self, schema: Schema, f: impl Fn(&MLRow) -> MLRow + 'static) -> MLTable {
+    pub fn map(
+        &self,
+        schema: Schema,
+        f: impl Fn(&MLRow) -> MLRow + Send + Sync + 'static,
+    ) -> MLTable {
         MLTable {
             data: self.data.map(f),
             schema,
@@ -151,7 +155,7 @@ impl MLTable {
     pub fn flat_map(
         &self,
         schema: Schema,
-        f: impl Fn(&MLRow) -> Vec<MLRow> + 'static,
+        f: impl Fn(&MLRow) -> Vec<MLRow> + Send + Sync + 'static,
     ) -> MLTable {
         MLTable {
             data: self.data.flat_map(f),
@@ -170,7 +174,7 @@ impl MLTable {
     pub fn reduce_by_key(
         &self,
         key_col: usize,
-        f: impl Fn(&MLRow, &MLRow) -> MLRow + 'static,
+        f: impl Fn(&MLRow, &MLRow) -> MLRow + Send + Sync + 'static,
     ) -> Result<MLTable> {
         if key_col >= self.schema.len() {
             return Err(Error::Schema(format!("reduceByKey: column {key_col} out of range")));
@@ -231,7 +235,7 @@ impl MLTable {
     /// (Fig. A4 `data.matrixBatchMap(localSGD(...))`).
     pub fn matrix_batch_map(
         &self,
-        f: impl Fn(usize, &LocalMatrix) -> Result<LocalMatrix> + 'static,
+        f: impl Fn(usize, &LocalMatrix) -> Result<LocalMatrix> + Send + Sync + 'static,
     ) -> Result<MLNumericTable> {
         if !self.schema.is_numeric() {
             return Err(Error::Schema(
@@ -265,14 +269,11 @@ impl MLTable {
 
     /// Deterministic Bernoulli sample of rows (fraction in [0, 1]).
     pub fn sample(&self, fraction: f64, seed: u64) -> MLTable {
-        use std::cell::RefCell;
-        let rngs: RefCell<std::collections::HashMap<usize, crate::util::rng::Rng>> =
-            RefCell::new(std::collections::HashMap::new());
+        // fresh RNG per partition evaluation, seeded by (seed, p): the
+        // sample is a pure function of the inputs, stable across
+        // recomputation (lineage recovery) and executor thread counts
         let data = self.data.map_partitions(move |p, rows| {
-            let mut rngs = rngs.borrow_mut();
-            let rng = rngs
-                .entry(p)
-                .or_insert_with(|| crate::util::rng::Rng::new(seed ^ (p as u64) << 17));
+            let mut rng = crate::util::rng::Rng::new(seed ^ ((p as u64) << 17));
             Ok(rows
                 .iter()
                 .filter(|_| rng.f64() < fraction)
@@ -404,11 +405,11 @@ mod tests {
     use super::super::value::ColumnType;
     use super::*;
 
-    fn ctx() -> Rc<EngineContext> {
+    fn ctx() -> Arc<EngineContext> {
         EngineContext::new()
     }
 
-    fn people(ctx: &Rc<EngineContext>) -> MLTable {
+    fn people(ctx: &Arc<EngineContext>) -> MLTable {
         let schema = Schema::new(vec![
             Column::named("id", ColumnType::Int),
             Column::named("name", ColumnType::Str),

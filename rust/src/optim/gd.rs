@@ -6,6 +6,7 @@
 use super::{LocalStepProvider, Reg};
 use crate::cluster::{CommTopology, SimCluster};
 use crate::error::Result;
+use crate::exec::TaskSet;
 
 #[derive(Debug, Clone)]
 pub struct GdParams {
@@ -38,6 +39,7 @@ impl GD {
     ) -> Result<super::SgdResult> {
         let d = provider.dim();
         let parts = provider.num_partitions();
+        let pool = cluster.pool();
         let mut w = vec![0.0f32; d];
         let mut loss_history = Vec::new();
         let t0 = cluster.total_sim_seconds();
@@ -47,10 +49,16 @@ impl GD {
             let mut grad = vec![0.0f64; d];
             let mut loss = 0.0;
             let mut examples = 0.0;
-            for p in 0..parts {
+            // gradients computed in parallel (one task per partition), but
+            // accumulated below in partition index order — deterministic
+            // for any thread count despite f64 addition being non-associative
+            let stage = TaskSet::new(format!("gd-grad-{it}"), parts);
+            let results = stage.run(pool.as_deref(), |p| {
                 let machine = cluster.machine_of(p);
-                let (g, l, n) =
-                    cluster.run_task(machine, || provider.local_grad(p, &w))?;
+                cluster.run_task(machine, || provider.local_grad(p, &w))
+            });
+            for r in results {
+                let (g, l, n) = r?;
                 for (acc, &x) in grad.iter_mut().zip(&g) {
                     *acc += x as f64;
                 }

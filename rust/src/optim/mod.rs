@@ -24,7 +24,12 @@ use crate::error::Result;
 /// Implementations hold their data already partitioned (and, for the XLA
 /// path, already padded into `Tensor`s) so the per-round hot path does no
 /// re-marshalling.
-pub trait LocalStepProvider {
+///
+/// `Send + Sync` is a supertrait so optimizers can fan partition steps out
+/// across the cluster's `exec` thread pool; per-partition calls must not
+/// share unsynchronized mutable state (they only read `w` and their own
+/// partition's data).
+pub trait LocalStepProvider: Send + Sync {
     /// Model dimension (padded, for XLA-backed providers).
     fn dim(&self) -> usize;
 

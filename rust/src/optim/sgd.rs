@@ -11,6 +11,7 @@
 use super::{average_weights, LocalStepProvider, Reg};
 use crate::cluster::{CommTopology, SimCluster};
 use crate::error::Result;
+use crate::exec::TaskSet;
 
 /// SGD hyper-parameters (Fig. A4 `StochasticGradientDescentParameters`).
 #[derive(Debug, Clone)]
@@ -60,6 +61,12 @@ pub struct SGD;
 impl SGD {
     /// Run distributed SGD. The provider owns the partitioned data; the
     /// cluster is charged measured compute + modelled communication.
+    ///
+    /// When the cluster has an executor attached
+    /// ([`SimCluster::with_executor`]), every round's local epochs run in
+    /// parallel on the pool — one task per partition, results merged in
+    /// partition index order, so the trained weights are bitwise-identical
+    /// to the serial path for any thread count.
     pub fn run(
         provider: &dyn LocalStepProvider,
         cluster: &SimCluster,
@@ -67,6 +74,7 @@ impl SGD {
     ) -> Result<SgdResult> {
         let d = provider.dim();
         let parts = provider.num_partitions();
+        let pool = cluster.pool();
         let mut w = vec![0.0f32; d];
         let mut loss_history = Vec::new();
         let t0 = cluster.total_sim_seconds();
@@ -79,11 +87,14 @@ impl SGD {
         for it in 0..params.iters {
             let eta = params.learning_rate / (1.0 + params.decay * it as f64);
             cluster.begin_round();
-            let mut locals: Vec<(Vec<f32>, f64)> = Vec::with_capacity(parts);
-            for p in 0..parts {
+            let stage = TaskSet::new(format!("sgd-epoch-{it}"), parts);
+            let results = stage.run(pool.as_deref(), |p| {
                 let machine = cluster.machine_of(p);
-                let lw = cluster.run_task(machine, || provider.local_epoch(p, &w, eta as f32))?;
-                locals.push((lw, provider.partition_weight(p)));
+                cluster.run_task(machine, || provider.local_epoch(p, &w, eta as f32))
+            });
+            let mut locals: Vec<(Vec<f32>, f64)> = Vec::with_capacity(parts);
+            for (p, lw) in results.into_iter().enumerate() {
+                locals.push((lw?, provider.partition_weight(p)));
             }
             w = average_weights(&locals);
             params.reg.apply_prox(&mut w, eta);
@@ -238,6 +249,22 @@ mod tests {
         assert_eq!(r1.weights, r2.weights);
         // different comm accounting
         assert_ne!(star.total_comm_seconds(), tree.total_comm_seconds());
+    }
+
+    #[test]
+    fn parallel_epochs_bitwise_match_serial() {
+        let q = quad(8, 16, 7);
+        let p = SgdParams {
+            iters: 12,
+            ..Default::default()
+        };
+        let serial = SGD::run(&q, &SimCluster::ec2(8), &p).unwrap();
+        for threads in [1, 2, 8] {
+            let c = SimCluster::ec2(8).with_executor(threads);
+            let par = SGD::run(&q, &c, &p).unwrap();
+            assert_eq!(par.weights, serial.weights, "threads={threads}");
+            assert_eq!(c.rounds(), 13); // 12 + initial broadcast
+        }
     }
 
     #[test]

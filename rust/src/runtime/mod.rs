@@ -21,12 +21,12 @@
 
 pub mod manifest;
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
+use crate::xla;
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
 
 /// A typed input tensor handed to [`Runtime::execute`].
@@ -204,17 +204,16 @@ impl Executable {
 
 /// The PJRT runtime: client + artifact registry + executable cache.
 ///
-/// Not `Sync` (the underlying PJRT client is single-threaded here); the
-/// engine executes tasks on the driver thread, mirroring the fact that
-/// this sandbox has one core. One `Runtime` is shared per process via
-/// [`Runtime::global`].
+/// `Send + Sync`: the cache and counters sit behind mutexes so the `exec`
+/// thread pool can share one `Runtime` across workers. One `Runtime` is
+/// shared per process via [`Runtime::global`].
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
     /// execution counters for the metrics report
-    pub exec_count: RefCell<HashMap<String, u64>>,
+    pub exec_count: Mutex<HashMap<String, u64>>,
 }
 
 impl Runtime {
@@ -228,8 +227,8 @@ impl Runtime {
             client,
             dir,
             manifest,
-            cache: RefCell::new(HashMap::new()),
-            exec_count: RefCell::new(HashMap::new()),
+            cache: Mutex::new(HashMap::new()),
+            exec_count: Mutex::new(HashMap::new()),
         })
     }
 
@@ -240,18 +239,14 @@ impl Runtime {
             .unwrap_or_else(|_| PathBuf::from("artifacts"))
     }
 
-    /// Process-wide runtime (thread-local; the engine is single-threaded).
-    pub fn global() -> Result<Rc<Runtime>> {
-        thread_local! {
-            static GLOBAL: RefCell<Option<Rc<Runtime>>> = const { RefCell::new(None) };
+    /// Process-wide runtime, shared across all worker threads.
+    pub fn global() -> Result<Arc<Runtime>> {
+        static GLOBAL: Mutex<Option<Arc<Runtime>>> = Mutex::new(None);
+        let mut g = GLOBAL.lock().unwrap();
+        if g.is_none() {
+            *g = Some(Arc::new(Runtime::new(Runtime::artifact_dir())?));
         }
-        GLOBAL.with(|g| {
-            let mut g = g.borrow_mut();
-            if g.is_none() {
-                *g = Some(Rc::new(Runtime::new(Runtime::artifact_dir())?));
-            }
-            Ok(g.as_ref().unwrap().clone())
-        })
+        Ok(g.as_ref().unwrap().clone())
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -264,9 +259,9 @@ impl Runtime {
     }
 
     /// Fetch (compiling + caching on first use) an executable.
-    pub fn executable(&self, entry: &str, variant: &str) -> Result<Rc<Executable>> {
+    pub fn executable(&self, entry: &str, variant: &str) -> Result<Arc<Executable>> {
         let key = format!("{entry}__{variant}");
-        if let Some(e) = self.cache.borrow().get(&key) {
+        if let Some(e) = self.cache.lock().unwrap().get(&key) {
             return Ok(e.clone());
         }
         let spec = self
@@ -282,12 +277,12 @@ impl Runtime {
         let proto = xla::HloModuleProto::from_text_file(&path)?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp)?;
-        let e = Rc::new(Executable {
+        let e = Arc::new(Executable {
             exe,
             client: self.client.clone(),
             spec,
         });
-        self.cache.borrow_mut().insert(key, e.clone());
+        self.cache.lock().unwrap().insert(key, e.clone());
         Ok(e)
     }
 
@@ -303,14 +298,15 @@ impl Runtime {
     pub fn count_exec(&self, entry: &str, variant: &str) {
         *self
             .exec_count
-            .borrow_mut()
+            .lock()
+            .unwrap()
             .entry(format!("{entry}__{variant}"))
             .or_insert(0) += 1;
     }
 
     /// Number of compiled executables currently cached.
     pub fn cached_executables(&self) -> usize {
-        self.cache.borrow().len()
+        self.cache.lock().unwrap().len()
     }
 }
 

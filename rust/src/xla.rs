@@ -1,0 +1,228 @@
+//! Offline stand-in for the `xla` (PJRT bindings) crate.
+//!
+//! This sandbox image does not ship the XLA/PJRT shared libraries, so the
+//! crate is built without them. This module mirrors the small slice of the
+//! `xla` crate API that `runtime/` consumes, with two behaviours:
+//!
+//! * **Host-side types are functional.** [`Literal`] really stores data and
+//!   dims and validates reshapes, so shape checking (and its tests) work
+//!   without any native library.
+//! * **Device-side entry points are gated.** [`HloModuleProto::from_text_file`]
+//!   always returns an error, which makes `Runtime::executable` fail exactly
+//!   the way it fails when AOT artifacts are missing — every XLA-backed code
+//!   path degrades to its pure-rust fallback (`Backend::Rust`,
+//!   `use_xla: false`), and artifact-dependent tests are `#[ignore]`d.
+//!
+//! All types here are plain data (`Send + Sync`), which is what lets the
+//! `exec` thread pool share `Runtime` handles across workers.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error` (Display-able, convertible into
+/// [`crate::error::Error::Xla`]).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unsupported(what: &str) -> Error {
+    Error(format!(
+        "{what}: XLA/PJRT native libraries are not available in this build \
+         (pure-rust backends remain fully functional)"
+    ))
+}
+
+/// Host-side tensor literal: data + dims, row-major f32.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1(v: &[f32]) -> Literal {
+        Literal {
+            data: v.to_vec(),
+            dims: vec![v.len() as i64],
+        }
+    }
+
+    /// Reshape, validating that the element count is preserved.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements cannot take shape {:?}",
+                self.data.len(),
+                dims
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    /// Unpack a tuple literal into its leaves.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unsupported("Literal::to_tuple"))
+    }
+
+    /// Copy out as a typed host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+impl From<f32> for Literal {
+    fn from(v: f32) -> Literal {
+        Literal {
+            data: vec![v],
+            dims: vec![],
+        }
+    }
+}
+
+/// Element types a [`Literal`] can be copied out as.
+pub trait NativeType: Copy {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+}
+
+/// PJRT device handle (placeholder — the CPU client has one device).
+#[derive(Debug, Clone)]
+pub struct PjRtDevice;
+
+/// PJRT client. Construction succeeds (it allocates nothing); only
+/// compilation/execution entry points are gated.
+#[derive(Debug, Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unsupported("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<&PjRtDevice>,
+        literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer {
+            literal: literal.clone(),
+        })
+    }
+}
+
+/// Device-resident buffer (host-backed in this stand-in).
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// Marker for argument types accepted by
+/// [`PjRtLoadedExecutable::execute_b`].
+pub trait BufferArgument {}
+
+impl BufferArgument for &PjRtBuffer {}
+
+/// A compiled executable. Never constructible in this build
+/// ([`PjRtClient::compile`] always errors), so `execute_b` is unreachable
+/// but keeps callers type-checking.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T: BufferArgument>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unsupported("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// Parsed HLO module. The text parser requires the native library, so
+/// loading always errors — which is what gates every AOT-artifact path.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &Path) -> Result<HloModuleProto> {
+        Err(Error(format!(
+            "cannot parse HLO text {}: XLA/PJRT native libraries are not \
+             available in this build (pure-rust backends remain functional)",
+            path.display()
+        )))
+    }
+}
+
+/// An XLA computation ready to compile.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert_eq!(Literal::from(0.5f32).dims(), &[] as &[i64]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn device_paths_are_gated() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(HloModuleProto::from_text_file(Path::new("x.hlo.txt")).is_err());
+        let lit = Literal::vec1(&[1.0]);
+        let buf = client.buffer_from_host_literal(None, &lit).unwrap();
+        assert_eq!(buf.to_literal_sync().unwrap().element_count(), 1);
+    }
+}

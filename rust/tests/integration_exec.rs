@@ -1,0 +1,161 @@
+//! Integration tests for the `exec` work-stealing executor under the
+//! dataflow engine: bitwise determinism across thread counts, work
+//! stealing under skew, and failure injection racing parallel evaluation.
+
+use std::sync::Arc;
+
+use mli::engine::EngineContext;
+use mli::exec::ThreadPool;
+
+/// The same map + reduce_by_key pipeline, evaluated at a given thread
+/// count (0 = no executor, serial).
+fn kv_pipeline(threads: usize) -> Vec<(usize, f64)> {
+    let ctx = if threads == 0 {
+        EngineContext::new()
+    } else {
+        EngineContext::new().with_executor(threads)
+    };
+    let d = ctx.parallelize((0..1000i64).collect::<Vec<_>>(), 16);
+    // floats chosen so accumulation order would show: 1/(i+1) sums are
+    // not associative in f64
+    d.map(|i| ((i % 17) as usize, 1.0 / (i as f64 + 1.0)))
+        .reduce_by_key(|a, b| a + b)
+        .collect()
+        .unwrap()
+}
+
+#[test]
+fn map_reduce_by_key_identical_across_thread_counts() {
+    let serial = kv_pipeline(0);
+    assert_eq!(serial.len(), 17);
+    for threads in [1, 2, 8] {
+        let par = kv_pipeline(threads);
+        // bitwise equality: same keys, same order, same f64 bits
+        assert_eq!(serial, par, "diverged at {threads} threads");
+    }
+}
+
+#[test]
+fn collect_and_count_identical_across_thread_counts() {
+    let run = |threads: usize| {
+        let ctx = EngineContext::new().with_executor(threads);
+        let d = ctx
+            .parallelize((0..500i64).collect::<Vec<_>>(), 9)
+            .map(|x| x as f64 * 0.3)
+            .filter(|x| *x < 120.0);
+        (d.collect().unwrap(), d.count().unwrap())
+    };
+    let (c1, n1) = run(1);
+    for threads in [2, 8] {
+        let (c, n) = run(threads);
+        assert_eq!(c1, c);
+        assert_eq!(n1, n);
+    }
+}
+
+#[test]
+fn work_stealing_under_skewed_task_sizes() {
+    // Round-robin submission puts every third task in worker 0's deque;
+    // making exactly those tasks heavy (20ms vs ~0) leaves worker 0 with
+    // ~440ms of queued work while the other two workers go idle almost
+    // immediately — the stage can only finish on time if they steal from
+    // worker 0's queue, so steals are guaranteed, not timing-dependent.
+    let pool = ThreadPool::new(3);
+    let out = pool.run(64, |i| {
+        if i % 3 == 0 {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+        i * 2
+    });
+    assert_eq!(out, (0..64).map(|i| i * 2).collect::<Vec<_>>());
+    let stats = pool.worker_stats();
+    let tasks: u64 = stats.iter().map(|s| s.tasks).sum();
+    let steals: u64 = stats.iter().map(|s| s.steals).sum();
+    assert_eq!(tasks, 64);
+    assert!(steals > 0, "expected steals under skew, stats: {stats:?}");
+}
+
+#[test]
+fn skewed_partitions_balance_across_workers() {
+    // Dataset-level skew: partition 0 carries ~16x the rows of the rest.
+    // With a pool attached the stage still completes and every row is
+    // accounted for exactly once.
+    let ctx = EngineContext::new().with_executor(4);
+    let mut rows: Vec<(usize, u64)> = Vec::new();
+    for p in 0..8usize {
+        let n = if p == 0 { 1600 } else { 100 };
+        for i in 0..n {
+            rows.push((p, i as u64));
+        }
+    }
+    let expected: u64 = rows.iter().map(|(_, v)| v).sum();
+    let d = ctx.parallelize(rows, 8);
+    let total: u64 = d
+        .map(|(_, v)| v)
+        .collect()
+        .unwrap()
+        .into_iter()
+        .sum();
+    assert_eq!(total, expected);
+    let pool = ctx.executor().unwrap();
+    let worked: usize = pool
+        .worker_stats()
+        .iter()
+        .filter(|s| s.tasks > 0)
+        .count();
+    assert!(worked >= 1);
+}
+
+#[test]
+fn failure_injection_retries_race_parallel_evaluation() {
+    let ctx = EngineContext::new().with_executor(4);
+    let d = ctx
+        .parallelize((0..400i64).collect::<Vec<_>>(), 8)
+        .map(|x| x * 3);
+    // 3 injected failures per partition stays under the 4-attempt budget;
+    // retries happen concurrently on pool workers
+    for p in 0..8 {
+        ctx.failures.fail_times(d.id(), p, 3);
+    }
+    let got = d.collect().unwrap();
+    assert_eq!(got, (0..400i64).map(|x| x * 3).collect::<Vec<_>>());
+    let (tasks, _, _) = ctx.stats();
+    // every partition burned 3 failed attempts + 1 success
+    assert!(tasks >= 8 * 4, "expected retried attempts, saw {tasks}");
+
+    // exhausting the budget fails the action even in parallel
+    let d2 = ctx.parallelize(vec![1, 2, 3], 3).map(|x| x + 1);
+    ctx.failures.fail_times(d2.id(), 1, 99);
+    assert!(d2.collect().is_err());
+}
+
+#[test]
+fn lineage_recovery_with_executor_attached() {
+    let ctx = EngineContext::new().with_executor(4);
+    let d = ctx
+        .parallelize((0..240i64).collect::<Vec<_>>(), 6)
+        .map(|x| x * x)
+        .cache();
+    let before = d.collect().unwrap();
+    assert!(d.is_cached(3));
+    d.invalidate_partition(2);
+    d.invalidate_partition(4);
+    let after = d.collect().unwrap();
+    assert_eq!(before, after);
+    let (_, _, recoveries) = ctx.stats();
+    assert_eq!(recoveries, 2);
+}
+
+#[test]
+fn shared_pool_between_context_and_cluster() {
+    // SimCluster and EngineContext can share one pool; stats accumulate
+    // in the same place.
+    let cluster = Arc::new(mli::cluster::SimCluster::ec2(4).with_executor(2));
+    let pool = cluster.pool().unwrap();
+    let ctx = EngineContext::new();
+    ctx.set_executor(Some(pool.clone()));
+    let d = ctx.parallelize((0..100i64).collect::<Vec<_>>(), 4);
+    assert_eq!(d.count().unwrap(), 100);
+    let tasks: u64 = pool.worker_stats().iter().map(|s| s.tasks).sum();
+    assert!(tasks >= 4);
+}

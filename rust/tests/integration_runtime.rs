@@ -21,6 +21,7 @@ fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (make artifacts)"]
 fn every_artifact_loads_and_runs() {
     let rt = rt();
     let manifest = rt.manifest().clone();
@@ -48,6 +49,7 @@ fn every_artifact_loads_and_runs() {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (make artifacts)"]
 fn grad_matches_rust_reference() {
     let rt = rt();
     let mut rng = Rng::new(7);
@@ -90,6 +92,7 @@ fn grad_matches_rust_reference() {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (make artifacts)"]
 fn executable_cache_compiles_once() {
     let rt = rt();
     let x = Tensor::F32(vec![0.0; 256 * 64], vec![256, 64]);
@@ -102,6 +105,7 @@ fn executable_cache_compiles_once() {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (make artifacts)"]
 fn shape_mismatch_rejected_before_xla() {
     let rt = rt();
     let bad = Tensor::F32(vec![0.0; 10], vec![10]);
@@ -115,6 +119,7 @@ fn shape_mismatch_rejected_before_xla() {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (make artifacts)"]
 fn scan_epoch_equals_manual_minibatch_sgd() {
     // local_sgd_epoch (scan+pallas) == sequential rust minibatch SGD
     let rt = rt();

@@ -24,6 +24,7 @@ fn median_time(reps: usize, mut f: impl FnMut() -> f64) -> f64 {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (make artifacts)"]
 fn mli_vs_vw_same_quality_different_time() {
     // compute-dominated scale (the paper's regime): per-partition XLA
     // epochs cost milliseconds, comm costs fractions of that. At tiny
@@ -101,6 +102,7 @@ fn matlab_gd_competitive_small_but_oom_at_scale() {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (make artifacts)"]
 fn als_all_systems_comparable_error() {
     // the paper: "ALS methods from all systems achieved comparable error
     // rates at the end of 10 iterations"
@@ -178,6 +180,7 @@ fn weak_scaling_time_grows_sublinearly_for_mli() {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (make artifacts)"]
 fn strong_scaling_uses_more_machines_effectively() {
     // fixed data, more machines => less simulated time (until comm wins)
     let sgd = SgdParams {

@@ -202,6 +202,8 @@ impl ALS {
         let k = self.params.rank;
         let n = ratings.rows;
         let mut out = DenseMatrix::zeros(n, k);
+        let tracer = cluster.tracer();
+        let half_t0 = tracer.start();
         cluster.begin_round();
         // Fig. A9: ctx.broadcast(fixedFactor)
         cluster.charge_broadcast(self.params.topology, (fixed.rows * k * 4) as u64);
@@ -221,7 +223,7 @@ impl ALS {
         // factor is identical for any thread count)
         let per = n.div_ceil(machines);
         let stage = crate::exec::TaskSet::new("als-solve", machines);
-        let results = stage.run(cluster.pool().as_deref(), |machine| {
+        let results = stage.try_run(cluster.pool().as_deref(), |machine| {
             let lo = machine * per;
             let hi = ((machine + 1) * per).min(n);
             if lo >= hi {
@@ -231,7 +233,7 @@ impl ALS {
                 Some(x) => self.solve_range_xla(ratings, fixed, lo, hi, x),
                 None => self.solve_range_rust(ratings, fixed, lo, hi),
             })
-        });
+        })?;
         for (machine, rows) in results.into_iter().enumerate() {
             let lo = machine * per;
             for (i, row) in rows?.iter().enumerate() {
@@ -242,6 +244,9 @@ impl ALS {
         // updated factor slices gather to master + broadcast next round
         cluster.charge_allreduce(self.params.topology, (n * k * 4) as u64);
         cluster.end_round();
+        if let Some(t0) = half_t0 {
+            tracer.span("als-half-round", "optim", 0, t0, &[("rows", n as f64)]);
+        }
         Ok(out)
     }
 
@@ -440,8 +445,10 @@ mod tests {
     }
 
     #[test]
-    #[ignore = "requires AOT artifacts (make artifacts)"]
     fn xla_backend_learns() {
+        if !crate::runtime::require_artifacts_or_skip("als::xla_backend_learns") {
+            return;
+        }
         check_learns(true);
     }
 
@@ -470,8 +477,10 @@ mod tests {
     }
 
     #[test]
-    #[ignore = "requires AOT artifacts (make artifacts)"]
     fn xla_and_rust_agree() {
+        if !crate::runtime::require_artifacts_or_skip("als::xla_and_rust_agree") {
+            return;
+        }
         let data = small_data(2);
         let params = |use_xla| AlsParams {
             rank: 5,
@@ -501,8 +510,10 @@ mod tests {
     }
 
     #[test]
-    #[ignore = "requires AOT artifacts (make artifacts)"]
     fn chunked_heavy_items_handled() {
+        if !crate::runtime::require_artifacts_or_skip("als::chunked_heavy_items_handled") {
+            return;
+        }
         // items see ~users*mean/items ratings >> m(small artifact = 64):
         // forces the chunked gram path on the item side.
         let data = netflix::generate(&NetflixConfig {

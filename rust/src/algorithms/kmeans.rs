@@ -397,8 +397,10 @@ mod tests {
     }
 
     #[test]
-    #[ignore = "requires AOT artifacts (make artifacts)"]
     fn xla_backend_recovers_blobs() {
+        if !crate::runtime::require_artifacts_or_skip("kmeans::xla_backend_recovers_blobs") {
+            return;
+        }
         check_recovers_blobs(true);
     }
 
@@ -420,8 +422,10 @@ mod tests {
     }
 
     #[test]
-    #[ignore = "requires AOT artifacts (make artifacts)"]
     fn xla_and_rust_agree() {
+        if !crate::runtime::require_artifacts_or_skip("kmeans::xla_and_rust_agree") {
+            return;
+        }
         let t = blob_table(&[[0.0, 0.0], [5.0, 5.0]], 30, 2);
         let params = |use_xla| KMeansParams {
             k: 2,

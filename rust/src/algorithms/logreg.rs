@@ -139,9 +139,11 @@ mod tests {
     }
 
     #[test]
-    #[ignore = "requires AOT artifacts (make artifacts)"]
     fn xla_backend_learns() {
-        // requires `make artifacts`; the small variant fits 256/4=64 rows, d=16
+        if !crate::runtime::require_artifacts_or_skip("logreg::xla_backend_learns") {
+            return;
+        }
+        // the small variant fits 256/4=64 rows, d=16
         train_and_check(Backend::Xla);
     }
 
@@ -178,8 +180,10 @@ mod tests {
     }
 
     #[test]
-    #[ignore = "requires AOT artifacts (make artifacts)"]
     fn xla_and_rust_agree() {
+        if !crate::runtime::require_artifacts_or_skip("logreg::xla_and_rust_agree") {
+            return;
+        }
         // identical data, params -> near-identical weights (f32 round-off)
         let ctx = EngineContext::new();
         let data = dense_gen::generate(&ctx, 128, 8, 2, 5).unwrap();

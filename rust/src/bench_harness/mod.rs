@@ -7,5 +7,6 @@ pub mod loc;
 pub mod runners;
 
 pub use runners::{
-    als_scaling, logreg_scaling, AlsBenchConfig, LogregBenchConfig, ScalingMode,
+    als_scaling, als_scaling_with, logreg_scaling, logreg_scaling_with, AlsBenchConfig,
+    LogregBenchConfig, ScalingMode,
 };

@@ -14,6 +14,8 @@ use crate::engine::EngineContext;
 use crate::error::Result;
 use crate::metrics::{fmt_time, Table};
 use crate::optim::{GdParams, SgdParams};
+use crate::trace::Tracer;
+use std::sync::Arc;
 
 /// Weak scaling: data grows with machines. Strong: total data fixed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -62,6 +64,16 @@ impl Default for LogregBenchConfig {
 /// with MLI / VW / MATLAB simulated walltimes (MATLAB: single node, DNF on
 /// OOM — the paper's weak-scaling behaviour at the largest point).
 pub fn logreg_scaling(cfg: &LogregBenchConfig, mode: ScalingMode) -> Result<Table> {
+    logreg_scaling_with(cfg, mode, None)
+}
+
+/// [`logreg_scaling`] with an optional tracer attached to the MLI runs
+/// (spans + exec counters land in the tracer's sink).
+pub fn logreg_scaling_with(
+    cfg: &LogregBenchConfig,
+    mode: ScalingMode,
+    tracer: Option<&Arc<Tracer>>,
+) -> Result<Table> {
     let title = match mode {
         ScalingMode::Weak => "Fig 2b/2c: logistic regression weak scaling",
         ScalingMode::Strong => "Fig A5/A6: logistic regression strong scaling",
@@ -99,6 +111,9 @@ pub fn logreg_scaling(cfg: &LogregBenchConfig, mode: ScalingMode) -> Result<Tabl
                 let mut cluster = SystemProfile::mli().cluster(m);
                 if cfg.threads > 0 {
                     cluster = cluster.with_executor(cfg.threads);
+                }
+                if let Some(t) = tracer {
+                    cluster.set_tracer(t.clone());
                 }
                 LogisticRegression::new(LogRegParams {
                     sgd: sgd.clone(),
@@ -217,6 +232,15 @@ fn tiled(base: &RatingsData, t: usize) -> RatingsData {
 /// Run the ALS scaling experiment: MLI vs GraphLab vs Mahout vs MATLAB vs
 /// MATLAB-mex (paper Fig. 3b/3c; A7/A8 for strong).
 pub fn als_scaling(cfg: &AlsBenchConfig, mode: ScalingMode) -> Result<Table> {
+    als_scaling_with(cfg, mode, None)
+}
+
+/// [`als_scaling`] with an optional tracer attached to the MLI runs.
+pub fn als_scaling_with(
+    cfg: &AlsBenchConfig,
+    mode: ScalingMode,
+    tracer: Option<&Arc<Tracer>>,
+) -> Result<Table> {
     let title = match mode {
         ScalingMode::Weak => "Fig 3b/3c: ALS weak scaling (Netflix x machines)",
         ScalingMode::Strong => "Fig A7/A8: ALS strong scaling (9x Netflix)",
@@ -279,6 +303,9 @@ pub fn als_scaling(cfg: &AlsBenchConfig, mode: ScalingMode) -> Result<Table> {
                 let mut cluster = profile.cluster(m);
                 if cfg.threads > 0 {
                     cluster = cluster.with_executor(cfg.threads);
+                }
+                if let Some(t) = tracer {
+                    cluster.set_tracer(t.clone());
                 }
                 ALS::new(p.clone())
                     .train_ratings(&data, &cluster)

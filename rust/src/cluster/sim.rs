@@ -22,6 +22,7 @@ use super::network::NetworkModel;
 use super::topology::CommTopology;
 use crate::error::{Error, Result};
 use crate::exec::ThreadPool;
+use crate::trace::Tracer;
 use crate::util::timer::Stopwatch;
 
 /// Per-round accounting.
@@ -106,6 +107,9 @@ pub struct SimLedger {
     pub total_net_bytes: u64,
     pub rounds: usize,
     current: Option<RoundStats>,
+    /// Wall-clock stopwatch for the open round (trace attribution only;
+    /// simulated time never reads it).
+    round_wall: Option<Stopwatch>,
     /// Per-machine resident bytes (simulated memory accounting).
     pub resident_bytes: Vec<u64>,
 }
@@ -122,6 +126,7 @@ pub struct SimCluster {
     pub straggler: Mutex<StragglerModel>,
     ledger: Mutex<SimLedger>,
     executor: Mutex<Option<Arc<ThreadPool>>>,
+    tracer: Mutex<Arc<Tracer>>,
 }
 
 impl SimCluster {
@@ -135,6 +140,7 @@ impl SimCluster {
             straggler: Mutex::new(StragglerModel::Max),
             ledger: Mutex::new(ledger),
             executor: Mutex::new(None),
+            tracer: Mutex::new(Tracer::disabled()),
         }
     }
 
@@ -188,6 +194,7 @@ impl SimCluster {
         let mut l = self.ledger.lock().unwrap();
         assert!(l.current.is_none(), "begin_round inside an open round");
         l.current = Some(RoundStats::new(self.specs.len()));
+        l.round_wall = Some(Stopwatch::start());
     }
 
     /// Execute `f` on behalf of `machine`, really timing it and charging
@@ -291,7 +298,9 @@ impl SimCluster {
         } else {
             threads
         };
-        *self.executor.lock().unwrap() = Some(ThreadPool::new(n));
+        let pool = ThreadPool::new(n);
+        pool.set_tracer(self.tracer());
+        *self.executor.lock().unwrap() = Some(pool);
         self
     }
 
@@ -300,16 +309,63 @@ impl SimCluster {
         self.executor.lock().unwrap().clone()
     }
 
+    /// Attach a tracer: `end_round` records one span per simulated round
+    /// (wall-clock duration, simulated seconds in the args) plus the
+    /// `sim.micros` / `wall.micros` counters behind the summary's
+    /// two-clock attribution. Chains like `with_executor`.
+    pub fn with_tracer(self, tracer: Arc<Tracer>) -> SimCluster {
+        self.set_tracer(tracer);
+        self
+    }
+
+    /// Swap the tracer, propagating it to the attached pool (if any).
+    pub fn set_tracer(&self, tracer: Arc<Tracer>) {
+        if let Some(pool) = self.pool() {
+            pool.set_tracer(tracer.clone());
+        }
+        *self.tracer.lock().unwrap_or_else(|e| e.into_inner()) = tracer;
+    }
+
+    pub fn tracer(&self) -> Arc<Tracer> {
+        self.tracer.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
     /// Close the round: fold it into the total and return its stats.
     pub fn end_round(&self) -> RoundStats {
-        let mut l = self.ledger.lock().unwrap();
-        let cur = l.current.take().expect("end_round without begin_round");
-        let t = cur.round_time_with(&self.specs, *self.straggler.lock().unwrap());
-        l.total_s += t;
-        l.total_comm_s += cur.comm_s;
-        l.total_disk_s += cur.disk_s;
-        l.total_net_bytes += cur.net_bytes;
-        l.rounds += 1;
+        let (cur, t, wall_s, round_idx) = {
+            let mut l = self.ledger.lock().unwrap();
+            let cur = l.current.take().expect("end_round without begin_round");
+            let t = cur.round_time_with(&self.specs, *self.straggler.lock().unwrap());
+            l.total_s += t;
+            l.total_comm_s += cur.comm_s;
+            l.total_disk_s += cur.disk_s;
+            l.total_net_bytes += cur.net_bytes;
+            l.rounds += 1;
+            let wall_s = l
+                .round_wall
+                .take()
+                .map(|sw| sw.elapsed_secs())
+                .unwrap_or(0.0);
+            (cur, t, wall_s, l.rounds - 1)
+        };
+        // Record the round span outside the ledger lock: wall-clock time
+        // as the span duration, simulated seconds in the args — the
+        // two-clock attribution the trace summary reports.
+        let tracer = self.tracer();
+        if tracer.is_enabled() {
+            let wall_ns = (wall_s * 1e9) as u64;
+            let start = tracer.now_ns().saturating_sub(wall_ns);
+            tracer.span(
+                format!("sim-round-{round_idx}"),
+                "sim",
+                0,
+                start,
+                &[("sim_s", t), ("comm_s", cur.comm_s), ("disk_s", cur.disk_s)],
+            );
+            tracer.count("sim.rounds", 1);
+            tracer.count("sim.micros", (t * 1e6) as u64);
+            tracer.count("wall.micros", (wall_s * 1e6) as u64);
+        }
         cur
     }
 
@@ -344,6 +400,7 @@ impl SimCluster {
         l.total_net_bytes = 0;
         l.rounds = 0;
         l.current = None;
+        l.round_wall = None;
     }
 }
 
@@ -461,6 +518,23 @@ mod tests {
     fn task_outside_round_panics() {
         let c = SimCluster::ec2(1);
         c.charge_compute(0, 1.0);
+    }
+
+    #[test]
+    fn traced_round_records_both_clocks() {
+        let (tracer, sink) = Tracer::recording();
+        let c = SimCluster::ec2(2).with_tracer(tracer);
+        c.begin_round();
+        c.charge_compute(0, 2.0);
+        c.end_round();
+        let spans = sink.spans();
+        assert!(
+            spans.iter().any(|s| s.name == "sim-round-0" && s.cat == "sim"),
+            "round span missing: {spans:?}"
+        );
+        assert_eq!(sink.counter("sim.rounds"), 1);
+        // 2.0 simulated seconds = 2M micros (1 task, factor 1.0, no comm)
+        assert_eq!(sink.counter("sim.micros"), 2_000_000);
     }
 
     #[test]

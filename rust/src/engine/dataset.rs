@@ -154,16 +154,30 @@ impl<T: Clone + Send + Sync + 'static> Dataset<T> {
 
     /// Materialize every partition — one task per partition on the
     /// attached executor (serially without one) — returned in partition
-    /// index order. The first error, by lowest partition index, wins.
+    /// index order. The first error, by lowest partition index, wins; a
+    /// panicking partition task fails this evaluation (typed
+    /// `Error::Exec`), not the pool.
     pub fn partitions(&self) -> Result<Vec<Arc<Vec<T>>>> {
         let pool = self.core.ctx.executor();
-        TaskSet::new(
+        let tracer = self.core.ctx.tracer();
+        let t0 = tracer.start();
+        let out: Result<Vec<Arc<Vec<T>>>> = TaskSet::new(
             format!("dataset-{}-eval", self.core.id),
             self.core.num_partitions,
         )
-        .run(pool.as_deref(), |p| self.partition(p))
+        .try_run(pool.as_deref(), |p| self.partition(p))?
         .into_iter()
-        .collect()
+        .collect();
+        if let Some(t0) = t0 {
+            tracer.span(
+                format!("eval:dataset-{}", self.core.id),
+                "engine",
+                0,
+                t0,
+                &[("partitions", self.core.num_partitions as f64)],
+            );
+        }
+        out
     }
 
     fn compute_with_retries(&self, p: usize) -> Result<Vec<T>> {
@@ -217,24 +231,45 @@ impl<T: Clone + Send + Sync + 'static> Dataset<T> {
 
     // ---- actions ----------------------------------------------------------
 
+    /// Record a per-action span (`action:<name>:dataset-<id>`) if the
+    /// context has an enabled tracer.
+    fn action_span(&self, name: &str, t0: Option<u64>) {
+        if let Some(t0) = t0 {
+            self.core.ctx.tracer().span(
+                format!("action:{name}:dataset-{}", self.core.id),
+                "engine",
+                0,
+                t0,
+                &[],
+            );
+        }
+    }
+
     /// Materialize all partitions, in order.
     pub fn collect(&self) -> Result<Vec<T>> {
+        let t0 = self.core.ctx.tracer().start();
         let parts = self.partitions()?;
         let mut out = Vec::new();
         for part in parts {
             out.extend(part.iter().cloned());
         }
+        self.action_span("collect", t0);
         Ok(out)
     }
 
     /// Force-compute every partition (into cache if enabled).
     pub fn materialize(&self) -> Result<()> {
+        let t0 = self.core.ctx.tracer().start();
         self.partitions()?;
+        self.action_span("materialize", t0);
         Ok(())
     }
 
     pub fn count(&self) -> Result<usize> {
-        Ok(self.partitions()?.iter().map(|p| p.len()).sum())
+        let t0 = self.core.ctx.tracer().start();
+        let n = self.partitions()?.iter().map(|p| p.len()).sum();
+        self.action_span("count", t0);
+        Ok(n)
     }
 
     /// Tree-free associative reduce over all elements (Fig. A1 `reduce`).
@@ -243,6 +278,7 @@ impl<T: Clone + Send + Sync + 'static> Dataset<T> {
     /// *folded* on the calling thread in element order, so the result is
     /// identical to the serial path even for non-associative `f`.
     pub fn reduce(&self, f: impl Fn(T, T) -> T) -> Result<Option<T>> {
+        let t0 = self.core.ctx.tracer().start();
         let parts = self.partitions()?;
         let mut acc: Option<T> = None;
         for part in parts {
@@ -253,6 +289,7 @@ impl<T: Clone + Send + Sync + 'static> Dataset<T> {
                 });
             }
         }
+        self.action_span("reduce", t0);
         Ok(acc)
     }
 
@@ -265,6 +302,7 @@ impl<T: Clone + Send + Sync + 'static> Dataset<T> {
         seq: impl Fn(U, &T) -> U,
         comb: impl Fn(U, U) -> U,
     ) -> Result<U> {
+        let t0 = self.core.ctx.tracer().start();
         let parts = self.partitions()?;
         let mut acc = zero.clone();
         for part in parts {
@@ -274,6 +312,7 @@ impl<T: Clone + Send + Sync + 'static> Dataset<T> {
             }
             acc = comb(acc, local);
         }
+        self.action_span("aggregate", t0);
         Ok(acc)
     }
 

@@ -65,6 +65,8 @@ impl FailurePlan {
 mod tests {
     use super::*;
     use crate::engine::EngineContext;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
 
     #[test]
     fn budget_consumed() {
@@ -93,6 +95,67 @@ mod tests {
         ctx.failures.fail_times(d.id(), 0, 100);
         let err = d.collect().unwrap_err();
         assert!(err.to_string().contains("injected task failure"));
+    }
+
+    #[test]
+    fn budget_exact_under_concurrent_attempts() {
+        // Stress the single-mutex decrement: 8 threads hammer
+        // `should_fail` on one (dataset, partition) key with a budget of
+        // 64. Exactly 64 calls may observe a failure — a double consume
+        // or lost decrement would shift the count.
+        let p = Arc::new(FailurePlan::default());
+        p.fail_times(1, 0, 64);
+        let fired = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let p = p.clone();
+            let fired = fired.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..100 {
+                    if p.should_fail(1, 0) {
+                        fired.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(fired.load(Ordering::SeqCst), 64);
+        assert!(!p.should_fail(1, 0), "budget must be fully consumed");
+    }
+
+    #[test]
+    fn retry_budget_boundary_is_exactly_four_attempts() {
+        // Boundary of Spark's spark.task.maxFailures = 4: 3 injected
+        // failures -> the 4th attempt succeeds; 4 injected failures ->
+        // the budget is exhausted and the action errors.
+        let ctx = EngineContext::new();
+        let d = ctx.parallelize((0..8).collect::<Vec<i32>>(), 1).map(|x| x + 1);
+        ctx.failures.fail_times(d.id(), 0, 3);
+        assert!(d.collect().is_ok(), "3 failures must retry to success");
+        let d2 = ctx.parallelize((0..8).collect::<Vec<i32>>(), 1).map(|x| x + 1);
+        ctx.failures.fail_times(d2.id(), 0, 4);
+        assert!(d2.collect().is_err(), "4 failures must exhaust the budget");
+    }
+
+    #[test]
+    fn retry_budget_not_double_consumed_under_parallel_evaluation() {
+        // 8 partitions with 3 injected failures each, evaluated on a
+        // 4-thread pool: every partition must succeed on its 4th attempt,
+        // and the task counter must land on exactly 8 * (4 attempts on
+        // the derived dataset + 1 base-partition compute) = 40 — any
+        // double consume or off-by-one under concurrency would shift it.
+        let ctx = EngineContext::new().with_executor(4);
+        let d = ctx
+            .parallelize((0..64).collect::<Vec<i64>>(), 8)
+            .map(|x| x * 2);
+        for part in 0..8 {
+            ctx.failures.fail_times(d.id(), part, 3);
+        }
+        let out = d.collect().unwrap();
+        assert_eq!(out, (0..64).map(|x| x * 2).collect::<Vec<_>>());
+        assert_eq!(ctx.stats().0, 40);
     }
 
     #[test]

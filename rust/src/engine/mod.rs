@@ -46,6 +46,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::exec::ThreadPool;
+use crate::trace::Tracer;
 
 /// Shared engine state: id allocator, failure plan, task metrics, and the
 /// optional task executor. All counters are atomics so partition tasks on
@@ -60,6 +61,7 @@ pub struct EngineContext {
     /// Partition recomputations triggered by invalidation (recoveries).
     pub recoveries: AtomicU64,
     executor: Mutex<Option<Arc<ThreadPool>>>,
+    tracer: Mutex<Arc<Tracer>>,
 }
 
 impl EngineContext {
@@ -71,15 +73,38 @@ impl EngineContext {
             cache_hits: AtomicU64::new(0),
             recoveries: AtomicU64::new(0),
             executor: Mutex::new(None),
+            tracer: Mutex::new(Tracer::disabled()),
         })
     }
 
     /// Attach a work-stealing executor with `threads` workers; subsequent
     /// actions evaluate partitions in parallel. Returns the context for
-    /// chaining: `EngineContext::new().with_executor(4)`.
+    /// chaining: `EngineContext::new().with_executor(4)`. The context's
+    /// tracer (if any) is propagated to the new pool.
     pub fn with_executor(self: &Arc<Self>, threads: usize) -> Arc<Self> {
-        *self.executor.lock().unwrap() = Some(ThreadPool::new(threads));
+        let pool = ThreadPool::new(threads);
+        pool.set_tracer(self.tracer());
+        *self.executor.lock().unwrap() = Some(pool);
         self.clone()
+    }
+
+    /// Attach a tracer: actions record per-eval/per-action spans, and an
+    /// attached pool records per-task spans. Chains like `with_executor`.
+    pub fn with_tracer(self: &Arc<Self>, tracer: Arc<Tracer>) -> Arc<Self> {
+        self.set_tracer(tracer);
+        self.clone()
+    }
+
+    /// Swap the tracer, propagating it to the attached pool (if any).
+    pub fn set_tracer(&self, tracer: Arc<Tracer>) {
+        if let Some(pool) = self.executor() {
+            pool.set_tracer(tracer.clone());
+        }
+        *self.tracer.lock().unwrap_or_else(|e| e.into_inner()) = tracer;
+    }
+
+    pub fn tracer(&self) -> Arc<Tracer> {
+        self.tracer.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
 
     /// Share an existing pool (e.g. the `SimCluster`'s) instead of

@@ -41,6 +41,10 @@ pub enum Error {
     Io(std::io::Error),
 
     Xla(String),
+
+    /// Executor failure: a task in a [`crate::exec::TaskSet`] panicked.
+    /// The pool survives; the stage that owned the task gets this error.
+    Exec(String),
 }
 
 impl fmt::Display for Error {
@@ -56,6 +60,7 @@ impl fmt::Display for Error {
             Error::Parse(m) => write!(f, "parse error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Exec(m) => write!(f, "executor error: {m}"),
         }
     }
 }

@@ -23,11 +23,59 @@
 //! (including the serial no-pool path). Real wall-clock time shrinks;
 //! *simulated* time (the `SimCluster` ledger) is unchanged by
 //! construction — see `cluster/sim.rs` for the distinction.
+//!
+//! **Failure contract:** a panicking task fails *its own* stage — the
+//! panic is caught on the worker, surfaced as an [`ExecError`] from
+//! [`TaskSet::try_run`] / [`ThreadPool::try_run`], and the pool keeps
+//! running subsequent stages. Internal locks recover from poisoning
+//! (every guarded structure is valid at every await point), so one bad
+//! task can never abort the process via a poisoned mutex.
+//!
+//! **Observability:** attach a [`crate::trace::Tracer`] via
+//! [`ThreadPool::set_tracer`] to record per-task spans (with queue-wait
+//! attribution) and export per-worker counters (tasks, steals, steal
+//! attempts, parks, injector pops, panics) with
+//! [`ThreadPool::export_trace`].
 
 pub mod pool;
 pub mod queue;
 pub mod worker;
 
+use std::fmt;
+use std::sync::{Mutex, MutexGuard};
+
 pub use pool::{TaskSet, ThreadPool};
 pub use queue::TaskQueue;
 pub use worker::{is_pool_thread, WorkerStats};
+
+/// A task in a stage panicked. Carries the stage label and the panic
+/// payload rendered as text.
+#[derive(Debug, Clone)]
+pub struct ExecError {
+    pub stage: String,
+    pub message: String,
+}
+
+impl fmt::Display for ExecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "stage '{}': task panicked: {}", self.stage, self.message)
+    }
+}
+
+impl std::error::Error for ExecError {}
+
+impl From<ExecError> for crate::error::Error {
+    fn from(e: ExecError) -> Self {
+        crate::error::Error::Exec(e.to_string())
+    }
+}
+
+/// Lock a mutex, recovering from poisoning. Poisoning here only means
+/// "some task panicked while holding the guard"; every structure the
+/// pool guards (deques, completion counts, metrics) is valid at every
+/// point a panic can unwind through, so the data is safe to reuse and
+/// recovery is the correct policy — the panic itself is reported via
+/// the owning stage's [`ExecError`], not via lock poisoning.
+pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}

@@ -6,28 +6,42 @@ use std::thread::JoinHandle;
 
 use super::queue::TaskQueue;
 use super::worker::{self, WorkerMetrics, WorkerStats};
+use super::{lock_unpoisoned, ExecError};
 use crate::metrics::Metrics;
+use crate::trace::{TraceSink, Tracer};
 
-/// A unit of work: the boxed job plus an optional stage-completion handle.
-/// The worker signals `done` strictly *after* the job (and everything it
-/// borrowed) has been dropped — that ordering is what makes the scoped
-/// lifetime erasure in [`ThreadPool::run`] sound.
+/// A unit of work: the boxed job plus an optional stage label (for trace
+/// spans), the enqueue timestamp (for queue-wait attribution) and an
+/// optional stage-completion handle. The worker signals `done` strictly
+/// *after* the job (and everything it borrowed) has been dropped — that
+/// ordering is what makes the scoped lifetime erasure in
+/// [`ThreadPool::run`] sound.
 pub struct Task {
     pub(crate) job: Box<dyn FnOnce() + Send + 'static>,
+    pub(crate) label: Option<Arc<str>>,
+    pub(crate) enqueued_ns: Option<u64>,
     pub(crate) done: Option<Arc<Completion>>,
 }
 
 impl Task {
     /// A fire-and-forget task (no stage tracking).
     pub(crate) fn detached(job: Box<dyn FnOnce() + Send + 'static>) -> Task {
-        Task { job, done: None }
+        Task {
+            job,
+            label: None,
+            enqueued_ns: None,
+            done: None,
+        }
     }
 }
 
-/// Countdown latch for one scoped stage.
+/// Countdown latch for one scoped stage, plus the first panic message any
+/// of the stage's tasks produced (workers catch the unwind and record it
+/// here; the submitting thread turns it into an [`ExecError`]).
 pub(crate) struct Completion {
     remaining: Mutex<usize>,
     cv: Condvar,
+    panic: Mutex<Option<String>>,
 }
 
 impl Completion {
@@ -35,21 +49,34 @@ impl Completion {
         Completion {
             remaining: Mutex::new(n),
             cv: Condvar::new(),
+            panic: Mutex::new(None),
         }
     }
 
+    /// Record a panic message for the stage (first one wins).
+    pub(crate) fn record_panic(&self, msg: String) {
+        let mut p = lock_unpoisoned(&self.panic);
+        if p.is_none() {
+            *p = Some(msg);
+        }
+    }
+
+    fn take_panic(&self) -> Option<String> {
+        lock_unpoisoned(&self.panic).take()
+    }
+
     pub(crate) fn signal(&self) {
-        let mut r = self.remaining.lock().unwrap();
-        *r -= 1;
+        let mut r = lock_unpoisoned(&self.remaining);
+        *r = r.saturating_sub(1);
         if *r == 0 {
             self.cv.notify_all();
         }
     }
 
     fn wait(&self) {
-        let mut r = self.remaining.lock().unwrap();
+        let mut r = lock_unpoisoned(&self.remaining);
         while *r > 0 {
-            r = self.cv.wait(r).unwrap();
+            r = self.cv.wait(r).unwrap_or_else(|e| e.into_inner());
         }
     }
 }
@@ -61,6 +88,7 @@ pub(crate) struct Shared {
     pub(crate) metrics: Vec<WorkerMetrics>,
     pub(crate) park_lock: Mutex<()>,
     pub(crate) park_cv: Condvar,
+    tracer: Mutex<Arc<Tracer>>,
     shutdown: AtomicBool,
 }
 
@@ -71,6 +99,10 @@ impl Shared {
 
     pub(crate) fn has_work(&self) -> bool {
         !self.injector.is_empty() || self.queues.iter().any(|q| !q.is_empty())
+    }
+
+    pub(crate) fn tracer(&self) -> Arc<Tracer> {
+        lock_unpoisoned(&self.tracer).clone()
     }
 }
 
@@ -96,6 +128,7 @@ impl ThreadPool {
             metrics: (0..threads).map(|_| WorkerMetrics::default()).collect(),
             park_lock: Mutex::new(()),
             park_cv: Condvar::new(),
+            tracer: Mutex::new(Tracer::disabled()),
             shutdown: AtomicBool::new(false),
         });
         let handles = (0..threads)
@@ -126,15 +159,45 @@ impl ThreadPool {
         self.shared.queues.len()
     }
 
-    /// Fire-and-forget submission (no result, no stage tracking).
+    /// Attach a tracer: workers record per-task spans (with queue-wait
+    /// attribution) and park spans into it. A disabled tracer (the
+    /// default) costs one relaxed load per task.
+    pub fn set_tracer(&self, tracer: Arc<Tracer>) {
+        *lock_unpoisoned(&self.shared.tracer) = tracer;
+    }
+
+    pub fn tracer(&self) -> Arc<Tracer> {
+        self.shared.tracer()
+    }
+
+    /// Fire-and-forget submission (no result, no stage tracking). Goes
+    /// through the shared injector so any idle worker picks it up (the
+    /// `injector_pops` counter attributes it).
     pub fn spawn(&self, job: impl FnOnce() + Send + 'static) {
-        self.submit(Task::detached(Box::new(job)));
+        self.shared.injector.push(Task::detached(Box::new(job)));
+        let _g = lock_unpoisoned(&self.shared.park_lock);
+        self.shared.park_cv.notify_all();
+    }
+
+    /// Next worker index for round-robin submission. `fetch_update` keeps
+    /// the counter inside `0..threads` so the distribution stays uniform
+    /// across wraparound for any thread count: the previous
+    /// `fetch_add(1) % n` skewed toward low indices after the counter
+    /// wrapped at `usize::MAX` whenever `n` is not a power of two.
+    fn next_index(&self) -> usize {
+        let n = self.threads();
+        self.next
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.wrapping_add(1) % n)
+            })
+            .unwrap_or(0)
+            % n
     }
 
     fn submit(&self, task: Task) {
-        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.threads();
+        let i = self.next_index();
         self.shared.queues[i].push(task);
-        let _g = self.shared.park_lock.lock().unwrap();
+        let _g = lock_unpoisoned(&self.shared.park_lock);
         self.shared.park_cv.notify_all();
     }
 
@@ -151,19 +214,64 @@ impl ThreadPool {
     /// Calling this from inside a pool task runs the stage inline (serial)
     /// instead of re-submitting — nested stages cannot deadlock the pool.
     ///
-    /// If a task panics, the panic is re-raised here on the submitting
-    /// thread after the whole stage has drained.
+    /// If a task panics, this re-raises after the whole stage has drained.
+    /// Prefer [`ThreadPool::try_run`] where the caller can handle errors.
     pub fn run<T, F>(&self, n: usize, f: F) -> Vec<T>
     where
         T: Send,
         F: Fn(usize) -> T + Sync,
     {
+        match self.try_run_labeled("run", n, f) {
+            Ok(v) => v,
+            Err(e) => panic!("exec: {e}"),
+        }
+    }
+
+    /// Like [`ThreadPool::run`], but a panicking task surfaces as an
+    /// [`ExecError`] for this stage instead of unwinding. The pool stays
+    /// fully usable for subsequent stages either way.
+    pub fn try_run<T, F>(&self, n: usize, f: F) -> std::result::Result<Vec<T>, ExecError>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        self.try_run_labeled("run", n, f)
+    }
+
+    pub(crate) fn try_run_labeled<T, F>(
+        &self,
+        label: &str,
+        n: usize,
+        f: F,
+    ) -> std::result::Result<Vec<T>, ExecError>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
         if n == 0 {
-            return Vec::new();
+            return Ok(Vec::new());
         }
         if worker::is_pool_thread() {
-            return (0..n).map(f).collect();
+            // Nested stage: run inline (serial) to avoid self-deadlock,
+            // with the same failure contract — a panicking task fails this
+            // stage, not the worker it runs on.
+            let mut out = Vec::with_capacity(n);
+            for i in 0..n {
+                match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))) {
+                    Ok(v) => out.push(v),
+                    Err(p) => {
+                        return Err(ExecError {
+                            stage: label.to_string(),
+                            message: worker::panic_message(p.as_ref()),
+                        })
+                    }
+                }
+            }
+            return Ok(out);
         }
+        let tracer = self.tracer();
+        let stage_start = tracer.start();
+        let task_label: Arc<str> = Arc::from(label);
         let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
         let done = Arc::new(Completion::new(n));
         {
@@ -172,7 +280,7 @@ impl ThreadPool {
             for i in 0..n {
                 let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
                     let r = f(i);
-                    *slots[i].lock().unwrap() = Some(r);
+                    *lock_unpoisoned(&slots[i]) = Some(r);
                 });
                 // SAFETY: lifetime erasure to 'static. The job borrows only
                 // `f` and `slots`, both alive until this function returns;
@@ -183,19 +291,41 @@ impl ThreadPool {
                     unsafe { std::mem::transmute(job) };
                 self.submit(Task {
                     job,
+                    label: Some(task_label.clone()),
+                    enqueued_ns: tracer.start(),
                     done: Some(done.clone()),
                 });
             }
         }
         done.wait();
-        slots
-            .into_iter()
-            .map(|m| {
-                m.into_inner()
-                    .unwrap_or_else(|e| e.into_inner())
-                    .unwrap_or_else(|| panic!("exec: a pool task panicked"))
-            })
-            .collect()
+        if let Some(t0) = stage_start {
+            tracer.span(
+                format!("stage:{label}"),
+                "exec",
+                0,
+                t0,
+                &[("tasks", n as f64)],
+            );
+        }
+        if let Some(msg) = done.take_panic() {
+            return Err(ExecError {
+                stage: label.to_string(),
+                message: msg,
+            });
+        }
+        let mut out = Vec::with_capacity(n);
+        for m in slots {
+            match m.into_inner().unwrap_or_else(|e| e.into_inner()) {
+                Some(v) => out.push(v),
+                None => {
+                    return Err(ExecError {
+                        stage: label.to_string(),
+                        message: "task produced no result".to_string(),
+                    })
+                }
+            }
+        }
+        Ok(out)
     }
 
     /// Snapshot the per-worker metrics.
@@ -209,8 +339,7 @@ impl ThreadPool {
     }
 
     /// Export per-worker + aggregate counters into a [`Metrics`] registry
-    /// (`exec.workerN.{tasks,steals,busy_nanos,idle_nanos}` and
-    /// `exec.total.*`).
+    /// (`exec.workerN.*` and `exec.total.*`).
     pub fn export_metrics(&self, m: &Metrics) {
         let mut tot_tasks = 0;
         let mut tot_steals = 0;
@@ -219,6 +348,16 @@ impl ThreadPool {
         for s in self.worker_stats() {
             m.add(&format!("exec.worker{}.tasks", s.worker), s.tasks);
             m.add(&format!("exec.worker{}.steals", s.worker), s.steals);
+            m.add(
+                &format!("exec.worker{}.steal_attempts", s.worker),
+                s.steal_attempts,
+            );
+            m.add(&format!("exec.worker{}.parks", s.worker), s.parks);
+            m.add(
+                &format!("exec.worker{}.injector_pops", s.worker),
+                s.injector_pops,
+            );
+            m.add(&format!("exec.worker{}.panics", s.worker), s.panics);
             m.add(&format!("exec.worker{}.busy_nanos", s.worker), s.busy_nanos);
             m.add(&format!("exec.worker{}.idle_nanos", s.worker), s.idle_nanos);
             tot_tasks += s.tasks;
@@ -231,16 +370,35 @@ impl ThreadPool {
         m.add("exec.total.busy_nanos", tot_busy);
         m.add("exec.total.idle_nanos", tot_idle);
     }
+
+    /// Export per-worker counters into a trace sink
+    /// (`exec.workerN.{tasks,steals,steal_attempts,parks,injector_pops,panics}`).
+    pub fn export_trace(&self, sink: &dyn TraceSink) {
+        for s in self.worker_stats() {
+            let w = s.worker;
+            sink.add_counter(&format!("exec.worker{w}.tasks"), s.tasks);
+            sink.add_counter(&format!("exec.worker{w}.steals"), s.steals);
+            sink.add_counter(&format!("exec.worker{w}.steal_attempts"), s.steal_attempts);
+            sink.add_counter(&format!("exec.worker{w}.parks"), s.parks);
+            sink.add_counter(&format!("exec.worker{w}.injector_pops"), s.injector_pops);
+            sink.add_counter(&format!("exec.worker{w}.panics"), s.panics);
+        }
+    }
 }
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        self.shared.shutdown.store(true, Ordering::Release);
         {
-            let _g = self.shared.park_lock.lock().unwrap();
+            // Raise the flag *inside* the park critical section: any worker
+            // holding `park_lock` has either already observed shutdown or is
+            // about to wait on `park_cv` (releasing the lock atomically with
+            // the wait), so the notify below cannot land in the window
+            // between a worker's shutdown check and its park.
+            let _g = lock_unpoisoned(&self.shared.park_lock);
+            self.shared.shutdown.store(true, Ordering::Release);
             self.shared.park_cv.notify_all();
         }
-        for h in self.handles.lock().unwrap().drain(..) {
+        for h in lock_unpoisoned(&self.handles).drain(..) {
             let _ = h.join();
         }
     }
@@ -278,14 +436,49 @@ impl TaskSet {
     /// work stealing; on `None` they run serially on the calling thread.
     /// Either way the results come back in task-index order, so callers
     /// merge deterministically regardless of thread count.
+    ///
+    /// A panicking task re-raises here; prefer [`TaskSet::try_run`] where
+    /// the caller can propagate errors.
     pub fn run<T, F>(&self, pool: Option<&ThreadPool>, f: F) -> Vec<T>
     where
         T: Send,
         F: Fn(usize) -> T + Sync,
     {
         match pool {
-            Some(pool) => pool.run(self.tasks, f),
+            Some(pool) => match pool.try_run_labeled(&self.label, self.tasks, f) {
+                Ok(v) => v,
+                Err(e) => panic!("exec: {e}"),
+            },
             None => (0..self.tasks).map(f).collect(),
+        }
+    }
+
+    /// Run the stage, surfacing a panicking task as a typed error for
+    /// *this stage* instead of unwinding: the pool (or the serial caller)
+    /// stays fully usable for subsequent stages.
+    pub fn try_run<T, F>(&self, pool: Option<&ThreadPool>, f: F) -> crate::error::Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        match pool {
+            Some(pool) => Ok(pool.try_run_labeled(&self.label, self.tasks, f)?),
+            None => {
+                let mut out = Vec::with_capacity(self.tasks);
+                for i in 0..self.tasks {
+                    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))) {
+                        Ok(v) => out.push(v),
+                        Err(p) => {
+                            return Err(ExecError {
+                                stage: self.label.clone(),
+                                message: worker::panic_message(p.as_ref()),
+                            }
+                            .into())
+                        }
+                    }
+                }
+                Ok(out)
+            }
         }
     }
 }
@@ -349,8 +542,6 @@ mod tests {
                 hits.fetch_add(1, Ordering::SeqCst);
             });
         }
-        // run() drains the same queues, so by completion the spawns ran too
-        // (same pool, FIFO steal order) — poll briefly to be safe.
         for _ in 0..1000 {
             if hits.load(Ordering::SeqCst) == 8 {
                 break;
@@ -358,6 +549,10 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(1));
         }
         assert_eq!(hits.load(Ordering::SeqCst), 8);
+        // spawn routes through the shared injector, so the pops counter
+        // attributes every one of them
+        let pops: u64 = pool.worker_stats().iter().map(|s| s.injector_pops).sum();
+        assert_eq!(pops, 8);
     }
 
     #[test]
@@ -374,6 +569,120 @@ mod tests {
         assert!(r.is_err());
         // pool still usable afterwards
         assert_eq!(pool.run(3, |i| i + 1), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn try_run_surfaces_panic_as_error_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let r = pool.try_run(8, |i| {
+            if i == 3 {
+                panic!("injected task panic");
+            }
+            i * 2
+        });
+        let e = r.expect_err("stage with a panicking task must fail");
+        assert!(e.to_string().contains("injected task panic"), "{e}");
+        // subsequent stages keep executing on the same pool — no poisoned
+        // lock, no dead worker
+        for _ in 0..3 {
+            assert_eq!(pool.run(4, |i| i + 1), vec![1, 2, 3, 4]);
+        }
+    }
+
+    #[test]
+    fn taskset_try_run_serial_catches_panic() {
+        let ts = TaskSet::new("bad-stage", 4);
+        let r = ts.try_run::<usize, _>(None, |i| {
+            if i == 1 {
+                panic!("serial boom");
+            }
+            i
+        });
+        let e = r.expect_err("serial stage with a panicking task must fail");
+        let msg = e.to_string();
+        assert!(msg.contains("bad-stage") && msg.contains("serial boom"), "{msg}");
+    }
+
+    #[test]
+    fn submit_distribution_uniform_across_wraparound() {
+        // 3 workers (not a power of two): the old `fetch_add(1) % n`
+        // scheme hands out `(usize::MAX - 1) % 3 == 2`, `usize::MAX % 3
+        // == 0`, `0 % 3 == 0` back to back across wraparound — worker 0
+        // gets a double share. `next_index` keeps the counter in `0..n`.
+        let pool = ThreadPool::new(3);
+        pool.next.store(usize::MAX - 1, Ordering::Relaxed);
+        let mut counts = [0usize; 3];
+        for _ in 0..9 {
+            counts[pool.next_index()] += 1;
+        }
+        assert_eq!(counts, [3, 3, 3]);
+    }
+
+    #[test]
+    fn repeated_shutdown_under_load_terminates() {
+        // Regression guard for the shutdown–park race: create/load/drop
+        // pools repeatedly; a missed wakeup would hang the join in Drop.
+        // The watchdog turns a hang into a failure instead of wedging the
+        // whole test run.
+        let work = std::thread::spawn(|| {
+            for round in 0..60usize {
+                let pool = ThreadPool::new(4);
+                for _ in 0..8 {
+                    pool.spawn(|| {
+                        std::hint::black_box(());
+                    });
+                }
+                let _ = pool.run(16, |i| i + round);
+                drop(pool);
+            }
+        });
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+        while !work.is_finished() {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "shutdown under load hung (park/shutdown race)"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        work.join().unwrap();
+    }
+
+    #[test]
+    fn parks_and_steal_attempts_counted() {
+        let pool = ThreadPool::new(2);
+        let _ = pool.run(4, |_| {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        });
+        // give the now-idle workers time to fail a scan and park
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let stats = pool.worker_stats();
+        let parks: u64 = stats.iter().map(|s| s.parks).sum();
+        let attempts: u64 = stats.iter().map(|s| s.steal_attempts).sum();
+        assert!(parks > 0, "no parks recorded: {stats:?}");
+        assert!(attempts > 0, "no steal attempts recorded: {stats:?}");
+    }
+
+    #[test]
+    fn traced_run_records_task_spans_and_counters() {
+        let (tracer, sink) = Tracer::recording();
+        let pool = ThreadPool::new(2);
+        pool.set_tracer(tracer);
+        let ts = TaskSet::new("traced-stage", 6);
+        let out = ts.try_run(Some(&pool), |i| i * i).unwrap();
+        assert_eq!(out, (0..6).map(|i| i * i).collect::<Vec<_>>());
+        let spans = sink.spans();
+        let task_spans = spans
+            .iter()
+            .filter(|s| s.name == "task:traced-stage")
+            .count();
+        assert_eq!(task_spans, 6);
+        assert!(
+            spans.iter().any(|s| s.name == "stage:traced-stage"),
+            "stage span missing"
+        );
+        pool.export_trace(sink.as_ref());
+        let tasks = sink.counter("exec.worker0.tasks") + sink.counter("exec.worker1.tasks");
+        assert_eq!(tasks, 6);
     }
 
     #[test]

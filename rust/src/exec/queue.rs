@@ -12,6 +12,7 @@
 use std::collections::VecDeque;
 use std::sync::Mutex;
 
+use super::lock_unpoisoned;
 use super::pool::Task;
 
 /// A mutex-protected double-ended task queue.
@@ -27,21 +28,21 @@ impl TaskQueue {
 
     /// Owner-side push (back of the deque).
     pub(crate) fn push(&self, task: Task) {
-        self.inner.lock().unwrap().push_back(task);
+        lock_unpoisoned(&self.inner).push_back(task);
     }
 
     /// Owner-side pop (back of the deque, LIFO).
     pub(crate) fn pop(&self) -> Option<Task> {
-        self.inner.lock().unwrap().pop_back()
+        lock_unpoisoned(&self.inner).pop_back()
     }
 
     /// Thief-side steal (front of the deque, FIFO).
     pub(crate) fn steal(&self) -> Option<Task> {
-        self.inner.lock().unwrap().pop_front()
+        lock_unpoisoned(&self.inner).pop_front()
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        lock_unpoisoned(&self.inner).len()
     }
 
     pub fn is_empty(&self) -> bool {

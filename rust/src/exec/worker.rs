@@ -6,6 +6,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use super::lock_unpoisoned;
 use super::pool::{Shared, Task};
 
 /// Per-worker counters, written by the worker thread with relaxed atomics
@@ -13,7 +14,16 @@ use super::pool::{Shared, Task};
 #[derive(Default)]
 pub struct WorkerMetrics {
     pub tasks: AtomicU64,
+    /// Successful steals from sibling deques.
     pub steals: AtomicU64,
+    /// Sibling-scan rounds entered (whether or not anything was found).
+    pub steal_attempts: AtomicU64,
+    /// Times this worker parked on the condvar.
+    pub parks: AtomicU64,
+    /// Tasks taken from the shared injector.
+    pub injector_pops: AtomicU64,
+    /// Tasks whose job panicked (caught; reported via the owning stage).
+    pub panics: AtomicU64,
     pub busy_nanos: AtomicU64,
     pub idle_nanos: AtomicU64,
 }
@@ -24,6 +34,10 @@ pub struct WorkerStats {
     pub worker: usize,
     pub tasks: u64,
     pub steals: u64,
+    pub steal_attempts: u64,
+    pub parks: u64,
+    pub injector_pops: u64,
+    pub panics: u64,
     pub busy_nanos: u64,
     pub idle_nanos: u64,
 }
@@ -34,6 +48,10 @@ impl WorkerMetrics {
             worker,
             tasks: self.tasks.load(Ordering::Relaxed),
             steals: self.steals.load(Ordering::Relaxed),
+            steal_attempts: self.steal_attempts.load(Ordering::Relaxed),
+            parks: self.parks.load(Ordering::Relaxed),
+            injector_pops: self.injector_pops.load(Ordering::Relaxed),
+            panics: self.panics.load(Ordering::Relaxed),
             busy_nanos: self.busy_nanos.load(Ordering::Relaxed),
             idle_nanos: self.idle_nanos.load(Ordering::Relaxed),
         }
@@ -51,6 +69,17 @@ pub fn is_pool_thread() -> bool {
     IS_POOL_WORKER.with(|f| f.get())
 }
 
+/// Render a panic payload as text (for [`super::ExecError`]).
+pub(crate) fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// The worker main loop: drain own deque (LIFO), then the shared injector,
 /// then steal from siblings (FIFO); park when there is nothing anywhere.
 pub(crate) fn run(shared: Arc<Shared>, idx: usize) {
@@ -60,42 +89,79 @@ pub(crate) fn run(shared: Arc<Shared>, idx: usize) {
             execute(&shared, idx, task);
             continue;
         }
-        // Park. The lock-ordering dance matters: submitters notify while
-        // holding `park_lock`, and we re-check for work while holding it,
-        // so a task pushed between our failed scan and the wait cannot be
-        // missed.
-        let guard = shared.park_lock.lock().unwrap();
+        // Park. The lock-ordering dance matters: submitters notify — and
+        // pool shutdown both stores its flag and notifies — while holding
+        // `park_lock`, and we re-check both conditions while holding it,
+        // so neither a task pushed nor a shutdown raised between our
+        // failed scan and the wait can be missed.
+        let guard = lock_unpoisoned(&shared.park_lock);
         if shared.is_shutdown() {
             break;
         }
         if shared.has_work() {
             continue;
         }
+        shared.metrics[idx].parks.fetch_add(1, Ordering::Relaxed);
+        let tracer = shared.tracer();
+        let t0 = tracer.start();
         let sw = crate::util::timer::Stopwatch::start();
         // Timeout is belt-and-braces only; correctness comes from the
         // re-check above.
-        let _ = shared
+        let (g, _timed_out) = shared
             .park_cv
             .wait_timeout(guard, Duration::from_millis(100))
-            .unwrap();
+            .unwrap_or_else(|e| e.into_inner());
+        drop(g);
         shared.metrics[idx]
             .idle_nanos
             .fetch_add(sw.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        if let Some(t0) = t0 {
+            tracer.span("park", "exec", idx as u32 + 1, t0, &[]);
+        }
     }
 }
 
 fn execute(shared: &Arc<Shared>, idx: usize, task: Task) {
+    let tracer = shared.tracer();
+    let t0 = tracer.start();
     let sw = crate::util::timer::Stopwatch::start();
-    let Task { job, done } = task;
+    let Task {
+        job,
+        label,
+        enqueued_ns,
+        done,
+    } = task;
     // A panicking task must not kill the worker or wedge its stage: catch
-    // the unwind (the stage re-raises it on the submitting thread via the
-    // task's empty result slot), and signal completion only after the job
-    // and everything it borrowed have been dropped.
-    let _ = catch_unwind(AssertUnwindSafe(job));
+    // the unwind (the stage surfaces it via the completion's panic slot),
+    // and signal completion only after the job and everything it borrowed
+    // have been dropped.
+    let result = catch_unwind(AssertUnwindSafe(job));
     let m = &shared.metrics[idx];
     m.tasks.fetch_add(1, Ordering::Relaxed);
     m.busy_nanos
         .fetch_add(sw.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    if let Err(payload) = &result {
+        m.panics.fetch_add(1, Ordering::Relaxed);
+        if let Some(done) = done.as_ref() {
+            done.record_panic(panic_message(payload.as_ref()));
+        }
+    }
+    if let Some(t0) = t0 {
+        let name = match &label {
+            Some(l) => format!("task:{l}"),
+            None => "task".to_string(),
+        };
+        let queue_wait_ms = enqueued_ns
+            .map(|e| t0.saturating_sub(e) as f64 / 1e6)
+            .unwrap_or(0.0);
+        tracer.span(
+            name,
+            "exec",
+            idx as u32 + 1,
+            t0,
+            &[("queue_wait_ms", queue_wait_ms)],
+        );
+    }
     if let Some(done) = done {
         done.signal();
     }
@@ -106,9 +172,17 @@ fn find_task(shared: &Arc<Shared>, idx: usize) -> Option<Task> {
         return Some(t);
     }
     if let Some(t) = shared.injector.steal() {
+        shared.metrics[idx]
+            .injector_pops
+            .fetch_add(1, Ordering::Relaxed);
         return Some(t);
     }
     let n = shared.queues.len();
+    if n > 1 {
+        shared.metrics[idx]
+            .steal_attempts
+            .fetch_add(1, Ordering::Relaxed);
+    }
     for k in 1..n {
         if let Some(t) = shared.queues[(idx + k) % n].steal() {
             shared.metrics[idx].steals.fetch_add(1, Ordering::Relaxed);

@@ -44,6 +44,7 @@ pub mod metrics;
 pub mod mltable;
 pub mod optim;
 pub mod runtime;
+pub mod trace;
 pub mod util;
 pub mod xla;
 
@@ -68,6 +69,18 @@ pub mod prelude {
     };
     pub use crate::optim::{GdParams, Reg, SgdParams};
     pub use crate::runtime::{Runtime, Tensor};
+    pub use crate::trace::{MemorySink, TraceSink, Tracer};
+}
+
+/// Print the trace summary table and, when `out` is given, write the
+/// Chrome-trace JSON (open in `chrome://tracing` or ui.perfetto.dev).
+fn finish_trace(sink: &trace::MemorySink, out: Option<&str>) -> Result<()> {
+    print!("{}", sink.summary());
+    if let Some(path) = out {
+        sink.write_chrome(path)?;
+        println!("chrome trace written to {path}");
+    }
+    Ok(())
 }
 
 /// CLI entry point shared by `rust/src/main.rs` (kept here so integration
@@ -75,7 +88,7 @@ pub mod prelude {
 pub fn run_cli(args: util::cli::Args) -> Result<()> {
     use algorithms::logreg::Backend;
     use bench_harness::{
-        als_scaling, logreg_scaling, AlsBenchConfig, LogregBenchConfig, ScalingMode,
+        als_scaling_with, logreg_scaling_with, AlsBenchConfig, LogregBenchConfig, ScalingMode,
     };
 
     // optional config file + --section.key overrides
@@ -104,6 +117,7 @@ pub fn run_cli(args: util::cli::Args) -> Result<()> {
         }
         Some("train") => {
             // mli train --algo logreg|als --machines M --iters N [--threads T]
+            //           [--trace-out trace.json]
             let machines = args.get_usize("machines", 4)?;
             let iters = args.get_usize("iters", 10)?;
             let use_xla = !args.has_flag("no-xla");
@@ -114,12 +128,22 @@ pub fn run_cli(args: util::cli::Args) -> Result<()> {
             } else {
                 args.get("threads").map(|_| args.get_usize("threads", 0)).transpose()?
             };
+            let trace_out = args.get("trace-out");
+            let (tracer, sink) = if trace_out.is_some() {
+                let (t, s) = trace::Tracer::recording();
+                (Some(t), Some(s))
+            } else {
+                (None, None)
+            };
             let make_cluster = |m: usize| {
-                let c = cluster::SimCluster::ec2(m);
-                match threads {
-                    Some(t) => c.with_executor(t),
-                    None => c,
+                let mut c = cluster::SimCluster::ec2(m);
+                if let Some(t) = threads {
+                    c = c.with_executor(t);
                 }
+                if let Some(tr) = &tracer {
+                    c.set_tracer(tr.clone());
+                }
+                c
             };
             match args.get_str("algo", "logreg").as_str() {
                 "logreg" => {
@@ -143,6 +167,9 @@ pub fn run_cli(args: util::cli::Args) -> Result<()> {
                     let model = algo.train(&data.table, &cluster)?;
                     println!("loss history: {:?}", model.loss_history);
                     println!("sim walltime: {:.3}s", model.sim_seconds);
+                    if let (Some(s), Some(p)) = (&sink, cluster.pool()) {
+                        p.export_trace(s.as_ref());
+                    }
                 }
                 "als" => {
                     let data = data::netflix::generate(&data::netflix::NetflixConfig {
@@ -162,15 +189,29 @@ pub fn run_cli(args: util::cli::Args) -> Result<()> {
                     .train_ratings(&data, &cluster)?;
                     println!("rmse history: {:?}", model.rmse_history);
                     println!("sim walltime: {:.3}s", cluster.total_sim_seconds());
+                    if let (Some(s), Some(p)) = (&sink, cluster.pool()) {
+                        p.export_trace(s.as_ref());
+                    }
                 }
                 other => return Err(Error::Config(format!("unknown --algo '{other}'"))),
+            }
+            if let Some(s) = &sink {
+                finish_trace(s, trace_out)?;
             }
             Ok(())
         }
         Some("bench") => {
             // mli bench --figure fig2|figA5|fig3|figA7 [--machines 1,2,4]
+            //           [--trace-out trace.json]
             let machines = args.get_usize_list("machines", &[1, 2, 4])?;
             let iters = cfg.get_usize("bench", "iters", 5)?;
+            let trace_out = args.get("trace-out");
+            let (tracer, sink) = if trace_out.is_some() {
+                let (t, s) = trace::Tracer::recording();
+                (Some(t), Some(s))
+            } else {
+                (None, None)
+            };
             match args.get_str("figure", "fig2").as_str() {
                 "fig2" | "figA5" => {
                     let mode = if args.get_str("figure", "fig2") == "fig2" {
@@ -188,7 +229,7 @@ pub fn run_cli(args: util::cli::Args) -> Result<()> {
                         reps: 1,
                         threads: args.get_usize("threads", 0)?,
                     };
-                    println!("{}", logreg_scaling(&c, mode)?.to_markdown());
+                    println!("{}", logreg_scaling_with(&c, mode, tracer.as_ref())?.to_markdown());
                 }
                 "fig3" | "figA7" => {
                     let mode = if args.get_str("figure", "fig3") == "fig3" {
@@ -202,9 +243,12 @@ pub fn run_cli(args: util::cli::Args) -> Result<()> {
                         threads: args.get_usize("threads", 0)?,
                         ..Default::default()
                     };
-                    println!("{}", als_scaling(&c, mode)?.to_markdown());
+                    println!("{}", als_scaling_with(&c, mode, tracer.as_ref())?.to_markdown());
                 }
                 other => return Err(Error::Config(format!("unknown --figure '{other}'"))),
+            }
+            if let Some(s) = &sink {
+                finish_trace(s, trace_out)?;
             }
             Ok(())
         }
@@ -222,6 +266,13 @@ pub fn run_cli(args: util::cli::Args) -> Result<()> {
             let n = args.get_usize("n", 8192)?;
             let d = args.get_usize("d", 64)?;
             let iters = args.get_usize("iters", 10)?;
+            let trace_out = args.get("trace-out");
+            let (tracer, sink) = if trace_out.is_some() {
+                let (t, s) = trace::Tracer::recording();
+                (Some(t), Some(s))
+            } else {
+                (None, None)
+            };
             let mut table = metrics::Table::new(
                 "exec thread scaling (logreg, Rust backend)",
                 &["threads", "wall_ms", "speedup", "tasks", "steals", "sim_s"],
@@ -232,6 +283,9 @@ pub fn run_cli(args: util::cli::Args) -> Result<()> {
                 let ctx = engine::EngineContext::new();
                 let data = data::dense_gen::generate(&ctx, n, d, parts, 7)?;
                 let cluster = cluster::SimCluster::ec2(parts).with_executor(t.max(1));
+                if let Some(tr) = &tracer {
+                    cluster.set_tracer(tr.clone());
+                }
                 let algo = algorithms::LogisticRegression::new(
                     algorithms::logreg::LogRegParams {
                         sgd: optim::SgdParams { iters, ..Default::default() },
@@ -256,6 +310,9 @@ pub fn run_cli(args: util::cli::Args) -> Result<()> {
                 let (tasks, steals) = cluster
                     .pool()
                     .map(|p| {
+                        if let Some(s) = &sink {
+                            p.export_trace(s.as_ref());
+                        }
                         let s = p.worker_stats();
                         (
                             s.iter().map(|w| w.tasks).sum::<u64>(),
@@ -275,6 +332,47 @@ pub fn run_cli(args: util::cli::Args) -> Result<()> {
             }
             println!("{}", table.to_markdown());
             println!("(results bitwise-identical across all thread counts)");
+            if let Some(s) = &sink {
+                finish_trace(s, trace_out)?;
+            }
+            Ok(())
+        }
+        Some("trace") => {
+            // mli trace [--threads T] [--partitions P] [--iters N] [--n N]
+            //           [--d D] [--out trace.json]
+            //
+            // Small traced logreg run (Rust backend): prints the span/counter
+            // summary and the simulated-vs-wall clock attribution; --out
+            // writes the Chrome-trace JSON for chrome://tracing / perfetto.
+            let threads = args.get_usize("threads", 2)?;
+            let parts = args.get_usize("partitions", 8)?;
+            let iters = args.get_usize("iters", 6)?;
+            let n = args.get_usize("n", 4096)?;
+            let d = args.get_usize("d", 32)?;
+            let (tracer, sink) = trace::Tracer::recording();
+            let ctx = engine::EngineContext::new();
+            let data = data::dense_gen::generate(&ctx, n, d, parts, 7)?;
+            let cluster = cluster::SimCluster::ec2(parts).with_executor(threads.max(1));
+            cluster.set_tracer(tracer.clone());
+            let algo = algorithms::LogisticRegression::new(algorithms::logreg::LogRegParams {
+                sgd: optim::SgdParams {
+                    iters,
+                    track_loss: true,
+                    ..Default::default()
+                },
+                backend: Backend::Rust,
+            });
+            use algorithms::Algorithm;
+            let model = algo.train(&data.table, &cluster)?;
+            println!(
+                "traced logreg: {n}x{d}, {parts} partitions, {iters} iters, \
+                 {threads} threads; final loss {:.6}",
+                model.loss_history.last().copied().unwrap_or(f64::NAN)
+            );
+            if let Some(p) = cluster.pool() {
+                p.export_trace(sink.as_ref());
+            }
+            finish_trace(&sink, args.get("out"))?;
             Ok(())
         }
         Some("loc") => {
@@ -291,6 +389,7 @@ pub fn run_cli(args: util::cli::Args) -> Result<()> {
             println!("  train --algo logreg|als --machines M  train on the simulated cluster");
             println!("  bench --figure fig2|figA5|fig3|figA7  regenerate a paper figure (CLI scale)");
             println!("  exec-bench [--threads 1,2,4,8]        exec pool thread-scaling table");
+            println!("  trace [--out trace.json]              traced run + span/counter summary");
             println!("  loc                                   Fig 2a/3a lines-of-code tables");
             println!("  help                                  this message");
             println!();
@@ -299,6 +398,9 @@ pub fn run_cli(args: util::cli::Args) -> Result<()> {
             println!("                affects real wall-clock only — simulated time and");
             println!("                results are identical for any T)");
             println!("                e.g. `mli train --algo logreg --machines 8 --threads 4`");
+            println!("  --trace-out F record per-task/per-stage spans and exec counters during");
+            println!("                train/bench/exec-bench; write Chrome-trace JSON to F");
+            println!("                (open in chrome://tracing or ui.perfetto.dev)");
             println!();
             println!("full-scale figures: `cargo bench` (see rust/benches/)");
             Ok(())

@@ -44,7 +44,9 @@ impl GD {
         let mut loss_history = Vec::new();
         let t0 = cluster.total_sim_seconds();
 
+        let tracer = cluster.tracer();
         for it in 0..params.iters {
+            let round_t0 = tracer.start();
             cluster.begin_round();
             let mut grad = vec![0.0f64; d];
             let mut loss = 0.0;
@@ -53,10 +55,11 @@ impl GD {
             // accumulated below in partition index order — deterministic
             // for any thread count despite f64 addition being non-associative
             let stage = TaskSet::new(format!("gd-grad-{it}"), parts);
-            let results = stage.run(pool.as_deref(), |p| {
+            let results = stage.try_run(pool.as_deref(), |p| {
                 let machine = cluster.machine_of(p);
                 cluster.run_task(machine, || provider.local_grad(p, &w))
-            });
+            })?;
+            let merge_t0 = tracer.start();
             for r in results {
                 let (g, l, n) = r?;
                 for (acc, &x) in grad.iter_mut().zip(&g) {
@@ -71,12 +74,17 @@ impl GD {
                 *wi -= (eta * g) as f32;
             }
             params.reg.apply_prox(&mut w, eta);
+            if let Some(t0) = merge_t0 {
+                tracer.span(format!("gd-merge-{it}"), "optim", 0, t0, &[]);
+            }
             cluster.charge_allreduce(params.topology, provider.model_bytes());
             cluster.end_round();
+            if let Some(t0) = round_t0 {
+                tracer.span(format!("gd-round-{it}"), "optim", 0, t0, &[]);
+            }
             if params.track_loss {
                 loss_history.push(loss / examples.max(1.0));
             }
-            let _ = it;
         }
 
         Ok(super::SgdResult {

@@ -84,22 +84,33 @@ impl SGD {
         cluster.charge_broadcast(params.topology, provider.model_bytes());
         cluster.end_round();
 
+        let tracer = cluster.tracer();
         for it in 0..params.iters {
             let eta = params.learning_rate / (1.0 + params.decay * it as f64);
+            let round_t0 = tracer.start();
             cluster.begin_round();
             let stage = TaskSet::new(format!("sgd-epoch-{it}"), parts);
-            let results = stage.run(pool.as_deref(), |p| {
+            // try_run: a panicking epoch task fails this training run with
+            // a typed error instead of unwinding through the round loop
+            let results = stage.try_run(pool.as_deref(), |p| {
                 let machine = cluster.machine_of(p);
                 cluster.run_task(machine, || provider.local_epoch(p, &w, eta as f32))
-            });
+            })?;
+            let merge_t0 = tracer.start();
             let mut locals: Vec<(Vec<f32>, f64)> = Vec::with_capacity(parts);
             for (p, lw) in results.into_iter().enumerate() {
                 locals.push((lw?, provider.partition_weight(p)));
             }
             w = average_weights(&locals);
             params.reg.apply_prox(&mut w, eta);
+            if let Some(t0) = merge_t0 {
+                tracer.span(format!("sgd-merge-{it}"), "optim", 0, t0, &[]);
+            }
             cluster.charge_allreduce(params.topology, provider.model_bytes());
             cluster.end_round();
+            if let Some(t0) = round_t0 {
+                tracer.span(format!("sgd-round-{it}"), "optim", 0, t0, &[]);
+            }
 
             if params.track_loss && it % params.loss_every.max(1) == 0 {
                 loss_history.push(Self::loss(provider, &w)?);

@@ -310,6 +310,33 @@ impl Runtime {
     }
 }
 
+/// True when the AOT artifact directory holds a `manifest.json`.
+pub fn artifacts_available() -> bool {
+    Runtime::artifact_dir().join("manifest.json").exists()
+}
+
+/// Guard for artifact-dependent tests: returns `true` when the AOT
+/// artifacts are present. When absent, prints a skip note and returns
+/// `false` so the caller can early-return — unless `MLI_REQUIRE_ARTIFACTS=1`
+/// (set by the dedicated CI job that builds the artifacts first), in which
+/// case silently skipping would mask a broken pipeline, so we panic.
+pub fn require_artifacts_or_skip(test: &str) -> bool {
+    if artifacts_available() {
+        return true;
+    }
+    if std::env::var("MLI_REQUIRE_ARTIFACTS").as_deref() == Ok("1") {
+        panic!(
+            "{test}: MLI_REQUIRE_ARTIFACTS=1 but no artifacts at {} (run `make artifacts`)",
+            Runtime::artifact_dir().display()
+        );
+    }
+    eprintln!(
+        "skipping {test}: AOT artifacts not found at {} (run `make artifacts` to enable)",
+        Runtime::artifact_dir().display()
+    );
+    false
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

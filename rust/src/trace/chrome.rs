@@ -1,0 +1,148 @@
+//! Chrome trace-event exporter.
+//!
+//! Emits the Trace Event Format consumed by `chrome://tracing` and
+//! ui.perfetto.dev: one JSON object with a `traceEvents` array holding
+//! "M" thread-name metadata, "X" complete spans (`ts`/`dur` in
+//! microseconds) and "C" counter samples. Everything is built on the
+//! in-tree [`crate::util::json::Json`] writer — no external deps.
+
+use std::collections::BTreeMap;
+
+use super::SpanEvent;
+use crate::util::json::Json;
+
+const PID: usize = 1;
+
+/// Build the full Chrome-trace document from collected spans + counters.
+pub fn to_json(spans: &[SpanEvent], counters: &BTreeMap<String, u64>) -> Json {
+    let mut events: Vec<Json> = Vec::with_capacity(spans.len() + counters.len() + 4);
+
+    // Thread-name metadata for every tid that appears (tid 0 is the
+    // driver; worker i reports as tid i + 1).
+    let max_tid = spans.iter().map(|s| s.tid).max().unwrap_or(0);
+    for tid in 0..=max_tid {
+        let label = if tid == 0 {
+            "driver".to_string()
+        } else {
+            format!("worker-{}", tid - 1)
+        };
+        events.push(Json::obj(vec![
+            ("ph", Json::from("M")),
+            ("name", Json::from("thread_name")),
+            ("pid", Json::from(PID)),
+            ("tid", Json::from(tid as usize)),
+            ("args", Json::obj(vec![("name", Json::Str(label))])),
+        ]));
+    }
+
+    let mut end_ts_us = 0.0f64;
+    for s in spans {
+        let ts = s.start_ns as f64 / 1e3;
+        let dur = s.dur_ns as f64 / 1e3;
+        end_ts_us = end_ts_us.max(ts + dur);
+        let args: BTreeMap<String, Json> = s
+            .args
+            .iter()
+            .map(|(k, v)| (k.to_string(), Json::Num(*v)))
+            .collect();
+        events.push(Json::obj(vec![
+            ("ph", Json::from("X")),
+            ("name", Json::Str(s.name.clone())),
+            ("cat", Json::from(s.cat)),
+            ("pid", Json::from(PID)),
+            ("tid", Json::from(s.tid as usize)),
+            ("ts", Json::Num(ts)),
+            ("dur", Json::Num(dur)),
+            ("args", Json::Obj(args)),
+        ]));
+    }
+
+    // Counters are totals, sampled once at the end of the trace so the
+    // counter track shows the final value.
+    for (name, value) in counters {
+        events.push(Json::obj(vec![
+            ("ph", Json::from("C")),
+            ("name", Json::Str(name.clone())),
+            ("pid", Json::from(PID)),
+            ("tid", Json::from(0usize)),
+            ("ts", Json::Num(end_ts_us)),
+            ("args", Json::obj(vec![("value", Json::from(*value as usize))])),
+        ]));
+    }
+
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::from("ms")),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_trace_is_still_valid() {
+        let doc = to_json(&[], &BTreeMap::new());
+        let text = doc.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // just the driver thread-name metadata row
+        assert_eq!(events.len(), 1);
+        assert_eq!(
+            parsed.get("displayTimeUnit").unwrap().as_str().unwrap(),
+            "ms"
+        );
+    }
+
+    #[test]
+    fn span_units_are_microseconds() {
+        let spans = vec![SpanEvent {
+            name: "task:t".into(),
+            cat: "exec",
+            tid: 1,
+            start_ns: 2_000,
+            dur_ns: 3_000,
+            args: vec![("queue_wait_ms", 0.25)],
+        }];
+        let doc = to_json(&spans, &BTreeMap::new());
+        let text = doc.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let span = events
+            .iter()
+            .find(|e| e.get("ph").unwrap().as_str().unwrap() == "X")
+            .unwrap();
+        assert_eq!(span.get("ts").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(span.get("dur").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(
+            span.get("args")
+                .unwrap()
+                .get("queue_wait_ms")
+                .unwrap()
+                .as_f64()
+                .unwrap(),
+            0.25
+        );
+    }
+
+    #[test]
+    fn counters_become_counter_events() {
+        let mut counters = BTreeMap::new();
+        counters.insert("exec.worker0.steals".to_string(), 7u64);
+        let doc = to_json(&[], &counters);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let c = events
+            .iter()
+            .find(|e| e.get("ph").unwrap().as_str().unwrap() == "C")
+            .unwrap();
+        assert_eq!(
+            c.get("name").unwrap().as_str().unwrap(),
+            "exec.worker0.steals"
+        );
+        assert_eq!(
+            c.get("args").unwrap().get("value").unwrap().as_usize().unwrap(),
+            7
+        );
+    }
+}

@@ -1,0 +1,354 @@
+//! `trace`: structured tracing + metrics for the executor and the engine.
+//!
+//! The paper's performance claims ("highly competitive performance and
+//! scalability") need visibility into where time actually goes once the
+//! work-stealing executor ([`crate::exec`]) is in the loop. This module is
+//! that observability substrate:
+//!
+//! * **Spans** ([`SpanEvent`]) — wall-clock intervals with a name, a
+//!   category, a logical thread id and numeric args. The exec layer emits
+//!   per-task spans (with queue-wait attribution) and per-stage spans; the
+//!   engine emits per-action/per-eval spans; the optimizers emit per-round
+//!   and merge spans; the [`crate::cluster::SimCluster`] ledger emits one
+//!   span per simulated round carrying both clocks (simulated seconds in
+//!   the args, wall-clock as the span duration).
+//! * **Counters** — monotonic totals (per-worker tasks/steals/parks/
+//!   injector pops via [`crate::exec::ThreadPool::export_trace`], plus
+//!   `sim.micros` / `wall.micros` for simulated-vs-wall attribution).
+//! * **Sinks** ([`TraceSink`]) — where events go. [`MemorySink`] is the
+//!   in-memory aggregator behind the CLI: it renders a human-readable
+//!   summary table ([`MemorySink::summary`]) and exports the Chrome trace
+//!   event format ([`MemorySink::write_chrome`], loadable in
+//!   `chrome://tracing` or ui.perfetto.dev).
+//!
+//! A [`Tracer`] is attached per component (`ThreadPool::set_tracer`,
+//! `EngineContext::with_tracer`, `SimCluster::with_tracer`) and is
+//! disabled by default: the hot-path cost when off is one relaxed atomic
+//! load ([`Tracer::start`] returns `None` and all span bookkeeping is
+//! skipped).
+//!
+//! Thread-id convention: tid 0 is the driver thread; pool worker `i`
+//! reports as tid `i + 1`.
+
+pub mod chrome;
+pub mod summary;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// One completed wall-clock interval.
+#[derive(Debug, Clone)]
+pub struct SpanEvent {
+    pub name: String,
+    /// Category: "exec", "engine", "optim", "sim", ...
+    pub cat: &'static str,
+    /// Logical thread: 0 = driver, worker i = i + 1.
+    pub tid: u32,
+    /// Nanoseconds since the tracer's epoch.
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// Numeric attributes (e.g. `queue_wait_ms`, `sim_s`).
+    pub args: Vec<(&'static str, f64)>,
+}
+
+/// Destination for trace events. Implementations must be cheap and
+/// thread-safe: spans arrive concurrently from pool workers.
+pub trait TraceSink: Send + Sync {
+    fn record_span(&self, span: SpanEvent);
+    fn add_counter(&self, name: &str, delta: u64);
+}
+
+/// The per-component trace handle. Cloned freely (wrap in `Arc`); all
+/// recording methods are no-ops while disabled.
+pub struct Tracer {
+    epoch: Instant,
+    enabled: AtomicBool,
+    sink: Mutex<Option<Arc<dyn TraceSink>>>,
+}
+
+impl Tracer {
+    /// A disabled tracer: every recording call is a cheap no-op. This is
+    /// what components hold by default.
+    pub fn disabled() -> Arc<Tracer> {
+        Arc::new(Tracer {
+            epoch: Instant::now(),
+            enabled: AtomicBool::new(false),
+            sink: Mutex::new(None),
+        })
+    }
+
+    /// An enabled tracer recording into a fresh [`MemorySink`].
+    pub fn recording() -> (Arc<Tracer>, Arc<MemorySink>) {
+        let sink = Arc::new(MemorySink::default());
+        let tracer = Tracer {
+            epoch: Instant::now(),
+            enabled: AtomicBool::new(true),
+            sink: Mutex::new(Some(sink.clone() as Arc<dyn TraceSink>)),
+        };
+        (Arc::new(tracer), sink)
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Swap the sink (None disables the tracer).
+    pub fn set_sink(&self, sink: Option<Arc<dyn TraceSink>>) {
+        let on = sink.is_some();
+        *self.sink.lock().unwrap_or_else(|e| e.into_inner()) = sink;
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Nanoseconds since this tracer's epoch.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Hot-path entry: `Some(now_ns)` when enabled, `None` when disabled.
+    /// Callers skip all span bookkeeping on `None`.
+    pub fn start(&self) -> Option<u64> {
+        if self.is_enabled() {
+            Some(self.now_ns())
+        } else {
+            None
+        }
+    }
+
+    /// Close a span opened at `start_ns` (from [`Tracer::start`]) ending
+    /// now, and record it.
+    pub fn span(
+        &self,
+        name: impl Into<String>,
+        cat: &'static str,
+        tid: u32,
+        start_ns: u64,
+        args: &[(&'static str, f64)],
+    ) {
+        if !self.is_enabled() {
+            return;
+        }
+        let ev = SpanEvent {
+            name: name.into(),
+            cat,
+            tid,
+            start_ns,
+            dur_ns: self.now_ns().saturating_sub(start_ns),
+            args: args.to_vec(),
+        };
+        let sink = self.sink.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(s) = sink.as_ref() {
+            s.record_span(ev);
+        }
+    }
+
+    /// Bump a named counter.
+    pub fn count(&self, name: &str, delta: u64) {
+        if !self.is_enabled() {
+            return;
+        }
+        let sink = self.sink.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(s) = sink.as_ref() {
+            s.add_counter(name, delta);
+        }
+    }
+}
+
+/// In-memory aggregator: collects spans + counters, renders the summary
+/// table and the Chrome trace export.
+#[derive(Default)]
+pub struct MemorySink {
+    spans: Mutex<Vec<SpanEvent>>,
+    counters: Mutex<BTreeMap<String, u64>>,
+}
+
+impl TraceSink for MemorySink {
+    fn record_span(&self, span: SpanEvent) {
+        self.spans.lock().unwrap_or_else(|e| e.into_inner()).push(span);
+    }
+
+    fn add_counter(&self, name: &str, delta: u64) {
+        *self
+            .counters
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .entry(name.to_string())
+            .or_insert(0) += delta;
+    }
+}
+
+impl MemorySink {
+    pub fn spans(&self) -> Vec<SpanEvent> {
+        self.spans.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    pub fn counters(&self) -> BTreeMap<String, u64> {
+        self.counters
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone()
+    }
+
+    pub fn span_count(&self) -> usize {
+        self.spans.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(name)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Human-readable aggregate tables (spans grouped by normalized name,
+    /// counters, simulated-vs-wall attribution).
+    pub fn summary(&self) -> String {
+        summary::render(&self.spans(), &self.counters())
+    }
+
+    /// The Chrome trace-event JSON document.
+    pub fn chrome_json(&self) -> crate::util::json::Json {
+        chrome::to_json(&self.spans(), &self.counters())
+    }
+
+    /// Write the Chrome trace to `path` (open in `chrome://tracing` or
+    /// ui.perfetto.dev).
+    pub fn write_chrome(&self, path: &str) -> crate::error::Result<()> {
+        std::fs::write(path, self.chrome_json().to_string())?;
+        Ok(())
+    }
+}
+
+/// Collapse digit runs so per-iteration span names aggregate in the
+/// summary: "sgd-round-7" -> "sgd-round-#", "eval:dataset-12" ->
+/// "eval:dataset-#".
+pub fn normalize(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    let mut in_digits = false;
+    for c in name.chars() {
+        if c.is_ascii_digit() {
+            if !in_digits {
+                out.push('#');
+                in_digits = true;
+            }
+        } else {
+            in_digits = false;
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_is_noop() {
+        let t = Tracer::disabled();
+        assert!(!t.is_enabled());
+        assert!(t.start().is_none());
+        // recording calls must not panic with no sink
+        t.span("x", "exec", 0, 0, &[]);
+        t.count("c", 1);
+    }
+
+    #[test]
+    fn recording_tracer_captures_spans_and_counters() {
+        let (t, sink) = Tracer::recording();
+        assert!(t.is_enabled());
+        let t0 = t.start().expect("enabled");
+        t.span("task:work", "exec", 1, t0, &[("queue_wait_ms", 0.5)]);
+        t.count("exec.worker0.parks", 3);
+        t.count("exec.worker0.parks", 2);
+        let spans = sink.spans();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].name, "task:work");
+        assert_eq!(spans[0].tid, 1);
+        assert_eq!(spans[0].args, vec![("queue_wait_ms", 0.5)]);
+        assert_eq!(sink.counter("exec.worker0.parks"), 5);
+        assert_eq!(sink.span_count(), 1);
+    }
+
+    #[test]
+    fn set_sink_toggles_enabled() {
+        let t = Tracer::disabled();
+        let sink = Arc::new(MemorySink::default());
+        t.set_sink(Some(sink.clone() as Arc<dyn TraceSink>));
+        assert!(t.is_enabled());
+        let t0 = t.start().unwrap();
+        t.span("s", "engine", 0, t0, &[]);
+        assert_eq!(sink.span_count(), 1);
+        t.set_sink(None);
+        assert!(!t.is_enabled());
+    }
+
+    #[test]
+    fn normalize_collapses_digit_runs() {
+        assert_eq!(normalize("sgd-round-17"), "sgd-round-#");
+        assert_eq!(normalize("eval:dataset-3"), "eval:dataset-#");
+        assert_eq!(normalize("plain"), "plain");
+        assert_eq!(normalize("a1b22c"), "a#b#c");
+    }
+
+    #[test]
+    fn summary_mentions_spans_and_counters() {
+        let (t, sink) = Tracer::recording();
+        for i in 0..3 {
+            let t0 = t.start().unwrap();
+            t.span(format!("sgd-round-{i}"), "optim", 0, t0, &[]);
+        }
+        t.count("sim.micros", 2_000_000);
+        t.count("wall.micros", 1_000_000);
+        let s = sink.summary();
+        assert!(s.contains("sgd-round-#"), "{s}");
+        assert!(s.contains("sim.micros"), "{s}");
+        assert!(s.contains("simulated 2.000s"), "{s}");
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_events() {
+        let (t, sink) = Tracer::recording();
+        let t0 = t.start().unwrap();
+        t.span("task:epoch", "exec", 2, t0, &[("queue_wait_ms", 1.25)]);
+        t.count("exec.worker1.steals", 4);
+        let text = sink.chrome_json().to_string();
+        let parsed = crate::util::json::Json::parse(&text).expect("valid JSON");
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // metadata rows (driver + workers 0..=1) + 1 span + 1 counter
+        assert!(events.len() >= 3, "got {} events", events.len());
+        let span = events
+            .iter()
+            .find(|e| {
+                e.get("name").and_then(|n| n.as_str().map(str::to_string)).ok()
+                    == Some("task:epoch".to_string())
+            })
+            .expect("span present");
+        assert_eq!(span.get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(span.get("tid").unwrap().as_usize().unwrap(), 2);
+        let counter = events
+            .iter()
+            .find(|e| e.get("ph").map(|p| p == &crate::util::json::Json::from("C")).unwrap_or(false))
+            .expect("counter present");
+        assert_eq!(
+            counter.get("name").unwrap().as_str().unwrap(),
+            "exec.worker1.steals"
+        );
+    }
+
+    #[test]
+    fn write_chrome_creates_file() {
+        let (t, sink) = Tracer::recording();
+        let t0 = t.start().unwrap();
+        t.span("stage:test", "exec", 0, t0, &[]);
+        let path = std::env::temp_dir().join("mli_trace_unit.json");
+        let path_s = path.to_string_lossy().to_string();
+        sink.write_chrome(&path_s).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(crate::util::json::Json::parse(&text).is_ok());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,136 @@
+//! Human-readable trace summary.
+//!
+//! Aggregates spans by normalized name (digit runs collapsed, so
+//! `sgd-round-0..N` fold into one line), lists counters, and reports
+//! simulated-vs-wall-clock attribution when both clocks were recorded.
+
+use std::collections::BTreeMap;
+
+use super::{normalize, SpanEvent};
+use crate::metrics::Table;
+
+struct Agg {
+    cat: &'static str,
+    count: u64,
+    total_ns: u64,
+    min_ns: u64,
+    max_ns: u64,
+}
+
+/// Render the summary tables as a string (printed by `mli trace` and the
+/// `--trace-out` paths).
+pub fn render(spans: &[SpanEvent], counters: &BTreeMap<String, u64>) -> String {
+    let mut out = String::new();
+
+    if spans.is_empty() {
+        out.push_str("trace: no spans recorded\n");
+    } else {
+        let mut aggs: BTreeMap<String, Agg> = BTreeMap::new();
+        for s in spans {
+            let key = normalize(&s.name);
+            let a = aggs.entry(key).or_insert(Agg {
+                cat: s.cat,
+                count: 0,
+                total_ns: 0,
+                min_ns: u64::MAX,
+                max_ns: 0,
+            });
+            a.count += 1;
+            a.total_ns += s.dur_ns;
+            a.min_ns = a.min_ns.min(s.dur_ns);
+            a.max_ns = a.max_ns.max(s.dur_ns);
+        }
+        let mut table = Table::new(
+            "trace summary (wall-clock spans)",
+            &["span", "cat", "count", "total_ms", "mean_ms", "min_ms", "max_ms"],
+        );
+        let ms = |ns: u64| format!("{:.3}", ns as f64 / 1e6);
+        for (name, a) in &aggs {
+            table.row(vec![
+                name.clone(),
+                a.cat.to_string(),
+                a.count.to_string(),
+                ms(a.total_ns),
+                format!("{:.3}", a.total_ns as f64 / a.count as f64 / 1e6),
+                ms(a.min_ns),
+                ms(a.max_ns),
+            ]);
+        }
+        out.push_str(&table.to_markdown());
+    }
+
+    if !counters.is_empty() {
+        let mut table = Table::new("trace counters", &["counter", "value"]);
+        for (k, v) in counters {
+            table.row(vec![k.clone(), v.to_string()]);
+        }
+        out.push('\n');
+        out.push_str(&table.to_markdown());
+    }
+
+    // Simulated-vs-wall attribution: the SimCluster ledger records both
+    // clocks per round as counters.
+    let sim = counters.get("sim.micros").copied().unwrap_or(0);
+    let wall = counters.get("wall.micros").copied().unwrap_or(0);
+    if sim > 0 || wall > 0 {
+        let ratio = if wall > 0 {
+            format!("{:.2}x", sim as f64 / wall as f64)
+        } else {
+            "n/a".to_string()
+        };
+        out.push_str(&format!(
+            "\nclocks: simulated {:.3}s vs wall {:.3}s ({} sim/wall)\n",
+            sim as f64 / 1e6,
+            wall as f64 / 1e6,
+            ratio
+        ));
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(name: &str, dur_ns: u64) -> SpanEvent {
+        SpanEvent {
+            name: name.to_string(),
+            cat: "optim",
+            tid: 0,
+            start_ns: 0,
+            dur_ns,
+            args: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn aggregates_by_normalized_name() {
+        let spans = vec![
+            span("sgd-round-0", 1_000_000),
+            span("sgd-round-1", 3_000_000),
+        ];
+        let s = render(&spans, &BTreeMap::new());
+        assert!(s.contains("sgd-round-#"), "{s}");
+        assert!(s.contains("| 2 "), "count column missing: {s}");
+        assert!(s.contains("4.000"), "total_ms missing: {s}");
+        assert!(s.contains("2.000"), "mean_ms missing: {s}");
+    }
+
+    #[test]
+    fn empty_trace_renders_placeholder() {
+        let s = render(&[], &BTreeMap::new());
+        assert!(s.contains("no spans recorded"));
+    }
+
+    #[test]
+    fn clock_attribution_line() {
+        let mut counters = BTreeMap::new();
+        counters.insert("sim.micros".to_string(), 3_000_000u64);
+        counters.insert("wall.micros".to_string(), 1_500_000u64);
+        let s = render(&[], &counters);
+        assert!(s.contains("simulated 3.000s"), "{s}");
+        assert!(s.contains("wall 1.500s"), "{s}");
+        assert!(s.contains("2.00x"), "{s}");
+    }
+}

@@ -11,7 +11,8 @@
 //!   always returns an error, which makes `Runtime::executable` fail exactly
 //!   the way it fails when AOT artifacts are missing — every XLA-backed code
 //!   path degrades to its pure-rust fallback (`Backend::Rust`,
-//!   `use_xla: false`), and artifact-dependent tests are `#[ignore]`d.
+//!   `use_xla: false`), and artifact-dependent tests auto-skip via
+//!   `runtime::require_artifacts_or_skip` when no artifacts are present.
 //!
 //! All types here are plain data (`Send + Sync`), which is what lets the
 //! `exec` thread pool share `Runtime` handles across workers.

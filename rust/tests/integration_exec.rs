@@ -147,6 +147,113 @@ fn lineage_recovery_with_executor_attached() {
 }
 
 #[test]
+fn panicking_taskset_errors_and_pool_runs_subsequent_stages() {
+    // One bad task fails its TaskSet with a typed error naming the stage;
+    // the pool itself survives and executes later TaskSets normally.
+    let pool = ThreadPool::new(2);
+    let err = mli::exec::TaskSet::new("boom", 8)
+        .try_run(Some(&pool), |i| {
+            if i == 5 {
+                panic!("task 5 exploded");
+            }
+            i * 10
+        })
+        .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("boom"), "missing stage label: {msg}");
+    assert!(msg.contains("task 5 exploded"), "missing payload: {msg}");
+    let ok = mli::exec::TaskSet::new("after", 16)
+        .try_run(Some(&pool), |i| i + 1)
+        .unwrap();
+    assert_eq!(ok, (1..=16).collect::<Vec<_>>());
+}
+
+#[test]
+fn tracing_on_preserves_bitwise_determinism() {
+    // The acceptance contract: enabling the tracer must not perturb
+    // results — same f64 bits at 1, 2, and 8 threads as the untraced
+    // serial run.
+    use mli::trace::Tracer;
+    let serial = kv_pipeline(0);
+    for threads in [1, 2, 8] {
+        let (tracer, sink) = Tracer::recording();
+        let ctx = EngineContext::new().with_executor(threads);
+        ctx.set_tracer(tracer);
+        let d = ctx.parallelize((0..1000i64).collect::<Vec<_>>(), 16);
+        let got = d
+            .map(|i| ((i % 17) as usize, 1.0 / (i as f64 + 1.0)))
+            .reduce_by_key(|a, b| a + b)
+            .collect()
+            .unwrap();
+        assert_eq!(serial, got, "diverged at {threads} threads with tracing on");
+        assert!(sink.span_count() > 0, "no spans recorded at {threads} threads");
+    }
+}
+
+#[test]
+fn exec_bench_trace_out_emits_chrome_trace_with_worker_counters() {
+    // End-to-end through the CLI: `mli exec-bench --trace-out F` must
+    // write valid Chrome-trace JSON whose per-worker park and
+    // steal-attempt counters are nonzero at 2 threads.
+    use mli::util::cli::Args;
+    use mli::util::json::Json;
+    let path = std::env::temp_dir().join("mli_exec_bench_trace.json");
+    let path_s = path.to_str().unwrap().to_string();
+    let argv: Vec<String> = [
+        "exec-bench",
+        "--threads",
+        "2",
+        "--partitions",
+        "8",
+        "--n",
+        "2048",
+        "--d",
+        "16",
+        "--iters",
+        "6",
+        "--trace-out",
+        &path_s,
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    mli::run_cli(Args::parse(&argv)).unwrap();
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let json = Json::parse(&text).unwrap();
+    let events = json.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty(), "empty trace");
+    let counter_value = |name: &str| -> f64 {
+        events
+            .iter()
+            .filter(|e| {
+                e.get("ph").and_then(|p| p.as_str()).ok() == Some("C")
+                    && e.get("name").and_then(|n| n.as_str()).ok() == Some(name)
+            })
+            .filter_map(|e| e.get("args").and_then(|a| a.get("value")?.as_f64()).ok())
+            .next_back()
+            .unwrap_or(0.0)
+    };
+    assert!(
+        counter_value("exec.worker0.parks") > 0.0,
+        "worker 0 never parked"
+    );
+    assert!(
+        counter_value("exec.worker0.steal_attempts") > 0.0,
+        "worker 0 never attempted a steal"
+    );
+    let has_task_span = events.iter().any(|e| {
+        e.get("ph").and_then(|p| p.as_str()).ok() == Some("X")
+            && e.get("name")
+                .and_then(|n| n.as_str())
+                .map(|n| n.starts_with("task:"))
+                .unwrap_or(false)
+    });
+    assert!(has_task_span, "no task spans in trace");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
 fn shared_pool_between_context_and_cluster() {
     // SimCluster and EngineContext can share one pool; stats accumulate
     // in the same place.

@@ -2,7 +2,7 @@
 //! manifest loads, compiles, and produces outputs matching its manifest
 //! shape and the pure-rust reference math.
 
-use mli::runtime::{Runtime, Tensor};
+use mli::runtime::{require_artifacts_or_skip, Runtime, Tensor};
 use mli::util::rng::Rng;
 
 fn rt() -> Runtime {
@@ -21,8 +21,10 @@ fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
 }
 
 #[test]
-#[ignore = "requires AOT artifacts (make artifacts)"]
 fn every_artifact_loads_and_runs() {
+    if !require_artifacts_or_skip("every_artifact_loads_and_runs") {
+        return;
+    }
     let rt = rt();
     let manifest = rt.manifest().clone();
     let mut rng = Rng::new(99);
@@ -49,8 +51,10 @@ fn every_artifact_loads_and_runs() {
 }
 
 #[test]
-#[ignore = "requires AOT artifacts (make artifacts)"]
 fn grad_matches_rust_reference() {
+    if !require_artifacts_or_skip("grad_matches_rust_reference") {
+        return;
+    }
     let rt = rt();
     let mut rng = Rng::new(7);
     let (n, d) = (256, 64);
@@ -92,8 +96,10 @@ fn grad_matches_rust_reference() {
 }
 
 #[test]
-#[ignore = "requires AOT artifacts (make artifacts)"]
 fn executable_cache_compiles_once() {
+    if !require_artifacts_or_skip("executable_cache_compiles_once") {
+        return;
+    }
     let rt = rt();
     let x = Tensor::F32(vec![0.0; 256 * 64], vec![256, 64]);
     let w = Tensor::F32(vec![0.0; 64], vec![64]);
@@ -105,8 +111,10 @@ fn executable_cache_compiles_once() {
 }
 
 #[test]
-#[ignore = "requires AOT artifacts (make artifacts)"]
 fn shape_mismatch_rejected_before_xla() {
+    if !require_artifacts_or_skip("shape_mismatch_rejected_before_xla") {
+        return;
+    }
     let rt = rt();
     let bad = Tensor::F32(vec![0.0; 10], vec![10]);
     let err = rt
@@ -119,8 +127,10 @@ fn shape_mismatch_rejected_before_xla() {
 }
 
 #[test]
-#[ignore = "requires AOT artifacts (make artifacts)"]
 fn scan_epoch_equals_manual_minibatch_sgd() {
+    if !require_artifacts_or_skip("scan_epoch_equals_manual_minibatch_sgd") {
+        return;
+    }
     // local_sgd_epoch (scan+pallas) == sequential rust minibatch SGD
     let rt = rt();
     let mut rng = Rng::new(3);

@@ -229,7 +229,10 @@ impl ALS {
             if lo >= hi {
                 return Ok(Vec::new());
             }
-            cluster.run_task(machine, || match xla {
+            // the row-range partitioning is fixed, but execution lands on
+            // the next alive machine when this one is down
+            let host = cluster.assign_machine(machine)?;
+            cluster.run_task(host, || match xla {
                 Some(x) => self.solve_range_xla(ratings, fixed, lo, hi, x),
                 None => self.solve_range_rust(ratings, fixed, lo, hi),
             })

@@ -282,7 +282,7 @@ impl Algorithm for KMeans {
             // centroid updates are identical for any thread count
             let stage = crate::exec::TaskSet::new("kmeans-stats", parts.len());
             let results = stage.run(cluster.pool().as_deref(), |p| {
-                let machine = cluster.machine_of(p);
+                let machine = cluster.assign_machine(p)?;
                 match &xla {
                     Some((rt, variant, n_pad, d_pad, c_art, tensors)) => {
                         let (x, rows) = &tensors[p];

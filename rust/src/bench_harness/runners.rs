@@ -87,6 +87,9 @@ pub fn logreg_scaling_with(
 
     let mut mli_base: Option<f64> = None;
     let mut vw_base: Option<f64> = None;
+    let mut total_losses = 0usize;
+    let mut total_recoveries = 0u64;
+    let mut total_tasks = 0u64;
     for &m in &cfg.machines {
         let n_total = match mode {
             ScalingMode::Weak => cfg.rows * m,
@@ -184,7 +187,15 @@ pub fn logreg_scaling_with(
             format!("{:.2}", mli_t / mli_base.unwrap()),
             format!("{:.2}", vw_t / vw_base.unwrap()),
         ]);
+        let (tasks, _, recoveries) = ctx.stats();
+        total_losses += ctx.failures.losses();
+        total_recoveries += recoveries;
+        total_tasks += tasks;
     }
+    table.note(format!(
+        "failure accounting across the sweep: {total_losses} partitions lost, \
+         {total_recoveries} lineage recoveries, {total_tasks} engine tasks run"
+    ));
     Ok(table)
 }
 
@@ -269,6 +280,8 @@ pub fn als_scaling_with(
     };
 
     let mut mli_base: Option<f64> = None;
+    let mut total_kills = 0u64;
+    let mut total_restarts = 0u64;
     for &m in &cfg.machines {
         let t = match mode {
             ScalingMode::Weak => m,
@@ -307,9 +320,13 @@ pub fn als_scaling_with(
                 if let Some(t) = tracer {
                     cluster.set_tracer(t.clone());
                 }
-                ALS::new(p.clone())
+                let r = ALS::new(p.clone())
                     .train_ratings(&data, &cluster)
-                    .map(|_| Some(cluster.total_sim_seconds()))
+                    .map(|_| Some(cluster.total_sim_seconds()));
+                let (kills, restarts) = cluster.fault_stats();
+                total_kills += kills;
+                total_restarts += restarts;
+                r
             })
             .collect::<Result<_>>()?;
         let mli_t = med(mli_times).unwrap();
@@ -342,6 +359,9 @@ pub fn als_scaling_with(
             format!("{:.2}", mli_t / mli_base.unwrap()),
         ]);
     }
+    table.note(format!(
+        "node faults across the MLI runs: {total_kills} kills, {total_restarts} restarts"
+    ));
     Ok(table)
 }
 
@@ -365,6 +385,8 @@ mod tests {
         let t = logreg_scaling(&cfg, ScalingMode::Weak).unwrap();
         assert_eq!(t.rows.len(), 2);
         assert_eq!(t.headers.len(), 8);
+        assert_eq!(t.notes.len(), 1, "failure-accounting footnote present");
+        assert!(t.to_markdown().contains("failure accounting"));
         // first row is the baseline: relative walltime 1.00
         assert_eq!(t.rows[0][6], "1.00");
         let strong = logreg_scaling(&cfg, ScalingMode::Strong).unwrap();

@@ -17,11 +17,13 @@
 //! Scaling *shape* therefore emerges from measured compute + modelled
 //! communication, not from hard-coded curves.
 
+pub mod fault;
 pub mod machine;
 pub mod network;
 pub mod sim;
 pub mod topology;
 
+pub use fault::{FaultEvent, FaultKind, FaultPlan};
 pub use machine::MachineSpec;
 pub use network::NetworkModel;
 pub use sim::{RoundStats, SimCluster, SimLedger, StragglerModel};

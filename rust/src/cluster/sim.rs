@@ -15,13 +15,15 @@
 //! let t = cluster.total_sim_seconds();
 //! ```
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use super::fault::{FaultKind, FaultPlan};
 use super::machine::MachineSpec;
 use super::network::NetworkModel;
 use super::topology::CommTopology;
 use crate::error::{Error, Result};
-use crate::exec::ThreadPool;
+use crate::exec::{lock_unpoisoned, ThreadPool};
 use crate::trace::Tracer;
 use crate::util::timer::Stopwatch;
 
@@ -39,6 +41,11 @@ pub struct RoundStats {
     pub disk_s: f64,
     /// Bytes moved over the network this round.
     pub net_bytes: u64,
+    /// Individual (machine, seconds) task charges this round, kept so the
+    /// speculative-execution model can find per-task stragglers (the
+    /// per-machine sums above can't distinguish one slow task from many
+    /// fast ones).
+    pub task_times: Vec<(usize, f64)>,
 }
 
 impl RoundStats {
@@ -112,7 +119,24 @@ pub struct SimLedger {
     round_wall: Option<Stopwatch>,
     /// Per-machine resident bytes (simulated memory accounting).
     pub resident_bytes: Vec<u64>,
+    /// Speculative task copies launched / won across all rounds (the
+    /// analytic straggler-mitigation model; see `with_speculation`).
+    pub spec_launched: u64,
+    pub spec_wins: u64,
 }
+
+/// Health of one simulated machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum MachineHealth {
+    Up,
+    /// Down until round `until` (crash with restart), or forever (`None`).
+    Down { until: Option<usize> },
+}
+
+/// Callback invoked with the machine index when a machine dies, so
+/// engine-level state (cached partitions resident there) can be
+/// invalidated. See `Dataset::bind_cluster`.
+type LossListener = Box<dyn Fn(usize) + Send + Sync>;
 
 /// A simulated cluster: machine fleet + network + time ledger.
 ///
@@ -127,6 +151,17 @@ pub struct SimCluster {
     ledger: Mutex<SimLedger>,
     executor: Mutex<Option<Arc<ThreadPool>>>,
     tracer: Mutex<Arc<Tracer>>,
+    /// Per-machine up/down state (node-failure model).
+    health: Mutex<Vec<MachineHealth>>,
+    /// Scheduled machine kills, drained at round boundaries.
+    faults: Mutex<Option<Arc<FaultPlan>>>,
+    /// Machine-loss callbacks (cache invalidation hooks).
+    loss_listeners: Mutex<Vec<LossListener>>,
+    /// Speculative-execution threshold k: a task taking >= k x the round
+    /// median gets a simulated backup copy. `None` disables.
+    speculation: Mutex<Option<f64>>,
+    fault_kills: AtomicU64,
+    fault_restarts: AtomicU64,
 }
 
 impl SimCluster {
@@ -141,6 +176,12 @@ impl SimCluster {
             ledger: Mutex::new(ledger),
             executor: Mutex::new(None),
             tracer: Mutex::new(Tracer::disabled()),
+            health: Mutex::new(vec![MachineHealth::Up; machines]),
+            faults: Mutex::new(None),
+            loss_listeners: Mutex::new(Vec::new()),
+            speculation: Mutex::new(None),
+            fault_kills: AtomicU64::new(0),
+            fault_restarts: AtomicU64::new(0),
         }
     }
 
@@ -153,9 +194,228 @@ impl SimCluster {
         self.specs.len()
     }
 
-    /// Machine owning partition `p` under round-robin placement.
+    /// Machine owning partition `p` under round-robin placement. This is
+    /// the *primary* (failure-oblivious) placement; schedulers should use
+    /// [`SimCluster::assign_machine`], which re-routes around dead nodes.
     pub fn machine_of(&self, partition: usize) -> usize {
         partition % self.specs.len()
+    }
+
+    // -- node-failure model ----------------------------------------------
+
+    /// Failure-aware placement: partition `p`'s primary machine when it
+    /// is alive, otherwise the first alive machine scanning up from the
+    /// primary. The fallback is a pure function of (partition, health
+    /// vector), so re-assignment is deterministic for any host thread
+    /// count. Errors with [`Error::FaultRecovery`] when the whole fleet
+    /// is down.
+    pub fn assign_machine(&self, partition: usize) -> Result<usize> {
+        let n = self.specs.len();
+        let primary = partition % n;
+        let h = lock_unpoisoned(&self.health);
+        for k in 0..n {
+            let m = (primary + k) % n;
+            if h[m] == MachineHealth::Up {
+                return Ok(m);
+            }
+        }
+        Err(Error::FaultRecovery(format!(
+            "no machine alive to place partition {partition} (all {n} down)"
+        )))
+    }
+
+    pub fn is_up(&self, machine: usize) -> bool {
+        lock_unpoisoned(&self.health)[machine] == MachineHealth::Up
+    }
+
+    pub fn num_alive(&self) -> usize {
+        lock_unpoisoned(&self.health)
+            .iter()
+            .filter(|h| **h == MachineHealth::Up)
+            .count()
+    }
+
+    /// Attach a [`FaultPlan`]; due kills are applied at each
+    /// `begin_round`, before any work of that round runs.
+    pub fn with_faults(self, plan: Arc<FaultPlan>) -> SimCluster {
+        *lock_unpoisoned(&self.faults) = Some(plan);
+        self
+    }
+
+    /// Enable the speculative-execution model: any task whose charged
+    /// time is >= `k` x the round median gets a simulated backup copy on
+    /// the least-loaded alive machine, and the round is gated by whichever
+    /// copy finishes first (see `apply_speculation`). Mirrors Spark's
+    /// `spark.speculation.multiplier`.
+    pub fn with_speculation(self, k: f64) -> SimCluster {
+        assert!(k > 1.0, "speculation threshold must exceed 1.0");
+        *lock_unpoisoned(&self.speculation) = Some(k);
+        self
+    }
+
+    pub fn speculation(&self) -> Option<f64> {
+        *lock_unpoisoned(&self.speculation)
+    }
+
+    /// Register a machine-loss callback, invoked with the machine index
+    /// whenever a machine dies (scheduled or manual). Listeners run after
+    /// the cluster has dropped the machine's resident bytes; they are the
+    /// hook by which cached dataset partitions placed there are
+    /// invalidated (`Dataset::bind_cluster`). Permanent for the cluster's
+    /// lifetime.
+    pub fn on_machine_loss(&self, f: impl Fn(usize) + Send + Sync + 'static) {
+        lock_unpoisoned(&self.loss_listeners).push(Box::new(f));
+    }
+
+    /// (kills, restarts) applied so far.
+    pub fn fault_stats(&self) -> (u64, u64) {
+        (
+            self.fault_kills.load(Ordering::Relaxed),
+            self.fault_restarts.load(Ordering::Relaxed),
+        )
+    }
+
+    /// (speculative copies launched, copies that beat the original) so far.
+    pub fn speculation_stats(&self) -> (u64, u64) {
+        let l = lock_unpoisoned(&self.ledger);
+        (l.spec_launched, l.spec_wins)
+    }
+
+    /// Kill `machine` now: mark it down (until `restart_round`, forever
+    /// for `None`), drop its resident bytes, charge the open round an
+    /// HDFS re-read of those bytes (survivors must re-fetch the dead
+    /// node's input shards from stable storage before recomputing), and
+    /// notify loss listeners. Returns the lost bytes; no-op (0) when the
+    /// machine is already down.
+    pub fn kill_machine(&self, machine: usize, restart_round: Option<usize>) -> u64 {
+        {
+            let mut h = lock_unpoisoned(&self.health);
+            if h[machine] != MachineHealth::Up {
+                return 0;
+            }
+            h[machine] = MachineHealth::Down { until: restart_round };
+        }
+        let lost = {
+            let mut l = lock_unpoisoned(&self.ledger);
+            let lost = std::mem::take(&mut l.resident_bytes[machine]);
+            if lost > 0 {
+                if let Some(cur) = l.current.as_mut() {
+                    cur.disk_s += self.net.hdfs_read_time(lost);
+                }
+            }
+            lost
+        };
+        self.fault_kills.fetch_add(1, Ordering::Relaxed);
+        {
+            let listeners = lock_unpoisoned(&self.loss_listeners);
+            for f in listeners.iter() {
+                f(machine);
+            }
+        }
+        let tracer = self.tracer();
+        if let Some(t0) = tracer.start() {
+            tracer.span(
+                format!("fault:kill-machine-{machine}"),
+                "fault",
+                0,
+                t0,
+                &[("lost_bytes", lost as f64)],
+            );
+            tracer.count("fault.kills", 1);
+        }
+        lost
+    }
+
+    /// Bring a dead machine back (empty: its cached state died with it).
+    pub fn restore_machine(&self, machine: usize) {
+        let mut h = lock_unpoisoned(&self.health);
+        if h[machine] != MachineHealth::Up {
+            h[machine] = MachineHealth::Up;
+            drop(h);
+            self.fault_restarts.fetch_add(1, Ordering::Relaxed);
+            let tracer = self.tracer();
+            if tracer.is_enabled() {
+                tracer.count("fault.restarts", 1);
+            }
+        }
+    }
+
+    /// Apply the fault schedule at a round boundary: restart machines
+    /// whose crash delay has elapsed, then fire kills due this round.
+    fn apply_due_faults(&self, round: usize) {
+        let restart: Vec<usize> = {
+            let h = lock_unpoisoned(&self.health);
+            h.iter()
+                .enumerate()
+                .filter_map(|(m, s)| match s {
+                    MachineHealth::Down { until: Some(u) } if round >= *u => Some(m),
+                    _ => None,
+                })
+                .collect()
+        };
+        for m in restart {
+            self.restore_machine(m);
+        }
+        let plan = lock_unpoisoned(&self.faults).clone();
+        if let Some(plan) = plan {
+            for ev in plan.take_due(round) {
+                let restart_round = match ev.kind {
+                    FaultKind::Crash { restart_after } => Some(round + restart_after.max(1)),
+                    FaultKind::Permanent => None,
+                };
+                self.kill_machine(ev.machine, restart_round);
+            }
+        }
+    }
+
+    /// The analytic speculative-execution model, applied when a round
+    /// closes: any task charged >= `k` x the round's median task time is
+    /// assumed to have had a backup copy launched at `k x median` on the
+    /// least-loaded alive machine (replaying at median speed). If the
+    /// backup would finish first — at `(k + 1) x median` — the straggling
+    /// machine is only gated until then and the backup's cost lands on
+    /// its host. Candidates are processed in a canonical order so the
+    /// rebalanced ledger is identical for any host thread count. Returns
+    /// (copies launched, copies that won).
+    fn apply_speculation(cur: &mut RoundStats, k: f64, alive: &[bool]) -> (u64, u64) {
+        if cur.task_times.len() < 2 {
+            return (0, 0);
+        }
+        let times: Vec<f64> = cur.task_times.iter().map(|&(_, t)| t).collect();
+        let med = crate::util::median(&times);
+        if med <= 0.0 {
+            return (0, 0);
+        }
+        let mut candidates: Vec<(usize, f64)> = cur
+            .task_times
+            .iter()
+            .copied()
+            .filter(|&(_, t)| t >= k * med)
+            .collect();
+        candidates.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.total_cmp(&a.1)));
+        let mut launched = 0u64;
+        let mut wins = 0u64;
+        for (m, t) in candidates {
+            // backup host: least-loaded alive machine other than the
+            // straggler's own (ties broken by lowest index)
+            let backup = cur
+                .machine_compute_s
+                .iter()
+                .enumerate()
+                .filter(|&(b, _)| b != m && alive.get(b).copied().unwrap_or(false))
+                .min_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(b, _)| b);
+            let Some(backup) = backup else { continue };
+            launched += 1;
+            let backup_finish = (k + 1.0) * med;
+            if backup_finish < t {
+                wins += 1;
+                cur.machine_compute_s[m] -= t - backup_finish;
+                cur.machine_compute_s[backup] += med;
+                cur.machine_tasks[backup] += 1;
+            }
+        }
+        (launched, wins)
     }
 
     // -- memory model ---------------------------------------------------
@@ -163,7 +423,7 @@ impl SimCluster {
     /// Charge `bytes` of resident memory on a machine; simulated OOM if
     /// capacity is exceeded (the paper's MATLAB 16x/25x failures).
     pub fn alloc(&self, machine: usize, bytes: u64) -> Result<()> {
-        let mut l = self.ledger.lock().unwrap();
+        let mut l = lock_unpoisoned(&self.ledger);
         let resident = &mut l.resident_bytes[machine];
         let cap = self.specs[machine].mem_bytes;
         if *resident + bytes > cap {
@@ -179,22 +439,31 @@ impl SimCluster {
     }
 
     pub fn free(&self, machine: usize, bytes: u64) {
-        let mut l = self.ledger.lock().unwrap();
+        let mut l = lock_unpoisoned(&self.ledger);
         let r = &mut l.resident_bytes[machine];
         *r = r.saturating_sub(bytes);
     }
 
     pub fn resident(&self, machine: usize) -> u64 {
-        self.ledger.lock().unwrap().resident_bytes[machine]
+        lock_unpoisoned(&self.ledger).resident_bytes[machine]
     }
 
     // -- round lifecycle --------------------------------------------------
 
+    /// Open a round. Fault-schedule events due at this round index fire
+    /// here, before any work of the round runs: crashed machines restart,
+    /// due kills mark machines down, drop their cached bytes (charged as
+    /// an HDFS re-read into this round), and invalidate affected
+    /// partitions via the loss listeners.
     pub fn begin_round(&self) {
-        let mut l = self.ledger.lock().unwrap();
-        assert!(l.current.is_none(), "begin_round inside an open round");
-        l.current = Some(RoundStats::new(self.specs.len()));
-        l.round_wall = Some(Stopwatch::start());
+        let round_idx = {
+            let mut l = lock_unpoisoned(&self.ledger);
+            assert!(l.current.is_none(), "begin_round inside an open round");
+            l.current = Some(RoundStats::new(self.specs.len()));
+            l.round_wall = Some(Stopwatch::start());
+            l.rounds
+        };
+        self.apply_due_faults(round_idx);
     }
 
     /// Execute `f` on behalf of `machine`, really timing it and charging
@@ -203,29 +472,31 @@ impl SimCluster {
         let sw = Stopwatch::start();
         let out = f();
         let secs = sw.elapsed_secs();
-        let mut l = self.ledger.lock().unwrap();
+        let mut l = lock_unpoisoned(&self.ledger);
         let cur = l
             .current
             .as_mut()
             .expect("run_task outside begin_round/end_round");
         cur.machine_compute_s[machine] += secs;
         cur.machine_tasks[machine] += 1;
+        cur.task_times.push((machine, secs));
         out
     }
 
     /// Charge pre-measured compute seconds (used when a task's cost was
     /// measured once and replayed for many simulated machines).
     pub fn charge_compute(&self, machine: usize, secs: f64) {
-        let mut l = self.ledger.lock().unwrap();
+        let mut l = lock_unpoisoned(&self.ledger);
         let cur = l.current.as_mut().expect("charge_compute outside round");
         cur.machine_compute_s[machine] += secs;
         cur.machine_tasks[machine] += 1;
+        cur.task_times.push((machine, secs));
     }
 
     /// Charge one model-allreduce with the given topology.
     pub fn charge_allreduce(&self, topo: CommTopology, bytes: u64) {
         let t = topo.allreduce_time(&self.net, self.specs.len(), bytes);
-        let mut l = self.ledger.lock().unwrap();
+        let mut l = lock_unpoisoned(&self.ledger);
         let m = self.specs.len() as u64;
         let cur = l.current.as_mut().expect("charge_allreduce outside round");
         cur.comm_s += t;
@@ -235,7 +506,7 @@ impl SimCluster {
     /// Charge a master broadcast.
     pub fn charge_broadcast(&self, topo: CommTopology, bytes: u64) {
         let t = topo.broadcast_time(&self.net, self.specs.len(), bytes);
-        let mut l = self.ledger.lock().unwrap();
+        let mut l = lock_unpoisoned(&self.ledger);
         let m = self.specs.len() as u64;
         let cur = l.current.as_mut().expect("charge_broadcast outside round");
         cur.comm_s += t;
@@ -256,7 +527,7 @@ impl SimCluster {
         let avg_in = total as f64 / m as f64;
         let t = self.net.latency_s * (m as f64).log2().max(1.0)
             + max_out.max(avg_in) / self.net.bandwidth_bps;
-        let mut l = self.ledger.lock().unwrap();
+        let mut l = lock_unpoisoned(&self.ledger);
         let cur = l.current.as_mut().expect("charge_shuffle outside round");
         cur.comm_s += t;
         cur.net_bytes += total;
@@ -267,7 +538,7 @@ impl SimCluster {
     pub fn charge_hdfs_roundtrip(&self, bytes_per_machine: u64) {
         let t = self.net.hdfs_write_time(bytes_per_machine)
             + self.net.hdfs_read_time(bytes_per_machine);
-        let mut l = self.ledger.lock().unwrap();
+        let mut l = lock_unpoisoned(&self.ledger);
         let cur = l.current.as_mut().expect("charge_hdfs outside round");
         cur.disk_s += t;
     }
@@ -275,14 +546,14 @@ impl SimCluster {
     /// Charge a fixed job-startup overhead (Hadoop JVM spawn).
     pub fn charge_job_startup(&self) {
         let t = self.net.job_startup_s;
-        let mut l = self.ledger.lock().unwrap();
+        let mut l = lock_unpoisoned(&self.ledger);
         let cur = l.current.as_mut().expect("charge_job_startup outside round");
         cur.disk_s += t;
     }
 
     /// Switch the straggler model (see [`StragglerModel`]).
     pub fn with_straggler(self, s: StragglerModel) -> SimCluster {
-        *self.straggler.lock().unwrap() = s;
+        *lock_unpoisoned(&self.straggler) = s;
         self
     }
 
@@ -300,13 +571,13 @@ impl SimCluster {
         };
         let pool = ThreadPool::new(n);
         pool.set_tracer(self.tracer());
-        *self.executor.lock().unwrap() = Some(pool);
+        *lock_unpoisoned(&self.executor) = Some(pool);
         self
     }
 
     /// The attached executor, if any.
     pub fn pool(&self) -> Option<Arc<ThreadPool>> {
-        self.executor.lock().unwrap().clone()
+        lock_unpoisoned(&self.executor).clone()
     }
 
     /// Attach a tracer: `end_round` records one span per simulated round
@@ -323,19 +594,31 @@ impl SimCluster {
         if let Some(pool) = self.pool() {
             pool.set_tracer(tracer.clone());
         }
-        *self.tracer.lock().unwrap_or_else(|e| e.into_inner()) = tracer;
+        *lock_unpoisoned(&self.tracer) = tracer;
     }
 
     pub fn tracer(&self) -> Arc<Tracer> {
-        self.tracer.lock().unwrap_or_else(|e| e.into_inner()).clone()
+        lock_unpoisoned(&self.tracer).clone()
     }
 
-    /// Close the round: fold it into the total and return its stats.
+    /// Close the round: apply the speculative-execution rebalance (if
+    /// enabled), fold the round into the total, and return its stats.
     pub fn end_round(&self) -> RoundStats {
-        let (cur, t, wall_s, round_idx) = {
-            let mut l = self.ledger.lock().unwrap();
-            let cur = l.current.take().expect("end_round without begin_round");
-            let t = cur.round_time_with(&self.specs, *self.straggler.lock().unwrap());
+        let spec_k = self.speculation();
+        let alive: Vec<bool> = lock_unpoisoned(&self.health)
+            .iter()
+            .map(|h| *h == MachineHealth::Up)
+            .collect();
+        let (cur, t, wall_s, round_idx, launched, wins) = {
+            let mut l = lock_unpoisoned(&self.ledger);
+            let mut cur = l.current.take().expect("end_round without begin_round");
+            let (launched, wins) = match spec_k {
+                Some(k) => Self::apply_speculation(&mut cur, k, &alive),
+                None => (0, 0),
+            };
+            l.spec_launched += launched;
+            l.spec_wins += wins;
+            let t = cur.round_time_with(&self.specs, *lock_unpoisoned(&self.straggler));
             l.total_s += t;
             l.total_comm_s += cur.comm_s;
             l.total_disk_s += cur.disk_s;
@@ -346,7 +629,7 @@ impl SimCluster {
                 .take()
                 .map(|sw| sw.elapsed_secs())
                 .unwrap_or(0.0);
-            (cur, t, wall_s, l.rounds - 1)
+            (cur, t, wall_s, l.rounds - 1, launched, wins)
         };
         // Record the round span outside the ledger lock: wall-clock time
         // as the span duration, simulated seconds in the args — the
@@ -365,6 +648,11 @@ impl SimCluster {
             tracer.count("sim.rounds", 1);
             tracer.count("sim.micros", (t * 1e6) as u64);
             tracer.count("wall.micros", (wall_s * 1e6) as u64);
+            if launched > 0 {
+                tracer.count("spec.launched", launched);
+                tracer.count("spec.wins", wins);
+                tracer.count("spec.losses", launched - wins);
+            }
         }
         cur
     }
@@ -372,28 +660,28 @@ impl SimCluster {
     // -- queries ----------------------------------------------------------
 
     pub fn total_sim_seconds(&self) -> f64 {
-        self.ledger.lock().unwrap().total_s
+        lock_unpoisoned(&self.ledger).total_s
     }
 
     pub fn total_comm_seconds(&self) -> f64 {
-        self.ledger.lock().unwrap().total_comm_s
+        lock_unpoisoned(&self.ledger).total_comm_s
     }
 
     pub fn total_disk_seconds(&self) -> f64 {
-        self.ledger.lock().unwrap().total_disk_s
+        lock_unpoisoned(&self.ledger).total_disk_s
     }
 
     pub fn total_net_bytes(&self) -> u64 {
-        self.ledger.lock().unwrap().total_net_bytes
+        lock_unpoisoned(&self.ledger).total_net_bytes
     }
 
     pub fn rounds(&self) -> usize {
-        self.ledger.lock().unwrap().rounds
+        lock_unpoisoned(&self.ledger).rounds
     }
 
     /// Reset the ledger (memory accounting persists).
     pub fn reset_time(&self) {
-        let mut l = self.ledger.lock().unwrap();
+        let mut l = lock_unpoisoned(&self.ledger);
         l.total_s = 0.0;
         l.total_comm_s = 0.0;
         l.total_disk_s = 0.0;
@@ -551,5 +839,128 @@ mod tests {
         // default sizing caps at fleet size
         let c1 = SimCluster::ec2(1).with_executor(0);
         assert_eq!(c1.pool().unwrap().threads(), 1);
+    }
+
+    #[test]
+    fn kill_reroutes_placement_and_restore_reverts() {
+        let c = SimCluster::ec2(4);
+        assert_eq!(c.assign_machine(1).unwrap(), 1);
+        c.kill_machine(1, None);
+        assert!(!c.is_up(1));
+        assert_eq!(c.num_alive(), 3);
+        // primary dead: first alive machine scanning up
+        assert_eq!(c.assign_machine(1).unwrap(), 2);
+        assert_eq!(c.assign_machine(5).unwrap(), 2);
+        assert_eq!(c.assign_machine(0).unwrap(), 0);
+        c.restore_machine(1);
+        assert_eq!(c.assign_machine(1).unwrap(), 1);
+        assert_eq!(c.fault_stats(), (1, 1));
+        // killing an already-dead machine is a no-op
+        c.kill_machine(2, None);
+        assert_eq!(c.kill_machine(2, None), 0);
+        assert_eq!(c.fault_stats().0, 2);
+    }
+
+    #[test]
+    fn all_machines_dead_is_typed_fault_recovery() {
+        let c = SimCluster::ec2(2);
+        c.kill_machine(0, None);
+        c.kill_machine(1, None);
+        let err = c.assign_machine(0).unwrap_err();
+        assert!(err.is_fault_recovery(), "got {err}");
+    }
+
+    #[test]
+    fn kill_drops_resident_bytes_and_charges_reread() {
+        let c = SimCluster::ec2(2);
+        c.alloc(1, 100_000_000).unwrap(); // 100 MB @ 100 MB/s disk
+        c.begin_round();
+        let lost = c.kill_machine(1, None);
+        assert_eq!(lost, 100_000_000);
+        assert_eq!(c.resident(1), 0);
+        let stats = c.end_round();
+        assert!((stats.disk_s - 1.0).abs() < 1e-9, "disk_s={}", stats.disk_s);
+    }
+
+    #[test]
+    fn fault_plan_fires_at_round_and_restarts_after_delay() {
+        let plan = Arc::new(FaultPlan::new());
+        plan.kill_at(1, 0, FaultKind::Crash { restart_after: 1 });
+        let c = SimCluster::ec2(2).with_faults(plan.clone());
+        c.begin_round(); // round 0: nothing due
+        assert!(c.is_up(0));
+        c.end_round();
+        c.begin_round(); // round 1: kill fires before work runs
+        assert!(!c.is_up(0));
+        assert_eq!(c.assign_machine(0).unwrap(), 1);
+        c.end_round();
+        c.begin_round(); // round 2: restart delay elapsed
+        assert!(c.is_up(0));
+        c.end_round();
+        assert_eq!(c.fault_stats(), (1, 1));
+        assert_eq!(plan.remaining(), 0);
+    }
+
+    #[test]
+    fn loss_listener_fires_with_machine_index() {
+        use std::sync::atomic::AtomicUsize;
+        let c = SimCluster::ec2(4);
+        let seen = Arc::new(AtomicUsize::new(usize::MAX));
+        let s = seen.clone();
+        c.on_machine_loss(move |m| s.store(m, Ordering::SeqCst));
+        c.kill_machine(3, None);
+        assert_eq!(seen.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn speculation_rebalances_straggler_to_backup() {
+        let c = SimCluster::ec2(4).with_speculation(2.0);
+        c.begin_round();
+        c.charge_compute(0, 1.0);
+        c.charge_compute(1, 1.0);
+        c.charge_compute(2, 1.0);
+        c.charge_compute(3, 10.0); // straggler: 10 >= 2 x median(1.0)
+        let stats = c.end_round();
+        // backup launched at 2s, replays at median speed: done at 3s; the
+        // straggler machine is gated at 3s, the copy (1s) lands on the
+        // least-loaded machine (0), which still finishes in 2s/2 cores
+        let t = stats.round_time(&c.specs);
+        assert!((t - 3.0).abs() < 1e-9, "round={t}");
+        assert_eq!(c.speculation_stats(), (1, 1));
+        assert!((stats.machine_compute_s[3] - 3.0).abs() < 1e-9);
+        assert!((stats.machine_compute_s[0] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn speculation_skips_mild_spread_and_is_off_by_default() {
+        let c = SimCluster::ec2(2).with_speculation(4.0);
+        c.begin_round();
+        c.charge_compute(0, 1.0);
+        c.charge_compute(1, 2.0); // 2 < 4 x median(1.5): no candidate
+        let t = c.end_round().round_time(&c.specs);
+        assert!((t - 2.0).abs() < 1e-9);
+        assert_eq!(c.speculation_stats(), (0, 0));
+        // disabled: stragglers keep their full time
+        let c2 = SimCluster::ec2(2);
+        c2.begin_round();
+        c2.charge_compute(0, 1.0);
+        c2.charge_compute(1, 10.0);
+        assert!((c2.end_round().round_time(&c2.specs) - 10.0).abs() < 1e-9);
+        assert_eq!(c2.speculation_stats(), (0, 0));
+    }
+
+    #[test]
+    fn fault_events_emit_trace_counters() {
+        let (tracer, sink) = Tracer::recording();
+        let c = SimCluster::ec2(2).with_tracer(tracer);
+        c.alloc(0, 1_000).unwrap();
+        c.kill_machine(0, None);
+        c.restore_machine(0);
+        assert_eq!(sink.counter("fault.kills"), 1);
+        assert_eq!(sink.counter("fault.restarts"), 1);
+        assert!(
+            sink.spans().iter().any(|s| s.name == "fault:kill-machine-0" && s.cat == "fault"),
+            "kill span missing"
+        );
     }
 }

@@ -12,8 +12,10 @@ use std::sync::{Arc, Mutex};
 
 use super::shuffle;
 use super::EngineContext;
+use crate::cluster::SimCluster;
 use crate::error::{Error, Result};
 use crate::exec::TaskSet;
+use crate::util::timer::Stopwatch;
 use std::sync::atomic::Ordering;
 
 /// The compute closure: produce partition `p` from parents (captured).
@@ -27,6 +29,11 @@ struct Core<T> {
     /// Some(slots) iff cached. A slot is None until computed or after
     /// invalidation (simulated executor loss).
     cache: Mutex<Option<Vec<Option<Arc<Vec<T>>>>>>,
+    /// Some(parts) once `checkpoint` has materialized this dataset to
+    /// simulated stable storage: recovery reads these instead of
+    /// replaying lineage (and bypasses task-failure injection — stable
+    /// reads don't re-run the compute).
+    checkpoint: Mutex<Option<Vec<Arc<Vec<T>>>>>,
 }
 
 /// An immutable, partitioned, lineage-tracked collection.
@@ -92,6 +99,7 @@ impl<T: Clone + Send + Sync + 'static> Dataset<T> {
                 num_partitions,
                 compute: Arc::new(compute),
                 cache: Mutex::new(None),
+                checkpoint: Mutex::new(None),
             }),
         }
     }
@@ -134,6 +142,27 @@ impl<T: Clone + Send + Sync + 'static> Dataset<T> {
             cache.as_ref().is_some_and(|s| s[p].is_none())
                 && self.core.ctx.failures.was_lost(self.core.id, p)
         };
+        // checkpointed? serve from simulated stable storage: bounded
+        // recovery that never replays lineage or consults the task
+        // failure plan
+        let from_checkpoint = {
+            let ck = self.core.checkpoint.lock().unwrap();
+            ck.as_ref().map(|parts| parts[p].clone())
+        };
+        if let Some(v) = from_checkpoint {
+            self.core.ctx.checkpoint_hits.fetch_add(1, Ordering::Relaxed);
+            if was_invalidated {
+                self.core.ctx.recoveries.fetch_add(1, Ordering::Relaxed);
+            }
+            let mut cache = self.core.cache.lock().unwrap();
+            if let Some(slots) = cache.as_mut() {
+                if let Some(existing) = &slots[p] {
+                    return Ok(existing.clone());
+                }
+                slots[p] = Some(v.clone());
+            }
+            return Ok(v);
+        }
         // compute through lineage, honoring task-failure injection
         let v = Arc::new(self.compute_with_retries(p)?);
         if was_invalidated {
@@ -181,9 +210,30 @@ impl<T: Clone + Send + Sync + 'static> Dataset<T> {
     }
 
     fn compute_with_retries(&self, p: usize) -> Result<Vec<T>> {
-        const MAX_ATTEMPTS: usize = 4; // Spark's spark.task.maxFailures default
-        let mut last_err = None;
-        for _attempt in 0..MAX_ATTEMPTS {
+        let policy = self.core.ctx.retry_policy();
+        let attempts = policy.max_attempts.max(1);
+        let budget = Stopwatch::start();
+        let mut last_err: Option<Error> = None;
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                // exponential backoff before each retry (scheduler
+                // re-launch delay), clamped to the remaining wall-clock
+                // budget so a large backoff can't overshoot the timeout
+                let backoff = policy.backoff_base * (1u32 << (attempt - 1).min(16));
+                let remaining = policy.timeout.saturating_sub(budget.elapsed());
+                std::thread::sleep(backoff.min(remaining));
+                if budget.elapsed() >= policy.timeout {
+                    let last = last_err
+                        .as_ref()
+                        .map(|e| e.to_string())
+                        .unwrap_or_else(|| "no prior error".into());
+                    return Err(Error::FaultRecovery(format!(
+                        "retry budget timed out after {attempt} attempts \
+                         (dataset {}, partition {p}): {last}",
+                        self.core.id
+                    )));
+                }
+            }
             self.core.ctx.tasks_run.fetch_add(1, Ordering::Relaxed);
             if self.core.ctx.failures.should_fail(self.core.id, p) {
                 last_err = Some(Error::Engine(format!(
@@ -194,7 +244,14 @@ impl<T: Clone + Send + Sync + 'static> Dataset<T> {
             }
             return (self.core.compute)(p);
         }
-        Err(last_err.unwrap_or_else(|| Error::Engine("retry budget exhausted".into())))
+        let last = last_err
+            .as_ref()
+            .map(|e| e.to_string())
+            .unwrap_or_else(|| "no error recorded".into());
+        Err(Error::FaultRecovery(format!(
+            "gave up after {attempts} attempts (dataset {}, partition {p}): {last}",
+            self.core.id
+        )))
     }
 
     /// Enable caching (Spark `.cache()`); returns self for chaining.
@@ -227,6 +284,84 @@ impl<T: Clone + Send + Sync + 'static> Dataset<T> {
             .unwrap()
             .as_ref()
             .is_some_and(|s| s[p].is_some())
+    }
+
+    // ---- fault tolerance -------------------------------------------------
+
+    /// Materialize every partition to simulated stable storage (the HDFS
+    /// surrogate) and truncate lineage, Spark's `RDD.checkpoint`: later
+    /// recoveries re-read the snapshot instead of replaying the compute
+    /// chain, bounding recovery depth under repeated machine loss. The
+    /// write runs as one dedicated round on `cluster`: per-partition
+    /// compute on the partition's assigned machine, plus a 3x-replicated
+    /// HDFS write and read-back of the snapshot bytes (shallow
+    /// `size_of::<T>()` estimate) via `charge_hdfs_roundtrip`. Must be
+    /// called between rounds. Idempotent: re-checkpointing an already
+    /// checkpointed dataset is a no-op and charges nothing.
+    pub fn checkpoint(&self, cluster: &SimCluster) -> Result<()> {
+        if self.core.checkpoint.lock().unwrap().is_some() {
+            return Ok(());
+        }
+        let tracer = self.core.ctx.tracer();
+        let t0 = tracer.start();
+        cluster.begin_round();
+        let result = (|| -> Result<(Vec<Arc<Vec<T>>>, u64)> {
+            let n = self.core.num_partitions;
+            let mut parts = Vec::with_capacity(n);
+            let mut bytes = 0u64;
+            for p in 0..n {
+                let machine = cluster.assign_machine(p)?;
+                let part = cluster.run_task(machine, || self.partition(p))?;
+                bytes += (part.len() * std::mem::size_of::<T>()) as u64;
+                parts.push(part);
+            }
+            Ok((parts, bytes))
+        })();
+        let (parts, bytes) = match result {
+            Ok(v) => v,
+            Err(e) => {
+                // close the round even on failure so the ledger is never
+                // left wedged inside an open round
+                cluster.end_round();
+                return Err(e);
+            }
+        };
+        cluster.charge_hdfs_roundtrip(bytes / cluster.num_machines() as u64);
+        cluster.end_round();
+        *self.core.checkpoint.lock().unwrap() = Some(parts);
+        if let Some(t0) = t0 {
+            tracer.span(
+                format!("checkpoint:dataset-{}", self.core.id),
+                "engine",
+                0,
+                t0,
+                &[("bytes", bytes as f64)],
+            );
+            tracer.count("engine.checkpoints", 1);
+        }
+        Ok(())
+    }
+
+    /// True once [`Dataset::checkpoint`] has materialized this dataset.
+    pub fn is_checkpointed(&self) -> bool {
+        self.core.checkpoint.lock().unwrap().is_some()
+    }
+
+    /// Wire machine-loss events from `cluster` into this dataset's cache:
+    /// when a machine dies, every cached partition resident on it under
+    /// round-robin placement (`p % machines`) is invalidated, so the next
+    /// access recovers through the checkpoint (if one exists) or lineage.
+    /// The registration lives as long as the cluster.
+    pub fn bind_cluster(&self, cluster: &SimCluster) {
+        let ds = self.clone();
+        let machines = cluster.num_machines();
+        cluster.on_machine_loss(move |m| {
+            let mut p = m;
+            while p < ds.num_partitions() {
+                ds.invalidate_partition(p);
+                p += machines;
+            }
+        });
     }
 
     // ---- actions ----------------------------------------------------------
@@ -655,6 +790,82 @@ mod tests {
         let out = derived.collect().unwrap();
         assert_eq!(out, (0..20).map(|x| x * 2).filter(|x| x % 4 == 0).collect::<Vec<_>>());
         assert!(c.stats().2 >= 2);
+    }
+
+    #[test]
+    fn checkpoint_truncates_lineage_and_is_idempotent() {
+        let c = ctx();
+        let d = c
+            .parallelize((0..100).collect::<Vec<i32>>(), 4)
+            .map(|x| x + 1)
+            .cache();
+        let cluster = SimCluster::ec2(4);
+        assert!(!d.is_checkpointed());
+        d.checkpoint(&cluster).unwrap();
+        assert!(d.is_checkpointed());
+        assert_eq!(cluster.rounds(), 1, "checkpoint runs as one round");
+        assert!(cluster.total_disk_seconds() > 0.0, "HDFS roundtrip charged");
+
+        // idempotent: no extra round, no extra charge
+        let disk = cluster.total_disk_seconds();
+        d.checkpoint(&cluster).unwrap();
+        assert_eq!(cluster.rounds(), 1);
+        assert_eq!(cluster.total_disk_seconds(), disk);
+
+        // lose a partition AND poison its lineage: recovery must come
+        // from the checkpoint, never replaying the (now failing) compute
+        d.invalidate_partition(2);
+        c.failures.fail_times(d.id(), 2, 1000);
+        let v = d.partition(2).unwrap();
+        assert_eq!(v.as_ref(), &(51..=75).collect::<Vec<i32>>());
+        assert!(c.checkpoint_hits() >= 1);
+        assert_eq!(c.stats().2, 1, "checkpoint read still counts as recovery");
+        assert!(d.is_cached(2), "recovered partition re-cached");
+    }
+
+    #[test]
+    fn retry_exhaustion_is_typed_fault_recovery() {
+        let c = ctx();
+        let d = c.parallelize(vec![1, 2, 3], 1).map(|x| *x);
+        c.failures.fail_times(d.id(), 0, 100);
+        let err = d.collect().unwrap_err();
+        assert!(err.is_fault_recovery(), "got: {err}");
+        // the last underlying error is preserved in the message
+        assert!(err.to_string().contains("injected task failure"));
+    }
+
+    #[test]
+    fn retry_timeout_budget_is_enforced() {
+        use super::super::RetryPolicy;
+        use std::time::Duration;
+        let c = ctx();
+        c.set_retry_policy(RetryPolicy {
+            max_attempts: 1000,
+            backoff_base: Duration::from_millis(10),
+            timeout: Duration::from_millis(25),
+        });
+        let d = c.parallelize(vec![1], 1).map(|x| *x);
+        c.failures.fail_times(d.id(), 0, 1_000_000);
+        let err = d.collect().unwrap_err();
+        assert!(err.is_fault_recovery(), "got: {err}");
+        assert!(err.to_string().contains("timed out"), "got: {err}");
+    }
+
+    #[test]
+    fn bind_cluster_invalidates_partitions_of_dead_machine() {
+        let c = ctx();
+        let d = c.parallelize((0..80).collect::<Vec<i64>>(), 8).cache();
+        d.materialize().unwrap();
+        let cluster = SimCluster::ec2(4);
+        d.bind_cluster(&cluster);
+        cluster.kill_machine(1, None);
+        // partitions 1 and 5 live on machine 1 (p % 4); both drop
+        assert!(!d.is_cached(1) && !d.is_cached(5));
+        assert!(d.is_cached(0) && d.is_cached(2));
+        assert_eq!(c.failures.losses(), 2);
+        // next action recovers both through lineage, bitwise-identical
+        assert_eq!(d.collect().unwrap(), (0..80).collect::<Vec<_>>());
+        assert_eq!(c.stats().2, 2, "both partitions recovered");
     }
 
     #[test]

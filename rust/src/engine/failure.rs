@@ -3,6 +3,7 @@
 //! motivation for building on Spark: "automatic recovery from node
 //! failure is a necessity").
 
+use crate::exec::lock_unpoisoned;
 use std::collections::{HashMap, HashSet};
 use std::sync::Mutex;
 
@@ -27,17 +28,21 @@ pub struct FailurePlan {
 
 impl FailurePlan {
     /// Make the next `n` compute attempts of (dataset, partition) fail.
+    /// `n == 0` clears the entry: a zero budget can never fire, so leaving
+    /// it in the map would only accumulate dead keys.
     pub fn fail_times(&self, dataset: usize, partition: usize, n: usize) {
-        self.fail_budget
-            .lock()
-            .unwrap()
-            .insert((dataset, partition), n);
+        let mut b = lock_unpoisoned(&self.fail_budget);
+        if n == 0 {
+            b.remove(&(dataset, partition));
+        } else {
+            b.insert((dataset, partition), n);
+        }
     }
 
     /// Called by the scheduler before each attempt; consumes one failure
     /// from the budget if present.
     pub fn should_fail(&self, dataset: usize, partition: usize) -> bool {
-        let mut b = self.fail_budget.lock().unwrap();
+        let mut b = lock_unpoisoned(&self.fail_budget);
         match b.get_mut(&(dataset, partition)) {
             Some(n) if *n > 0 => {
                 *n -= 1;
@@ -47,17 +52,25 @@ impl FailurePlan {
         }
     }
 
+    /// (dataset, partition) keys with failure budget still to burn.
+    pub fn pending_failures(&self) -> usize {
+        lock_unpoisoned(&self.fail_budget)
+            .values()
+            .filter(|&&n| n > 0)
+            .count()
+    }
+
     pub(crate) fn mark_lost(&self, dataset: usize, partition: usize) {
-        self.lost.lock().unwrap().insert((dataset, partition));
+        lock_unpoisoned(&self.lost).insert((dataset, partition));
     }
 
     pub(crate) fn was_lost(&self, dataset: usize, partition: usize) -> bool {
-        self.lost.lock().unwrap().contains(&(dataset, partition))
+        lock_unpoisoned(&self.lost).contains(&(dataset, partition))
     }
 
     /// Total partitions ever marked lost (for reporting).
     pub fn losses(&self) -> usize {
-        self.lost.lock().unwrap().len()
+        lock_unpoisoned(&self.lost).len()
     }
 }
 
@@ -76,6 +89,20 @@ mod tests {
         assert!(p.should_fail(1, 0));
         assert!(!p.should_fail(1, 0));
         assert!(!p.should_fail(9, 9));
+    }
+
+    #[test]
+    fn zero_budget_removes_entry() {
+        let p = FailurePlan::default();
+        p.fail_times(1, 0, 0);
+        assert_eq!(p.pending_failures(), 0);
+        assert!(!p.should_fail(1, 0));
+        // and resetting an existing budget to 0 clears it too
+        p.fail_times(1, 0, 3);
+        assert_eq!(p.pending_failures(), 1);
+        p.fail_times(1, 0, 0);
+        assert_eq!(p.pending_failures(), 0);
+        assert!(!p.should_fail(1, 0));
     }
 
     #[test]

@@ -44,9 +44,37 @@ pub use failure::FailurePlan;
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
-use crate::exec::ThreadPool;
+use crate::exec::{lock_unpoisoned, ThreadPool};
 use crate::trace::Tracer;
+
+/// Retry policy for partition compute attempts (Spark task-scheduler
+/// surrogate): bounded attempts with exponential backoff and a per-action
+/// wall-clock budget. The backoff sleeps are *real* (they model scheduler
+/// re-launch delay) but tiny by default so tests stay fast; simulated
+/// cluster time never reads them.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Max compute attempts per partition (`spark.task.maxFailures`).
+    pub max_attempts: usize,
+    /// Sleep before retry `i` (1-based) is `backoff_base * 2^(i-1)`.
+    pub backoff_base: Duration,
+    /// Total wall-clock budget across all attempts of one partition; once
+    /// exceeded, remaining retries are forfeited and the action fails
+    /// with [`crate::error::Error::FaultRecovery`].
+    pub timeout: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            backoff_base: Duration::from_micros(200),
+            timeout: Duration::from_secs(30),
+        }
+    }
+}
 
 /// Shared engine state: id allocator, failure plan, task metrics, and the
 /// optional task executor. All counters are atomics so partition tasks on
@@ -60,6 +88,9 @@ pub struct EngineContext {
     pub cache_hits: AtomicU64,
     /// Partition recomputations triggered by invalidation (recoveries).
     pub recoveries: AtomicU64,
+    /// Partitions served from a checkpoint instead of lineage replay.
+    pub checkpoint_hits: AtomicU64,
+    retry: Mutex<RetryPolicy>,
     executor: Mutex<Option<Arc<ThreadPool>>>,
     tracer: Mutex<Arc<Tracer>>,
 }
@@ -72,9 +103,24 @@ impl EngineContext {
             tasks_run: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
             recoveries: AtomicU64::new(0),
+            checkpoint_hits: AtomicU64::new(0),
+            retry: Mutex::new(RetryPolicy::default()),
             executor: Mutex::new(None),
             tracer: Mutex::new(Tracer::disabled()),
         })
+    }
+
+    /// Swap the retry policy (attempts / backoff / timeout budget).
+    pub fn set_retry_policy(&self, p: RetryPolicy) {
+        *lock_unpoisoned(&self.retry) = p;
+    }
+
+    pub fn retry_policy(&self) -> RetryPolicy {
+        *lock_unpoisoned(&self.retry)
+    }
+
+    pub fn checkpoint_hits(&self) -> u64 {
+        self.checkpoint_hits.load(Ordering::Relaxed)
     }
 
     /// Attach a work-stealing executor with `threads` workers; subsequent
@@ -84,7 +130,7 @@ impl EngineContext {
     pub fn with_executor(self: &Arc<Self>, threads: usize) -> Arc<Self> {
         let pool = ThreadPool::new(threads);
         pool.set_tracer(self.tracer());
-        *self.executor.lock().unwrap() = Some(pool);
+        *lock_unpoisoned(&self.executor) = Some(pool);
         self.clone()
     }
 
@@ -110,12 +156,12 @@ impl EngineContext {
     /// Share an existing pool (e.g. the `SimCluster`'s) instead of
     /// spawning a new one.
     pub fn set_executor(&self, pool: Option<Arc<ThreadPool>>) {
-        *self.executor.lock().unwrap() = pool;
+        *lock_unpoisoned(&self.executor) = pool;
     }
 
     /// The attached executor, if any.
     pub fn executor(&self) -> Option<Arc<ThreadPool>> {
-        self.executor.lock().unwrap().clone()
+        lock_unpoisoned(&self.executor).clone()
     }
 
     pub(crate) fn fresh_id(&self) -> usize {
@@ -193,6 +239,19 @@ mod tests {
         let _ = d.collect().unwrap();
         let (tasks, _, _) = ctx.stats();
         assert!(tasks >= 2); // at least one task per partition
+    }
+
+    #[test]
+    fn retry_policy_defaults_and_swap() {
+        let ctx = EngineContext::new();
+        let p = ctx.retry_policy();
+        assert_eq!(p.max_attempts, 4);
+        ctx.set_retry_policy(RetryPolicy {
+            max_attempts: 2,
+            ..Default::default()
+        });
+        assert_eq!(ctx.retry_policy().max_attempts, 2);
+        assert_eq!(ctx.checkpoint_hits(), 0);
     }
 
     #[test]

@@ -45,6 +45,12 @@ pub enum Error {
     /// Executor failure: a task in a [`crate::exec::TaskSet`] panicked.
     /// The pool survives; the stage that owned the task gets this error.
     Exec(String),
+
+    /// Node-level fault recovery failed: no machine alive to place a
+    /// partition, or a partition's retry budget (attempts + backoff
+    /// timeout) was exhausted. Jobs fail-stop with this typed error
+    /// instead of panicking or hanging.
+    FaultRecovery(String),
 }
 
 impl fmt::Display for Error {
@@ -61,6 +67,7 @@ impl fmt::Display for Error {
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
             Error::Exec(m) => write!(f, "executor error: {m}"),
+            Error::FaultRecovery(m) => write!(f, "fault recovery failed: {m}"),
         }
     }
 }
@@ -94,6 +101,12 @@ impl Error {
     pub fn is_oom(&self) -> bool {
         matches!(self, Error::Oom(_))
     }
+
+    /// True if this error is a node-fault recovery failure (dead fleet or
+    /// exhausted retry budget); the chaos harness and tests match on it.
+    pub fn is_fault_recovery(&self) -> bool {
+        matches!(self, Error::FaultRecovery(_))
+    }
 }
 
 #[cfg(test)]
@@ -110,5 +123,13 @@ mod tests {
     fn oom_detection() {
         assert!(Error::Oom("68GB cap".into()).is_oom());
         assert!(!Error::Schema("x".into()).is_oom());
+    }
+
+    #[test]
+    fn fault_recovery_detection() {
+        let e = Error::FaultRecovery("all 4 machines down".into());
+        assert!(e.is_fault_recovery());
+        assert!(e.to_string().contains("fault recovery failed"));
+        assert!(!Error::Engine("x".into()).is_fault_recovery());
     }
 }

@@ -9,6 +9,7 @@ use super::worker::{self, WorkerMetrics, WorkerStats};
 use super::{lock_unpoisoned, ExecError};
 use crate::metrics::Metrics;
 use crate::trace::{TraceSink, Tracer};
+use crate::util::timer::Stopwatch;
 
 /// A unit of work: the boxed job plus an optional stage label (for trace
 /// spans), the enqueue timestamp (for queue-wait attribution) and an
@@ -328,6 +329,235 @@ impl ThreadPool {
         Ok(out)
     }
 
+    /// Speculative variant of [`ThreadPool::try_run`] (Spark's
+    /// `spark.speculation` in miniature). Tasks are `f(i, attempt)` with
+    /// `attempt == 0` for the original copies. Once at least half the
+    /// stage has finished, any task still outstanding after `threshold` x
+    /// the median finished-task wall time gets one backup copy
+    /// (`attempt == 1`) resubmitted to the pool. Results stay
+    /// deterministic for any timing: each index keeps the result of its
+    /// LOWEST-numbered attempt, and the stage drains every copy before
+    /// returning, so the output is identical to the non-speculative path
+    /// whenever `f(i, _)` ignores the attempt number in its return value.
+    pub fn try_run_speculative<T, F>(
+        &self,
+        label: &str,
+        n: usize,
+        threshold: f64,
+        f: F,
+    ) -> std::result::Result<Vec<T>, ExecError>
+    where
+        T: Send,
+        F: Fn(usize, usize) -> T + Sync,
+    {
+        assert!(threshold > 1.0, "speculation threshold must exceed 1.0");
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        if worker::is_pool_thread() {
+            // nested stage: run originals inline (serial); there is no
+            // straggling worker to speculate against
+            let mut out = Vec::with_capacity(n);
+            for i in 0..n {
+                match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i, 0))) {
+                    Ok(v) => out.push(v),
+                    Err(p) => {
+                        return Err(ExecError {
+                            stage: label.to_string(),
+                            message: worker::panic_message(p.as_ref()),
+                        })
+                    }
+                }
+            }
+            return Ok(out);
+        }
+        struct SpecState {
+            /// Per-index: some attempt has finished (success or panic).
+            done: Vec<bool>,
+            completed: usize,
+            /// Wall times of first-finishing attempts, for the median.
+            finished_secs: Vec<f64>,
+            /// Per-index: a backup copy was already launched.
+            launched: Vec<bool>,
+            /// Backups that finished before their original.
+            wins: u64,
+            panic: Option<String>,
+        }
+        let tracer = self.tracer();
+        let stage_start = tracer.start();
+        let task_label: Arc<str> = Arc::from(label);
+        // each slot keeps (attempt, result) of the lowest attempt seen
+        let slots: Vec<Mutex<Option<(usize, T)>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let state = (
+            Mutex::new(SpecState {
+                done: vec![false; n],
+                completed: 0,
+                finished_secs: Vec::with_capacity(n),
+                launched: vec![false; n],
+                wins: 0,
+                panic: None,
+            }),
+            Condvar::new(),
+        );
+        let mut completions: Vec<Arc<Completion>> = Vec::new();
+        let mut spec_launched = 0u64;
+        {
+            let f = &f;
+            let slots = &slots;
+            let state = &state;
+            let tracer_ref = &tracer;
+            let task_label = &task_label;
+            let submit_attempt =
+                |this: &ThreadPool, i: usize, attempt: usize, cs: &mut Vec<Arc<Completion>>| {
+                    let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                        let sw = Stopwatch::start();
+                        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            f(i, attempt)
+                        }));
+                        let (lock, cv) = state;
+                        match r {
+                            Ok(v) => {
+                                let backup_first = {
+                                    let mut slot = lock_unpoisoned(&slots[i]);
+                                    let was_empty = slot.is_none();
+                                    let replace = match &*slot {
+                                        Some((a, _)) => attempt < *a,
+                                        None => true,
+                                    };
+                                    if replace {
+                                        *slot = Some((attempt, v));
+                                    }
+                                    was_empty && attempt > 0
+                                };
+                                let mut st = lock_unpoisoned(lock);
+                                if backup_first {
+                                    st.wins += 1;
+                                }
+                                if !st.done[i] {
+                                    st.done[i] = true;
+                                    st.completed += 1;
+                                    st.finished_secs.push(sw.elapsed_secs());
+                                }
+                                cv.notify_all();
+                            }
+                            Err(p) => {
+                                let mut st = lock_unpoisoned(lock);
+                                if st.panic.is_none() {
+                                    st.panic = Some(worker::panic_message(p.as_ref()));
+                                }
+                                if !st.done[i] {
+                                    st.done[i] = true;
+                                    st.completed += 1;
+                                }
+                                cv.notify_all();
+                            }
+                        }
+                    });
+                    // SAFETY: lifetime erasure to 'static under the same
+                    // contract as `try_run_labeled`: the job borrows only
+                    // `f`, `slots` and `state`, all alive until this
+                    // function returns, and every per-attempt completion
+                    // latch below is waited on before returning (workers
+                    // signal strictly after dropping the job), so no borrow
+                    // escapes this call.
+                    let job: Box<dyn FnOnce() + Send + 'static> =
+                        unsafe { std::mem::transmute(job) };
+                    let done = Arc::new(Completion::new(1));
+                    cs.push(done.clone());
+                    this.submit(Task {
+                        job,
+                        label: Some(task_label.clone()),
+                        enqueued_ns: tracer_ref.start(),
+                        done: Some(done),
+                    });
+                };
+            for i in 0..n {
+                submit_attempt(self, i, 0, &mut completions);
+            }
+            let stage_sw = Stopwatch::start();
+            loop {
+                let to_speculate: Vec<usize> = {
+                    let st = lock_unpoisoned(&state.0);
+                    if st.completed >= n {
+                        break;
+                    }
+                    let (st, _timeout) = state
+                        .1
+                        .wait_timeout(st, std::time::Duration::from_millis(2))
+                        .unwrap_or_else(|e| e.into_inner());
+                    let mut st = st;
+                    if st.completed >= n {
+                        break;
+                    }
+                    // speculate only once a majority has finished (a
+                    // meaningful median exists) and the stage has run past
+                    // threshold x that median
+                    if st.completed < (n / 2).max(1) {
+                        continue;
+                    }
+                    let med = crate::util::median(&st.finished_secs);
+                    if med <= 0.0 || stage_sw.elapsed_secs() < threshold * med {
+                        continue;
+                    }
+                    let mut picks = Vec::new();
+                    for i in 0..n {
+                        if !st.done[i] && !st.launched[i] {
+                            st.launched[i] = true;
+                            picks.push(i);
+                        }
+                    }
+                    picks
+                };
+                for i in to_speculate {
+                    spec_launched += 1;
+                    submit_attempt(self, i, 1, &mut completions);
+                }
+            }
+        }
+        // drain every attempt before touching borrowed state (soundness);
+        // losing backups are simply discarded by the lowest-attempt rule
+        for c in &completions {
+            c.wait();
+        }
+        let (wins, panic) = {
+            let st = lock_unpoisoned(&state.0);
+            (st.wins, st.panic.clone())
+        };
+        if let Some(t0) = stage_start {
+            tracer.span(
+                format!("stage:{label}"),
+                "exec",
+                0,
+                t0,
+                &[("tasks", n as f64), ("speculated", spec_launched as f64)],
+            );
+            if spec_launched > 0 {
+                tracer.count("exec.spec.launched", spec_launched);
+                tracer.count("exec.spec.wins", wins);
+                tracer.count("exec.spec.losses", spec_launched.saturating_sub(wins));
+            }
+        }
+        if let Some(msg) = panic {
+            return Err(ExecError {
+                stage: label.to_string(),
+                message: msg,
+            });
+        }
+        let mut out = Vec::with_capacity(n);
+        for m in slots {
+            match m.into_inner().unwrap_or_else(|e| e.into_inner()) {
+                Some((_, v)) => out.push(v),
+                None => {
+                    return Err(ExecError {
+                        stage: label.to_string(),
+                        message: "task produced no result".to_string(),
+                    })
+                }
+            }
+        }
+        Ok(out)
+    }
+
     /// Snapshot the per-worker metrics.
     pub fn worker_stats(&self) -> Vec<WorkerStats> {
         self.shared
@@ -479,6 +709,29 @@ impl TaskSet {
                 }
                 Ok(out)
             }
+        }
+    }
+
+    /// Speculative variant of [`TaskSet::try_run`]: tasks are
+    /// `f(i, attempt)` and stragglers past `threshold` x the stage median
+    /// get one backup copy (see [`ThreadPool::try_run_speculative`]).
+    /// Serial (no pool) runs originals only — there is nothing to
+    /// speculate against on one thread.
+    pub fn try_run_speculative<T, F>(
+        &self,
+        pool: Option<&ThreadPool>,
+        threshold: f64,
+        f: F,
+    ) -> crate::error::Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(usize, usize) -> T + Sync,
+    {
+        match pool {
+            Some(pool) => {
+                Ok(pool.try_run_speculative(&self.label, self.tasks, threshold, f)?)
+            }
+            None => self.try_run(None, |i| f(i, 0)),
         }
     }
 }
@@ -683,6 +936,59 @@ mod tests {
         pool.export_trace(sink.as_ref());
         let tasks = sink.counter("exec.worker0.tasks") + sink.counter("exec.worker1.tasks");
         assert_eq!(tasks, 6);
+    }
+
+    #[test]
+    fn speculative_run_matches_plain_run() {
+        let pool = ThreadPool::new(4);
+        let out = pool
+            .try_run_speculative("spec", 32, 4.0, |i, _attempt| i * 3 + 1)
+            .unwrap();
+        assert_eq!(out, (0..32).map(|i| i * 3 + 1).collect::<Vec<_>>());
+        // serial TaskSet path runs originals only
+        let ts = TaskSet::new("spec-serial", 5);
+        let serial = ts.try_run_speculative(None, 2.0, |i, a| i * 10 + a).unwrap();
+        assert_eq!(serial, vec![0, 10, 20, 30, 40]);
+    }
+
+    #[test]
+    fn speculative_backup_launches_and_lowest_attempt_wins() {
+        // Task 7's original sleeps far past threshold x median, so the
+        // driver launches a backup (attempt 1) that finishes first. The
+        // lowest-attempt rule still selects the original's result, so the
+        // output is bitwise-identical to a non-speculative run.
+        let pool = ThreadPool::new(4);
+        let (tracer, sink) = Tracer::recording();
+        pool.set_tracer(tracer);
+        let out = pool
+            .try_run_speculative("straggle", 8, 2.0, |i, attempt| {
+                if i == 7 && attempt == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(150));
+                } else {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                i * 10 + attempt
+            })
+            .unwrap();
+        assert_eq!(out, (0..8).map(|i| i * 10).collect::<Vec<_>>());
+        assert!(
+            sink.counter("exec.spec.launched") >= 1,
+            "straggler never got a backup copy"
+        );
+    }
+
+    #[test]
+    fn speculative_run_surfaces_panic_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let r = pool.try_run_speculative("spec-boom", 6, 3.0, |i, _a| {
+            if i == 4 {
+                panic!("speculative boom");
+            }
+            i
+        });
+        let e = r.expect_err("stage with a panicking task must fail");
+        assert!(e.to_string().contains("speculative boom"), "{e}");
+        assert_eq!(pool.run(3, |i| i + 1), vec![1, 2, 3]);
     }
 
     #[test]

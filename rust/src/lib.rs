@@ -57,8 +57,8 @@ pub mod prelude {
         Algorithm, AlsParams, KMeansParams, LinearRegression, LinearSVM,
         LogisticRegression, Model, ALS, KMeans,
     };
-    pub use crate::cluster::{CommTopology, SimCluster};
-    pub use crate::engine::EngineContext;
+    pub use crate::cluster::{CommTopology, FaultKind, FaultPlan, SimCluster};
+    pub use crate::engine::{EngineContext, RetryPolicy};
     pub use crate::error::{Error, Result};
     pub use crate::exec::{TaskSet, ThreadPool};
     pub use crate::features::{ngrams, standard_scale, tfidf};
@@ -80,6 +80,201 @@ fn finish_trace(sink: &trace::MemorySink, out: Option<&str>) -> Result<()> {
         sink.write_chrome(path)?;
         println!("chrome trace written to {path}");
     }
+    Ok(())
+}
+
+/// Options shared by the `mli chaos` workloads.
+struct ChaosOpts {
+    machines: usize,
+    iters: usize,
+    seed: u64,
+    kill_rate: f64,
+    restart_after: usize,
+    threads: usize,
+    tolerance: f64,
+    spec_k: f64,
+}
+
+/// Per-run observations from a chaos workload.
+struct ChaosRun {
+    weights: localmatrix::MLVector,
+    final_loss: f64,
+    losses: usize,
+    recoveries: u64,
+    checkpoint_reads: u64,
+    kills: u64,
+    restarts: u64,
+    sim_s: f64,
+}
+
+/// `mli chaos --algo logreg`: train twice — a failure-free baseline, then
+/// under a seeded random kill schedule with the cached input bound to the
+/// cluster and checkpointed to the simulated HDFS — and require the
+/// recovered run to match the baseline bitwise on weights and within
+/// `tolerance` on final loss.
+fn chaos_logreg(o: &ChaosOpts) -> Result<()> {
+    use algorithms::logreg::{Backend, LogRegParams};
+    use algorithms::{Algorithm, LogisticRegression};
+    use std::sync::Arc;
+
+    let n = 2048;
+    let d = 32;
+    let run = |plan: Option<Arc<cluster::FaultPlan>>| -> Result<ChaosRun> {
+        let ctx = engine::EngineContext::new();
+        let data = data::dense_gen::generate(&ctx, n, d, o.machines, o.seed)?;
+        let table = data.table.cache();
+        let mut c = cluster::SimCluster::ec2(o.machines);
+        if o.threads > 0 {
+            c = c.with_executor(o.threads);
+        }
+        if o.spec_k > 1.0 {
+            c = c.with_speculation(o.spec_k);
+        }
+        if let Some(p) = plan {
+            c = c.with_faults(p);
+        }
+        // wire machine loss into the cached input and checkpoint it: kills
+        // drop the dead machine's resident partitions, and recovery reads
+        // the HDFS snapshot instead of replaying lineage
+        table.dataset().bind_cluster(&c);
+        table.dataset().checkpoint(&c)?;
+        let algo = LogisticRegression::new(LogRegParams {
+            sgd: optim::SgdParams {
+                iters: o.iters,
+                track_loss: true,
+                ..Default::default()
+            },
+            backend: Backend::Rust,
+        });
+        let model = algo.train(&table, &c)?;
+        // force a post-train pass over the (possibly damaged) table so
+        // recovery actually runs under this kill schedule
+        let rows = table.num_rows()?;
+        if rows != n {
+            return Err(Error::FaultRecovery(format!(
+                "chaos logreg: table recovered to {rows} rows, expected {n}"
+            )));
+        }
+        let (kills, restarts) = c.fault_stats();
+        Ok(ChaosRun {
+            weights: model.weights.clone(),
+            final_loss: model.loss_history.last().copied().unwrap_or(f64::NAN),
+            losses: ctx.failures.losses(),
+            recoveries: ctx.stats().2,
+            checkpoint_reads: ctx.checkpoint_hits(),
+            kills,
+            restarts,
+            sim_s: c.total_sim_seconds(),
+        })
+    };
+
+    let base = run(None)?;
+    let plan = Arc::new(cluster::FaultPlan::random(
+        o.seed,
+        o.machines,
+        o.iters + 2,
+        o.kill_rate,
+        o.restart_after,
+    ));
+    let scheduled = plan.remaining();
+    let faulted = run(Some(plan))?;
+    println!(
+        "chaos logreg: machines={} iters={} seed={} kill-rate={} ({scheduled} kills scheduled)",
+        o.machines, o.iters, o.seed, o.kill_rate
+    );
+    println!(
+        "  faulted run: {} kills, {} restarts, {} partitions lost, {} recoveries, \
+         {} checkpoint reads, sim {:.3}s (baseline {:.3}s)",
+        faulted.kills,
+        faulted.restarts,
+        faulted.losses,
+        faulted.recoveries,
+        faulted.checkpoint_reads,
+        faulted.sim_s,
+        base.sim_s
+    );
+    if faulted.weights != base.weights {
+        return Err(Error::FaultRecovery(
+            "chaos logreg: weights diverged from failure-free baseline".into(),
+        ));
+    }
+    let drift = (faulted.final_loss - base.final_loss).abs();
+    if !(drift <= o.tolerance) {
+        return Err(Error::FaultRecovery(format!(
+            "chaos logreg: final loss drifted by {drift:.6} (tolerance {})",
+            o.tolerance
+        )));
+    }
+    println!(
+        "  OK: weights bitwise-identical to baseline; loss drift {drift:.2e} <= {}",
+        o.tolerance
+    );
+    Ok(())
+}
+
+/// `mli chaos --algo als`: same discipline for ALS on synthetic ratings —
+/// machine kills shift placement and sim-time charging, and the final RMSE
+/// must stay within `tolerance` of the failure-free baseline.
+fn chaos_als(o: &ChaosOpts) -> Result<()> {
+    use std::sync::Arc;
+
+    let run = |plan: Option<Arc<cluster::FaultPlan>>| -> Result<(f64, f64, u64, u64)> {
+        let data = data::netflix::generate(&data::netflix::NetflixConfig {
+            users: 256,
+            items: 64,
+            seed: o.seed,
+            ..Default::default()
+        });
+        let mut c = cluster::SimCluster::ec2(o.machines);
+        if o.threads > 0 {
+            c = c.with_executor(o.threads);
+        }
+        if o.spec_k > 1.0 {
+            c = c.with_speculation(o.spec_k);
+        }
+        if let Some(p) = plan {
+            c = c.with_faults(p);
+        }
+        let model = algorithms::ALS::new(algorithms::AlsParams {
+            rank: 8,
+            iters: o.iters,
+            lambda: 0.01,
+            track_rmse: true,
+            use_xla: false,
+            ..Default::default()
+        })
+        .train_ratings(&data, &c)?;
+        let rmse = model.rmse_history.last().copied().unwrap_or(f64::NAN);
+        let (kills, restarts) = c.fault_stats();
+        Ok((rmse, c.total_sim_seconds(), kills, restarts))
+    };
+
+    let (base_rmse, base_sim, _, _) = run(None)?;
+    let plan = Arc::new(cluster::FaultPlan::random(
+        o.seed,
+        o.machines,
+        o.iters + 2,
+        o.kill_rate,
+        o.restart_after,
+    ));
+    let scheduled = plan.remaining();
+    let (rmse, sim_s, kills, restarts) = run(Some(plan))?;
+    println!(
+        "chaos als: machines={} iters={} seed={} kill-rate={} ({scheduled} kills scheduled)",
+        o.machines, o.iters, o.seed, o.kill_rate
+    );
+    println!(
+        "  faulted run: {kills} kills, {restarts} restarts, rmse {rmse:.6} \
+         (baseline {base_rmse:.6}), sim {sim_s:.3}s (baseline {base_sim:.3}s)"
+    );
+    let drift = (rmse - base_rmse).abs();
+    if !(drift <= o.tolerance) {
+        return Err(Error::FaultRecovery(format!(
+            "chaos als: rmse drifted by {drift:.6} (tolerance {})",
+            o.tolerance
+        )));
+    }
+    println!("  OK: rmse within tolerance under failures");
     Ok(())
 }
 
@@ -167,6 +362,15 @@ pub fn run_cli(args: util::cli::Args) -> Result<()> {
                     let model = algo.train(&data.table, &cluster)?;
                     println!("loss history: {:?}", model.loss_history);
                     println!("sim walltime: {:.3}s", model.sim_seconds);
+                    let (tasks, _, recoveries) = ctx.stats();
+                    println!(
+                        "failures: {} partitions lost, {recoveries} lineage recoveries, \
+                         {} checkpoint reads ({tasks} tasks run)",
+                        ctx.failures.losses(),
+                        ctx.checkpoint_hits()
+                    );
+                    let (kills, restarts) = cluster.fault_stats();
+                    println!("node faults: {kills} kills, {restarts} restarts");
                     if let (Some(s), Some(p)) = (&sink, cluster.pool()) {
                         p.export_trace(s.as_ref());
                     }
@@ -189,6 +393,8 @@ pub fn run_cli(args: util::cli::Args) -> Result<()> {
                     .train_ratings(&data, &cluster)?;
                     println!("rmse history: {:?}", model.rmse_history);
                     println!("sim walltime: {:.3}s", cluster.total_sim_seconds());
+                    let (kills, restarts) = cluster.fault_stats();
+                    println!("node faults: {kills} kills, {restarts} restarts");
                     if let (Some(s), Some(p)) = (&sink, cluster.pool()) {
                         p.export_trace(s.as_ref());
                     }
@@ -375,6 +581,36 @@ pub fn run_cli(args: util::cli::Args) -> Result<()> {
             finish_trace(&sink, args.get("out"))?;
             Ok(())
         }
+        Some("chaos") => {
+            // mli chaos [--algo logreg|als|both] [--machines 8] [--iters 8]
+            //           [--seed 7] [--kill-rate 0.1] [--restart-after 2]
+            //           [--threads T] [--tolerance 0.2] [--spec-k K]
+            //
+            // Seeded random kill schedule: trains each workload twice (a
+            // failure-free baseline, then under machine kills) and fails
+            // with a typed error unless the recovered run matches the
+            // baseline — bitwise weights for logreg, rmse-within-tolerance
+            // for ALS. `--restart-after 0` makes every kill permanent.
+            let o = ChaosOpts {
+                machines: args.get_usize("machines", 8)?,
+                iters: args.get_usize("iters", 8)?,
+                seed: args.get_usize("seed", 7)? as u64,
+                kill_rate: args.get_f64("kill-rate", 0.1)?,
+                restart_after: args.get_usize("restart-after", 2)?,
+                threads: args.get_usize("threads", 0)?,
+                tolerance: args.get_f64("tolerance", 0.2)?,
+                spec_k: args.get_f64("spec-k", 0.0)?,
+            };
+            match args.get_str("algo", "logreg").as_str() {
+                "logreg" => chaos_logreg(&o),
+                "als" => chaos_als(&o),
+                "both" => {
+                    chaos_logreg(&o)?;
+                    chaos_als(&o)
+                }
+                other => Err(Error::Config(format!("unknown --algo '{other}'"))),
+            }
+        }
         Some("loc") => {
             println!("{}", bench_harness::loc::fig2a().to_markdown());
             println!("{}", bench_harness::loc::fig3a().to_markdown());
@@ -390,6 +626,9 @@ pub fn run_cli(args: util::cli::Args) -> Result<()> {
             println!("  bench --figure fig2|figA5|fig3|figA7  regenerate a paper figure (CLI scale)");
             println!("  exec-bench [--threads 1,2,4,8]        exec pool thread-scaling table");
             println!("  trace [--out trace.json]              traced run + span/counter summary");
+            println!("  chaos [--algo logreg|als|both]        seeded kill schedule; asserts the");
+            println!("        [--seed 7] [--kill-rate 0.1]    recovered run matches a failure-");
+            println!("        [--restart-after R] [--spec-k K] free baseline (R=0: permanent)");
             println!("  loc                                   Fig 2a/3a lines-of-code tables");
             println!("  help                                  this message");
             println!();

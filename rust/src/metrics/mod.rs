@@ -97,6 +97,9 @@ pub struct Table {
     pub title: String,
     pub headers: Vec<String>,
     pub rows: Vec<Vec<String>>,
+    /// Free-form footnotes rendered after the table body (markdown only;
+    /// CSV output is unaffected so plotting scripts keep parsing).
+    pub notes: Vec<String>,
 }
 
 impl Table {
@@ -105,12 +108,18 @@ impl Table {
             title: title.to_string(),
             headers: headers.iter().map(|s| s.to_string()).collect(),
             rows: Vec::new(),
+            notes: Vec::new(),
         }
     }
 
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "table row width");
         self.rows.push(cells);
+    }
+
+    /// Append a footnote line (e.g. failure/recovery accounting).
+    pub fn note(&mut self, line: impl Into<String>) {
+        self.notes.push(line.into());
     }
 
     /// Render as a markdown table.
@@ -141,6 +150,10 @@ impl Table {
         for r in &self.rows {
             out.push_str(&fmt_row(r, &widths));
             out.push('\n');
+        }
+        for n in &self.notes {
+            out.push('\n');
+            let _ = writeln!(out, "_{n}_");
         }
         out
     }

@@ -56,7 +56,7 @@ impl GD {
             // for any thread count despite f64 addition being non-associative
             let stage = TaskSet::new(format!("gd-grad-{it}"), parts);
             let results = stage.try_run(pool.as_deref(), |p| {
-                let machine = cluster.machine_of(p);
+                let machine = cluster.assign_machine(p)?;
                 cluster.run_task(machine, || provider.local_grad(p, &w))
             })?;
             let merge_t0 = tracer.start();

@@ -91,11 +91,31 @@ impl SGD {
             cluster.begin_round();
             let stage = TaskSet::new(format!("sgd-epoch-{it}"), parts);
             // try_run: a panicking epoch task fails this training run with
-            // a typed error instead of unwinding through the round loop
-            let results = stage.try_run(pool.as_deref(), |p| {
-                let machine = cluster.machine_of(p);
-                cluster.run_task(machine, || provider.local_epoch(p, &w, eta as f32))
-            })?;
+            // a typed error instead of unwinding through the round loop.
+            // Placement is failure-aware: `assign_machine` falls back to
+            // the next alive machine (typed error when none is).
+            let results = match (pool.as_deref(), cluster.speculation()) {
+                (Some(pl), Some(k)) => {
+                    stage.try_run_speculative(Some(pl), k, |p, attempt| {
+                        if attempt == 0 {
+                            let machine = cluster.assign_machine(p)?;
+                            cluster.run_task(machine, || {
+                                provider.local_epoch(p, &w, eta as f32)
+                            })
+                        } else {
+                            // backup copy: same math, but never charged to
+                            // the sim clock — the analytic speculation model
+                            // in `end_round` accounts for backup cost, and
+                            // double-charging would skew the ledger
+                            provider.local_epoch(p, &w, eta as f32)
+                        }
+                    })?
+                }
+                (pl, _) => stage.try_run(pl, |p| {
+                    let machine = cluster.assign_machine(p)?;
+                    cluster.run_task(machine, || provider.local_epoch(p, &w, eta as f32))
+                })?,
+            };
             let merge_t0 = tracer.start();
             let mut locals: Vec<(Vec<f32>, f64)> = Vec::with_capacity(parts);
             for (p, lw) in results.into_iter().enumerate() {
@@ -276,6 +296,29 @@ mod tests {
             assert_eq!(par.weights, serial.weights, "threads={threads}");
             assert_eq!(c.rounds(), 13); // 12 + initial broadcast
         }
+    }
+
+    #[test]
+    fn faults_and_speculation_leave_weights_bitwise_identical() {
+        use crate::cluster::{FaultKind, FaultPlan};
+        use std::sync::Arc;
+        let q = quad(8, 16, 9);
+        let p = SgdParams {
+            iters: 6,
+            ..Default::default()
+        };
+        let base = SGD::run(&q, &SimCluster::ec2(8), &p).unwrap();
+        // kill machine 2 at round 3 (crash, back after 2 rounds): placement
+        // shifts to survivors but the merged math must not move
+        let plan = Arc::new(FaultPlan::new());
+        plan.kill_at(3, 2, FaultKind::Crash { restart_after: 2 });
+        let c = SimCluster::ec2(8)
+            .with_executor(4)
+            .with_speculation(2.0)
+            .with_faults(plan);
+        let faulted = SGD::run(&q, &c, &p).unwrap();
+        assert_eq!(faulted.weights, base.weights);
+        assert_eq!(c.fault_stats().0, 1, "one kill applied");
     }
 
     #[test]

@@ -1,0 +1,136 @@
+//! Node-level fault-tolerance integration tests: lineage recovery under a
+//! multi-threaded executor, mid-job machine kills with a checkpointed
+//! input, fail-stop on total cluster loss, and the `mli chaos` CLI.
+
+use std::sync::Arc;
+
+use mli::algorithms::logreg::{Backend, LogRegParams};
+use mli::algorithms::{Algorithm, LogisticRegression};
+use mli::data::dense_gen;
+use mli::prelude::*;
+
+/// Build an 8-partition cached dataset, lose partitions 1/3/6, and force
+/// recovery through a full action. Returns (data, recoveries, losses).
+fn run_lineage_recovery(threads: Option<usize>) -> (Vec<i64>, u64, usize) {
+    let ctx = match threads {
+        Some(t) => EngineContext::new().with_executor(t),
+        None => EngineContext::new(),
+    };
+    let d = ctx
+        .parallelize((0..400).collect::<Vec<i64>>(), 8)
+        .map(|x| x * 7 + 1)
+        .cache();
+    d.materialize().unwrap();
+    for p in [1, 3, 6] {
+        d.invalidate_partition(p);
+        assert!(!d.is_cached(p));
+    }
+    let out = d.collect().unwrap();
+    (out, ctx.stats().2, ctx.failures.losses())
+}
+
+#[test]
+fn lineage_recovery_on_pool_bitwise_matches_serial() {
+    let (serial, serial_rec, serial_loss) = run_lineage_recovery(None);
+    let (par, par_rec, par_loss) = run_lineage_recovery(Some(4));
+    assert_eq!(serial, par, "recovered results must be bitwise identical");
+    assert_eq!(serial, (0..400).map(|x| x * 7 + 1).collect::<Vec<_>>());
+    assert_eq!((serial_rec, serial_loss), (3, 3));
+    assert_eq!((par_rec, par_loss), (3, 3));
+}
+
+#[test]
+fn mid_job_kill_with_checkpoint_is_bitwise_identical_to_failure_free() {
+    // Acceptance path: 8 machines, machine 2 crashes at round 3 mid-job
+    // (back after 2 rounds); the cached input is bound to the cluster and
+    // checkpointed, so its lost partition recovers from the snapshot. The
+    // trained weights must be bitwise-identical to the failure-free run.
+    let train = |plan: Option<Arc<FaultPlan>>| {
+        let ctx = EngineContext::new();
+        let data = dense_gen::generate(&ctx, 1024, 16, 8, 5).unwrap();
+        let table = data.table.cache();
+        let mut c = SimCluster::ec2(8);
+        if let Some(p) = plan {
+            c = c.with_faults(p);
+        }
+        table.dataset().bind_cluster(&c);
+        table.dataset().checkpoint(&c).unwrap();
+        assert!(table.dataset().is_checkpointed());
+        let algo = LogisticRegression::new(LogRegParams {
+            sgd: SgdParams {
+                iters: 6,
+                ..Default::default()
+            },
+            backend: Backend::Rust,
+        });
+        let model = algo.train(&table, &c).unwrap();
+        assert_eq!(table.num_rows().unwrap(), 1024, "table recovers fully");
+        (
+            model.weights,
+            c.fault_stats(),
+            ctx.checkpoint_hits(),
+            ctx.stats().2,
+        )
+    };
+
+    let (base_w, base_faults, _, _) = train(None);
+    assert_eq!(base_faults, (0, 0));
+
+    let plan = Arc::new(FaultPlan::new());
+    plan.kill_at(3, 2, FaultKind::Crash { restart_after: 2 });
+    let (w, faults, ck_hits, recoveries) = train(Some(plan));
+    assert_eq!(w, base_w, "faulted run must match failure-free bitwise");
+    assert_eq!(faults, (1, 1), "one kill, one restart");
+    assert!(ck_hits >= 1, "recovery must read the checkpoint");
+    assert!(recoveries >= 1, "lost partition counted as recovered");
+}
+
+#[test]
+fn permanent_kill_all_fails_with_typed_fault_recovery() {
+    // Killing every machine permanently mid-job must fail-stop with
+    // Error::FaultRecovery — no panic, no hang.
+    let ctx = EngineContext::new();
+    let data = dense_gen::generate(&ctx, 256, 8, 4, 3).unwrap();
+    let plan = Arc::new(FaultPlan::new());
+    for m in 0..4 {
+        plan.kill_at(2, m, FaultKind::Permanent);
+    }
+    let c = SimCluster::ec2(4).with_faults(plan);
+    let algo = LogisticRegression::new(LogRegParams {
+        sgd: SgdParams {
+            iters: 5,
+            ..Default::default()
+        },
+        backend: Backend::Rust,
+    });
+    let err = algo.train(&data.table, &c).unwrap_err();
+    assert!(err.is_fault_recovery(), "expected FaultRecovery, got: {err}");
+    assert_eq!(c.num_alive(), 0);
+}
+
+#[test]
+fn chaos_cli_smoke_logreg() {
+    // `mli chaos` end-to-end at CI scale: seeded random kills with
+    // restarts; the subcommand itself asserts baseline equivalence and
+    // returns Err (-> test failure) on any divergence.
+    use mli::util::cli::Args;
+    let argv: Vec<String> = [
+        "chaos",
+        "--algo",
+        "logreg",
+        "--machines",
+        "8",
+        "--iters",
+        "4",
+        "--seed",
+        "7",
+        "--kill-rate",
+        "0.1",
+        "--restart-after",
+        "2",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    mli::run_cli(Args::parse(&argv)).unwrap();
+}

@@ -327,9 +327,10 @@ impl ALS {
             }
         }
 
-        // per-entity accumulated gram (k x k) + rhs (k)
-        let mut grams: std::collections::HashMap<usize, (Vec<f32>, Vec<f32>)> =
-            std::collections::HashMap::new();
+        // per-entity accumulated gram (k x k) + rhs (k); ordered map so
+        // any iteration over it is deterministic (entity ids are Ord)
+        let mut grams: std::collections::BTreeMap<usize, (Vec<f32>, Vec<f32>)> =
+            std::collections::BTreeMap::new();
 
         for group in slots.chunks(u_pad) {
             let mut f = vec![0.0f32; u_pad * m * k_art];
@@ -362,8 +363,12 @@ impl ALS {
                 ],
             )?;
             let mut it = out.into_iter();
-            let g_all = it.next().unwrap(); // (u_pad, k_art, k_art)
-            let b_all = it.next().unwrap(); // (u_pad, k_art)
+            let mut next_out = |what: &str| {
+                it.next()
+                    .ok_or_else(|| Error::Engine(format!("als_gram_batch missing {what} output")))
+            };
+            let g_all = next_out("gram")?; // (u_pad, k_art, k_art)
+            let b_all = next_out("rhs")?; // (u_pad, k_art)
             for (slot, &(q, _, _)) in group.iter().enumerate() {
                 let entry = grams
                     .entry(q)

@@ -207,7 +207,9 @@ impl XlaLogregStep {
         }
         match best {
             Some((_, n, v)) => {
-                let a = rt.manifest().find("local_sgd_epoch", &v).unwrap();
+                let a = rt.manifest().find("local_sgd_epoch", &v).ok_or_else(|| {
+                    Error::Runtime(format!("local_sgd_epoch variant '{v}' missing from manifest"))
+                })?;
                 Ok((v, n, a.inputs[0].shape[1]))
             }
             None => Err(Error::Runtime(format!(
@@ -242,7 +244,9 @@ impl LocalStepProvider for XlaLogregStep {
             w_buf.buffer(),
             lr_buf.buffer(),
         ])?;
-        Ok(out.into_iter().next().unwrap())
+        out.into_iter()
+            .next()
+            .ok_or_else(|| Error::Runtime("local_sgd_epoch returned no outputs".into()))
     }
 
     fn local_grad(&self, p: usize, w: &[f32]) -> Result<(Vec<f32>, f64, f64)> {
@@ -252,8 +256,12 @@ impl LocalStepProvider for XlaLogregStep {
         let w_buf = exe.to_device(&Tensor::F32(w.to_vec(), vec![self.data.d_pad]))?;
         let out = exe.run_buffers(&[x.buffer(), y.buffer(), w_buf.buffer()])?;
         let mut it = out.into_iter();
-        let grad = it.next().unwrap();
-        let raw_loss = it.next().unwrap()[0] as f64;
+        let mut next_out = |what: &str| {
+            it.next()
+                .ok_or_else(|| Error::Runtime(format!("logreg_grad_batch missing {what} output")))
+        };
+        let grad = next_out("grad")?;
+        let raw_loss = next_out("loss")?[0] as f64;
         // padding correction: each all-zero padding row contributes
         // softplus(0) = ln 2 to the summed NLL (margin 0, y 0); the
         // gradient needs no correction (x = 0).

@@ -145,9 +145,13 @@ impl KMeans {
             ],
         )?;
         let mut it = out.into_iter();
-        let sums_f: Vec<f32> = it.next().unwrap();
-        let counts_f: Vec<f32> = it.next().unwrap();
-        let sse_f: Vec<f32> = it.next().unwrap();
+        let mut next_out = |what: &str| {
+            it.next()
+                .ok_or_else(|| Error::Runtime(format!("kmeans_step missing {what} output")))
+        };
+        let sums_f: Vec<f32> = next_out("sums")?;
+        let counts_f: Vec<f32> = next_out("counts")?;
+        let sse_f: Vec<f32> = next_out("sse")?;
         // padding correction
         let pad = (n_pad - real_rows) as f64;
         let mut origin_best = (f64::INFINITY, 0usize);

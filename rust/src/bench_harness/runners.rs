@@ -11,7 +11,7 @@ use crate::baselines::{graphlab, mahout, matlab, vw, SystemProfile, SystemRun};
 use crate::data::netflix::{self, NetflixConfig, RatingsData};
 use crate::data::dense_gen;
 use crate::engine::EngineContext;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::metrics::{fmt_time, Table};
 use crate::optim::{GdParams, SgdParams};
 use crate::trace::Tracer;
@@ -136,8 +136,10 @@ pub fn logreg_scaling_with(
         // VW (same compute, allreduce tree, C++ factor)
         let vw_times: Vec<f64> = (0..reps)
             .map(|_| {
-                vw::run_logreg(&data.table, m, &sgd, cfg.backend.clone())
-                    .map(|r| r.sim_seconds.unwrap())
+                vw::run_logreg(&data.table, m, &sgd, cfg.backend.clone()).and_then(|r| {
+                    r.sim_seconds
+                        .ok_or_else(|| Error::Engine("VW run reported no sim time".into()))
+                })
             })
             .collect::<Result<_>>()?;
         let vw = SystemRun {
@@ -168,15 +170,17 @@ pub fn logreg_scaling_with(
             sim_seconds: if matlab_runs.iter().any(|t| t.is_none()) {
                 None
             } else {
-                let ts: Vec<f64> = matlab_runs.iter().map(|t| t.unwrap()).collect();
+                let ts: Vec<f64> = matlab_runs.iter().copied().flatten().collect();
                 Some(crate::util::median(&ts))
             },
             quality: None,
         };
 
-        let (mli_t, vw_t) = (mli.sim_seconds.unwrap(), vw.sim_seconds.unwrap());
-        mli_base.get_or_insert(mli_t);
-        vw_base.get_or_insert(vw_t);
+        let missing = |s: &str| Error::Engine(format!("{s} run reported no sim time"));
+        let mli_t = mli.sim_seconds.ok_or_else(|| missing("MLI"))?;
+        let vw_t = vw.sim_seconds.ok_or_else(|| missing("VW"))?;
+        let mli_b = *mli_base.get_or_insert(mli_t);
+        let vw_b = *vw_base.get_or_insert(vw_t);
         table.row(vec![
             m.to_string(),
             n_total.to_string(),
@@ -184,8 +188,8 @@ pub fn logreg_scaling_with(
             fmt_time(mli.sim_seconds),
             fmt_time(vw.sim_seconds),
             fmt_time(matlab.sim_seconds),
-            format!("{:.2}", mli_t / mli_base.unwrap()),
-            format!("{:.2}", vw_t / vw_base.unwrap()),
+            format!("{:.2}", mli_t / mli_b),
+            format!("{:.2}", vw_t / vw_b),
         ]);
         let (tasks, _, recoveries) = ctx.stats();
         total_losses += ctx.failures.losses();
@@ -302,7 +306,7 @@ pub fn als_scaling_with(
             if ts.iter().any(|t| t.is_none()) {
                 None
             } else {
-                let v: Vec<f64> = ts.into_iter().map(|t| t.unwrap()).collect();
+                let v: Vec<f64> = ts.into_iter().flatten().collect();
                 Some(crate::util::median(&v))
             }
         };
@@ -329,8 +333,9 @@ pub fn als_scaling_with(
                 r
             })
             .collect::<Result<_>>()?;
-        let mli_t = med(mli_times).unwrap();
-        mli_base.get_or_insert(mli_t);
+        let mli_t = med(mli_times)
+            .ok_or_else(|| Error::Engine("MLI ALS run reported no sim time".into()))?;
+        let mli_b = *mli_base.get_or_insert(mli_t);
 
         // baselines: SAME compute backend as MLI so gaps come only from
         // topology + compute factors (DESIGN.md §3)
@@ -356,7 +361,7 @@ pub fn als_scaling_with(
             fmt_time(mh_t),
             fmt_time(ml_t),
             fmt_time(mx_t),
-            format!("{:.2}", mli_t / mli_base.unwrap()),
+            format!("{:.2}", mli_t / mli_b),
         ]);
     }
     table.note(format!(

@@ -460,6 +460,7 @@ impl SimCluster {
             let mut l = lock_unpoisoned(&self.ledger);
             assert!(l.current.is_none(), "begin_round inside an open round");
             l.current = Some(RoundStats::new(self.specs.len()));
+            // mli-lint: allow(D002) wall-clock attribution for trace spans, never the sim ledger
             l.round_wall = Some(Stopwatch::start());
             l.rounds
         };
@@ -469,6 +470,7 @@ impl SimCluster {
     /// Execute `f` on behalf of `machine`, really timing it and charging
     /// the measured seconds to that machine's budget for this round.
     pub fn run_task<T>(&self, machine: usize, f: impl FnOnce() -> T) -> T {
+        // mli-lint: allow(D002) by design: really measures f and charges the sim ledger
         let sw = Stopwatch::start();
         let out = f();
         let secs = sw.elapsed_secs();

@@ -15,6 +15,7 @@ use super::EngineContext;
 use crate::cluster::SimCluster;
 use crate::error::{Error, Result};
 use crate::exec::TaskSet;
+use crate::util::lock_unpoisoned;
 use crate::util::timer::Stopwatch;
 use std::sync::atomic::Ordering;
 
@@ -132,7 +133,7 @@ impl<T: Clone + Send + Sync + 'static> Dataset<T> {
         // (checked under the lock, computed outside it so sibling
         // partitions don't serialize)
         let was_invalidated = {
-            let cache = self.core.cache.lock().unwrap();
+            let cache = lock_unpoisoned(&self.core.cache);
             if let Some(slots) = cache.as_ref() {
                 if let Some(v) = &slots[p] {
                     self.core.ctx.cache_hits.fetch_add(1, Ordering::Relaxed);
@@ -146,7 +147,7 @@ impl<T: Clone + Send + Sync + 'static> Dataset<T> {
         // recovery that never replays lineage or consults the task
         // failure plan
         let from_checkpoint = {
-            let ck = self.core.checkpoint.lock().unwrap();
+            let ck = lock_unpoisoned(&self.core.checkpoint);
             ck.as_ref().map(|parts| parts[p].clone())
         };
         if let Some(v) = from_checkpoint {
@@ -154,7 +155,7 @@ impl<T: Clone + Send + Sync + 'static> Dataset<T> {
             if was_invalidated {
                 self.core.ctx.recoveries.fetch_add(1, Ordering::Relaxed);
             }
-            let mut cache = self.core.cache.lock().unwrap();
+            let mut cache = lock_unpoisoned(&self.core.cache);
             if let Some(slots) = cache.as_mut() {
                 if let Some(existing) = &slots[p] {
                     return Ok(existing.clone());
@@ -169,7 +170,7 @@ impl<T: Clone + Send + Sync + 'static> Dataset<T> {
             // count a lineage recomputation after simulated loss
             self.core.ctx.recoveries.fetch_add(1, Ordering::Relaxed);
         }
-        let mut cache = self.core.cache.lock().unwrap();
+        let mut cache = lock_unpoisoned(&self.core.cache);
         if let Some(slots) = cache.as_mut() {
             // if a racing task cached this slot first, serve its copy so
             // every consumer shares one allocation
@@ -212,6 +213,7 @@ impl<T: Clone + Send + Sync + 'static> Dataset<T> {
     fn compute_with_retries(&self, p: usize) -> Result<Vec<T>> {
         let policy = self.core.ctx.retry_policy();
         let attempts = policy.max_attempts.max(1);
+        // mli-lint: allow(D002) RetryPolicy timeout is a real wall-clock budget
         let budget = Stopwatch::start();
         let mut last_err: Option<Error> = None;
         for attempt in 0..attempts {
@@ -257,7 +259,7 @@ impl<T: Clone + Send + Sync + 'static> Dataset<T> {
     /// Enable caching (Spark `.cache()`); returns self for chaining.
     pub fn cache(self) -> Dataset<T> {
         {
-            let mut c = self.core.cache.lock().unwrap();
+            let mut c = lock_unpoisoned(&self.core.cache);
             if c.is_none() {
                 *c = Some(vec![None; self.core.num_partitions]);
             }
@@ -268,7 +270,7 @@ impl<T: Clone + Send + Sync + 'static> Dataset<T> {
     /// Simulate losing a cached partition (executor death). The next
     /// `partition(p)` recomputes through lineage and re-caches.
     pub fn invalidate_partition(&self, p: usize) {
-        let mut c = self.core.cache.lock().unwrap();
+        let mut c = lock_unpoisoned(&self.core.cache);
         if let Some(slots) = c.as_mut() {
             if slots[p].take().is_some() {
                 self.core.ctx.failures.mark_lost(self.core.id, p);
@@ -278,10 +280,7 @@ impl<T: Clone + Send + Sync + 'static> Dataset<T> {
 
     /// True if partition `p` is resident in cache.
     pub fn is_cached(&self, p: usize) -> bool {
-        self.core
-            .cache
-            .lock()
-            .unwrap()
+        lock_unpoisoned(&self.core.cache)
             .as_ref()
             .is_some_and(|s| s[p].is_some())
     }
@@ -299,7 +298,7 @@ impl<T: Clone + Send + Sync + 'static> Dataset<T> {
     /// called between rounds. Idempotent: re-checkpointing an already
     /// checkpointed dataset is a no-op and charges nothing.
     pub fn checkpoint(&self, cluster: &SimCluster) -> Result<()> {
-        if self.core.checkpoint.lock().unwrap().is_some() {
+        if lock_unpoisoned(&self.core.checkpoint).is_some() {
             return Ok(());
         }
         let tracer = self.core.ctx.tracer();
@@ -328,7 +327,7 @@ impl<T: Clone + Send + Sync + 'static> Dataset<T> {
         };
         cluster.charge_hdfs_roundtrip(bytes / cluster.num_machines() as u64);
         cluster.end_round();
-        *self.core.checkpoint.lock().unwrap() = Some(parts);
+        *lock_unpoisoned(&self.core.checkpoint) = Some(parts);
         if let Some(t0) = t0 {
             tracer.span(
                 format!("checkpoint:dataset-{}", self.core.id),
@@ -344,7 +343,7 @@ impl<T: Clone + Send + Sync + 'static> Dataset<T> {
 
     /// True once [`Dataset::checkpoint`] has materialized this dataset.
     pub fn is_checkpointed(&self) -> bool {
-        self.core.checkpoint.lock().unwrap().is_some()
+        lock_unpoisoned(&self.core.checkpoint).is_some()
     }
 
     /// Wire machine-loss events from `cluster` into this dataset's cache:
@@ -553,7 +552,7 @@ impl<T: Clone + Send + Sync + 'static> Dataset<T> {
         let parent = self.clone();
         let buckets: Arc<Mutex<Option<Vec<Vec<T>>>>> = Arc::new(Mutex::new(None));
         Dataset::new(self.core.ctx.clone(), parts, move |p| {
-            let mut b = buckets.lock().unwrap();
+            let mut b = lock_unpoisoned(&buckets);
             if b.is_none() {
                 let src = parent.partitions()?;
                 let mut out = vec![Vec::new(); parts];
@@ -593,7 +592,7 @@ where
         let shuffled: Arc<Mutex<Option<Vec<Vec<(K, V)>>>>> = Arc::new(Mutex::new(None));
         let f = Arc::new(f);
         Dataset::new(self.core.ctx.clone(), parts, move |p| {
-            let mut s = shuffled.lock().unwrap();
+            let mut s = lock_unpoisoned(&shuffled);
             if s.is_none() {
                 *s = Some(shuffle::shuffle_reduce(&parent, parts, f.as_ref())?);
             }
@@ -607,7 +606,7 @@ where
         let parts = self.num_partitions();
         let shuffled: Arc<Mutex<Option<Vec<Vec<(K, Vec<V>)>>>>> = Arc::new(Mutex::new(None));
         Dataset::new(self.core.ctx.clone(), parts, move |p| {
-            let mut s = shuffled.lock().unwrap();
+            let mut s = lock_unpoisoned(&shuffled);
             if s.is_none() {
                 *s = Some(shuffle::shuffle_group(&parent, parts)?);
             }
@@ -625,11 +624,12 @@ where
         let parts = self.num_partitions();
         let built: Arc<Mutex<Option<Vec<Vec<(K, (V, W))>>>>> = Arc::new(Mutex::new(None));
         Dataset::new(self.core.ctx.clone(), parts, move |p| {
-            let mut s = built.lock().unwrap();
+            let mut s = lock_unpoisoned(&built);
             if s.is_none() {
                 // build hash map from b, stream a through it in partition
                 // order (lookup-only map: output order follows a, so it is
                 // deterministic), hash-partition out
+                // mli-lint: allow(D001) lookup-only: iteration never touches map order
                 let mut rhs: HashMap<K, Vec<W>> = HashMap::new();
                 for part in b.partitions()? {
                     for (k, w) in part.iter() {

@@ -4,7 +4,7 @@
 //! failure is a necessity").
 
 use crate::exec::lock_unpoisoned;
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Mutex;
 
 /// Deterministic failure plan shared by all datasets of a context.
@@ -20,10 +20,12 @@ use std::sync::Mutex;
 /// partition tasks race on the `exec` thread pool: budget decrements are
 /// atomic per attempt, and a (dataset, partition) budget is only ever
 /// consumed by the one task computing that partition.
+// Ordered collections so any future iteration (reporting, draining) is
+// deterministic by construction — (dataset, partition) keys are Ord.
 #[derive(Default)]
 pub struct FailurePlan {
-    fail_budget: Mutex<HashMap<(usize, usize), usize>>,
-    lost: Mutex<HashSet<(usize, usize)>>,
+    fail_budget: Mutex<BTreeMap<(usize, usize), usize>>,
+    lost: Mutex<BTreeSet<(usize, usize)>>,
 }
 
 impl FailurePlan {

@@ -146,11 +146,11 @@ impl EngineContext {
         if let Some(pool) = self.executor() {
             pool.set_tracer(tracer.clone());
         }
-        *self.tracer.lock().unwrap_or_else(|e| e.into_inner()) = tracer;
+        *lock_unpoisoned(&self.tracer) = tracer;
     }
 
     pub fn tracer(&self) -> Arc<Tracer> {
-        self.tracer.lock().unwrap_or_else(|e| e.into_inner()).clone()
+        lock_unpoisoned(&self.tracer).clone()
     }
 
     /// Share an existing pool (e.g. the `SimCluster`'s) instead of

@@ -26,6 +26,7 @@ pub fn bucket_of<K: Hash>(key: &K, parts: usize) -> usize {
 /// A hash map that remembers first-insertion order: `entries` is the
 /// canonical (ordered) storage, `idx` the key -> position index.
 pub(crate) struct OrderedMap<K, V> {
+    // mli-lint: allow(D001) lookup-only index; iteration always uses `entries`
     idx: HashMap<K, usize>,
     entries: Vec<(K, V)>,
 }
@@ -33,6 +34,7 @@ pub(crate) struct OrderedMap<K, V> {
 impl<K: Clone + Hash + Eq, V: Clone> OrderedMap<K, V> {
     pub(crate) fn new() -> OrderedMap<K, V> {
         OrderedMap {
+            // mli-lint: allow(D001) lookup-only index (see field docs)
             idx: HashMap::new(),
             entries: Vec::new(),
         }

@@ -51,6 +51,10 @@ pub enum Error {
     /// timeout) was exhausted. Jobs fail-stop with this typed error
     /// instead of panicking or hanging.
     FaultRecovery(String),
+
+    /// `mli lint --deny` found violations of the determinism /
+    /// concurrency invariants (see `crate::lint` and docs/lint.md).
+    Lint(String),
 }
 
 impl fmt::Display for Error {
@@ -68,6 +72,7 @@ impl fmt::Display for Error {
             Error::Xla(m) => write!(f, "xla error: {m}"),
             Error::Exec(m) => write!(f, "executor error: {m}"),
             Error::FaultRecovery(m) => write!(f, "fault recovery failed: {m}"),
+            Error::Lint(m) => write!(f, "lint failed: {m}"),
         }
     }
 }

@@ -42,11 +42,15 @@ pub mod queue;
 pub mod worker;
 
 use std::fmt;
-use std::sync::{Mutex, MutexGuard};
 
 pub use pool::{TaskSet, ThreadPool};
 pub use queue::TaskQueue;
 pub use worker::{is_pool_thread, WorkerStats};
+
+// Poison-recovering lock helper, now shared repo-wide from `util`; the
+// pool's internal hot-path mutexes additionally run under the debug-only
+// lock-order cycle detector (`util::lockdep::TrackedMutex`).
+pub(crate) use crate::util::lock_unpoisoned;
 
 /// A task in a stage panicked. Carries the stage label and the panic
 /// payload rendered as text.
@@ -68,14 +72,4 @@ impl From<ExecError> for crate::error::Error {
     fn from(e: ExecError) -> Self {
         crate::error::Error::Exec(e.to_string())
     }
-}
-
-/// Lock a mutex, recovering from poisoning. Poisoning here only means
-/// "some task panicked while holding the guard"; every structure the
-/// pool guards (deques, completion counts, metrics) is valid at every
-/// point a panic can unwind through, so the data is safe to reuse and
-/// recovery is the correct policy — the panic itself is reported via
-/// the owning stage's [`ExecError`], not via lock poisoning.
-pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(|e| e.into_inner())
 }

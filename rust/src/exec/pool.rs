@@ -9,6 +9,7 @@ use super::worker::{self, WorkerMetrics, WorkerStats};
 use super::{lock_unpoisoned, ExecError};
 use crate::metrics::Metrics;
 use crate::trace::{TraceSink, Tracer};
+use crate::util::lockdep::TrackedMutex;
 use crate::util::timer::Stopwatch;
 
 /// A unit of work: the boxed job plus an optional stage label (for trace
@@ -40,34 +41,34 @@ impl Task {
 /// of the stage's tasks produced (workers catch the unwind and record it
 /// here; the submitting thread turns it into an [`ExecError`]).
 pub(crate) struct Completion {
-    remaining: Mutex<usize>,
+    remaining: TrackedMutex<usize>,
     cv: Condvar,
-    panic: Mutex<Option<String>>,
+    panic: TrackedMutex<Option<String>>,
 }
 
 impl Completion {
     fn new(n: usize) -> Completion {
         Completion {
-            remaining: Mutex::new(n),
+            remaining: TrackedMutex::new("exec.completion.remaining", n),
             cv: Condvar::new(),
-            panic: Mutex::new(None),
+            panic: TrackedMutex::new("exec.completion.panic", None),
         }
     }
 
     /// Record a panic message for the stage (first one wins).
     pub(crate) fn record_panic(&self, msg: String) {
-        let mut p = lock_unpoisoned(&self.panic);
+        let mut p = self.panic.lock();
         if p.is_none() {
             *p = Some(msg);
         }
     }
 
     fn take_panic(&self) -> Option<String> {
-        lock_unpoisoned(&self.panic).take()
+        self.panic.lock().take()
     }
 
     pub(crate) fn signal(&self) {
-        let mut r = lock_unpoisoned(&self.remaining);
+        let mut r = self.remaining.lock();
         *r = r.saturating_sub(1);
         if *r == 0 {
             self.cv.notify_all();
@@ -75,9 +76,9 @@ impl Completion {
     }
 
     fn wait(&self) {
-        let mut r = lock_unpoisoned(&self.remaining);
+        let mut r = self.remaining.lock();
         while *r > 0 {
-            r = self.cv.wait(r).unwrap_or_else(|e| e.into_inner());
+            r = self.remaining.wait(&self.cv, r);
         }
     }
 }
@@ -87,9 +88,9 @@ pub(crate) struct Shared {
     pub(crate) queues: Vec<TaskQueue>,
     pub(crate) injector: TaskQueue,
     pub(crate) metrics: Vec<WorkerMetrics>,
-    pub(crate) park_lock: Mutex<()>,
+    pub(crate) park_lock: TrackedMutex<()>,
     pub(crate) park_cv: Condvar,
-    tracer: Mutex<Arc<Tracer>>,
+    tracer: TrackedMutex<Arc<Tracer>>,
     shutdown: AtomicBool,
 }
 
@@ -103,7 +104,7 @@ impl Shared {
     }
 
     pub(crate) fn tracer(&self) -> Arc<Tracer> {
-        lock_unpoisoned(&self.tracer).clone()
+        self.tracer.lock().clone()
     }
 }
 
@@ -115,7 +116,7 @@ impl Shared {
 /// pool shuts the workers down and joins them.
 pub struct ThreadPool {
     shared: Arc<Shared>,
-    handles: Mutex<Vec<JoinHandle<()>>>,
+    handles: TrackedMutex<Vec<JoinHandle<()>>>,
     next: AtomicUsize,
 }
 
@@ -127,9 +128,9 @@ impl ThreadPool {
             queues: (0..threads).map(|_| TaskQueue::new()).collect(),
             injector: TaskQueue::new(),
             metrics: (0..threads).map(|_| WorkerMetrics::default()).collect(),
-            park_lock: Mutex::new(()),
+            park_lock: TrackedMutex::new("exec.park", ()),
             park_cv: Condvar::new(),
-            tracer: Mutex::new(Tracer::disabled()),
+            tracer: TrackedMutex::new("exec.tracer", Tracer::disabled()),
             shutdown: AtomicBool::new(false),
         });
         let handles = (0..threads)
@@ -143,7 +144,7 @@ impl ThreadPool {
             .collect();
         Arc::new(ThreadPool {
             shared,
-            handles: Mutex::new(handles),
+            handles: TrackedMutex::new("exec.handles", handles),
             next: AtomicUsize::new(0),
         })
     }
@@ -164,7 +165,7 @@ impl ThreadPool {
     /// attribution) and park spans into it. A disabled tracer (the
     /// default) costs one relaxed load per task.
     pub fn set_tracer(&self, tracer: Arc<Tracer>) {
-        *lock_unpoisoned(&self.shared.tracer) = tracer;
+        *self.shared.tracer.lock() = tracer;
     }
 
     pub fn tracer(&self) -> Arc<Tracer> {
@@ -176,7 +177,7 @@ impl ThreadPool {
     /// `injector_pops` counter attributes it).
     pub fn spawn(&self, job: impl FnOnce() + Send + 'static) {
         self.shared.injector.push(Task::detached(Box::new(job)));
-        let _g = lock_unpoisoned(&self.shared.park_lock);
+        let _g = self.shared.park_lock.lock();
         self.shared.park_cv.notify_all();
     }
 
@@ -198,7 +199,7 @@ impl ThreadPool {
     fn submit(&self, task: Task) {
         let i = self.next_index();
         self.shared.queues[i].push(task);
-        let _g = lock_unpoisoned(&self.shared.park_lock);
+        let _g = self.shared.park_lock.lock();
         self.shared.park_cv.notify_all();
     }
 
@@ -389,7 +390,7 @@ impl ThreadPool {
         // each slot keeps (attempt, result) of the lowest attempt seen
         let slots: Vec<Mutex<Option<(usize, T)>>> = (0..n).map(|_| Mutex::new(None)).collect();
         let state = (
-            Mutex::new(SpecState {
+            TrackedMutex::new("exec.spec.state", SpecState {
                 done: vec![false; n],
                 completed: 0,
                 finished_secs: Vec::with_capacity(n),
@@ -429,7 +430,7 @@ impl ThreadPool {
                                     }
                                     was_empty && attempt > 0
                                 };
-                                let mut st = lock_unpoisoned(lock);
+                                let mut st = lock.lock();
                                 if backup_first {
                                     st.wins += 1;
                                 }
@@ -441,7 +442,7 @@ impl ThreadPool {
                                 cv.notify_all();
                             }
                             Err(p) => {
-                                let mut st = lock_unpoisoned(lock);
+                                let mut st = lock.lock();
                                 if st.panic.is_none() {
                                     st.panic = Some(worker::panic_message(p.as_ref()));
                                 }
@@ -477,15 +478,14 @@ impl ThreadPool {
             let stage_sw = Stopwatch::start();
             loop {
                 let to_speculate: Vec<usize> = {
-                    let st = lock_unpoisoned(&state.0);
+                    let st = state.0.lock();
                     if st.completed >= n {
                         break;
                     }
-                    let (st, _timeout) = state
-                        .1
-                        .wait_timeout(st, std::time::Duration::from_millis(2))
-                        .unwrap_or_else(|e| e.into_inner());
-                    let mut st = st;
+                    let (mut st, _timeout) =
+                        state
+                            .0
+                            .wait_timeout(&state.1, st, std::time::Duration::from_millis(2));
                     if st.completed >= n {
                         break;
                     }
@@ -520,7 +520,7 @@ impl ThreadPool {
             c.wait();
         }
         let (wins, panic) = {
-            let st = lock_unpoisoned(&state.0);
+            let st = state.0.lock();
             (st.wins, st.panic.clone())
         };
         if let Some(t0) = stage_start {
@@ -624,11 +624,11 @@ impl Drop for ThreadPool {
             // about to wait on `park_cv` (releasing the lock atomically with
             // the wait), so the notify below cannot land in the window
             // between a worker's shutdown check and its park.
-            let _g = lock_unpoisoned(&self.shared.park_lock);
+            let _g = self.shared.park_lock.lock();
             self.shared.shutdown.store(true, Ordering::Release);
             self.shared.park_cv.notify_all();
         }
-        for h in lock_unpoisoned(&self.handles).drain(..) {
+        for h in self.handles.lock().drain(..) {
             let _ = h.join();
         }
     }

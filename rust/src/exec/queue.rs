@@ -10,39 +10,48 @@
 //! mutex keeps the code obviously correct.
 
 use std::collections::VecDeque;
-use std::sync::Mutex;
 
-use super::lock_unpoisoned;
 use super::pool::Task;
+use crate::util::lockdep::TrackedMutex;
 
-/// A mutex-protected double-ended task queue.
-#[derive(Default)]
+/// A mutex-protected double-ended task queue. The mutex is a
+/// [`TrackedMutex`] so debug builds order-check every acquisition; queue
+/// locks are leaves (each op locks and releases without nesting), so the
+/// tracker only ever records edges *into* them.
 pub struct TaskQueue {
-    inner: Mutex<VecDeque<Task>>,
+    inner: TrackedMutex<VecDeque<Task>>,
+}
+
+impl Default for TaskQueue {
+    fn default() -> TaskQueue {
+        TaskQueue::new()
+    }
 }
 
 impl TaskQueue {
     pub fn new() -> TaskQueue {
-        TaskQueue::default()
+        TaskQueue {
+            inner: TrackedMutex::new("exec.queue", VecDeque::new()),
+        }
     }
 
     /// Owner-side push (back of the deque).
     pub(crate) fn push(&self, task: Task) {
-        lock_unpoisoned(&self.inner).push_back(task);
+        self.inner.lock().push_back(task);
     }
 
     /// Owner-side pop (back of the deque, LIFO).
     pub(crate) fn pop(&self) -> Option<Task> {
-        lock_unpoisoned(&self.inner).pop_back()
+        self.inner.lock().pop_back()
     }
 
     /// Thief-side steal (front of the deque, FIFO).
     pub(crate) fn steal(&self) -> Option<Task> {
-        lock_unpoisoned(&self.inner).pop_front()
+        self.inner.lock().pop_front()
     }
 
     pub fn len(&self) -> usize {
-        lock_unpoisoned(&self.inner).len()
+        self.inner.lock().len()
     }
 
     pub fn is_empty(&self) -> bool {

@@ -6,7 +6,6 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use super::lock_unpoisoned;
 use super::pool::{Shared, Task};
 
 /// Per-worker counters, written by the worker thread with relaxed atomics
@@ -94,7 +93,7 @@ pub(crate) fn run(shared: Arc<Shared>, idx: usize) {
         // `park_lock`, and we re-check both conditions while holding it,
         // so neither a task pushed nor a shutdown raised between our
         // failed scan and the wait can be missed.
-        let guard = lock_unpoisoned(&shared.park_lock);
+        let guard = shared.park_lock.lock();
         if shared.is_shutdown() {
             break;
         }
@@ -107,10 +106,10 @@ pub(crate) fn run(shared: Arc<Shared>, idx: usize) {
         let sw = crate::util::timer::Stopwatch::start();
         // Timeout is belt-and-braces only; correctness comes from the
         // re-check above.
-        let (g, _timed_out) = shared
-            .park_cv
-            .wait_timeout(guard, Duration::from_millis(100))
-            .unwrap_or_else(|e| e.into_inner());
+        let (g, _timed_out) =
+            shared
+                .park_lock
+                .wait_timeout(&shared.park_cv, guard, Duration::from_millis(100));
         drop(g);
         shared.metrics[idx]
             .idle_nanos

@@ -39,6 +39,7 @@ pub mod engine;
 pub mod error;
 pub mod exec;
 pub mod features;
+pub mod lint;
 pub mod localmatrix;
 pub mod metrics;
 pub mod mltable;
@@ -616,6 +617,51 @@ pub fn run_cli(args: util::cli::Args) -> Result<()> {
             println!("{}", bench_harness::loc::fig3a().to_markdown());
             Ok(())
         }
+        Some("lint") => {
+            // mli lint [--root DIR] [--rule D001,C001,...] [--json [FILE]]
+            //          [--deny] [--list-rules]
+            if args.has_flag("list-rules") {
+                for rule in lint::rules::ALL_RULES {
+                    println!("{rule}  {}", lint::rules::rule_summary(rule));
+                }
+                return Ok(());
+            }
+            let rules: Vec<String> = match args.get("rule") {
+                Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+                None => Vec::new(),
+            };
+            for r in &rules {
+                if !lint::rules::ALL_RULES.contains(&r.as_str()) {
+                    return Err(Error::Config(format!(
+                        "unknown lint rule '{r}' (try `mli lint --list-rules`)"
+                    )));
+                }
+            }
+            let cfg = lint::LintConfig {
+                root: args.get_str("root", ".").into(),
+                rules,
+            };
+            let report = lint::run(&cfg)?;
+            if let Some(path) = args.get("json") {
+                // CI artifact: JSON to the file, human summary to stdout
+                std::fs::write(path, format!("{}\n", report.to_json()))?;
+                print!("{}", report.to_text());
+                println!("json report written to {path}");
+            } else if args.has_flag("json") {
+                println!("{}", report.to_json());
+            } else {
+                print!("{}", report.to_text());
+            }
+            if args.has_flag("deny") && !report.clean() {
+                return Err(Error::Lint(format!(
+                    "{} finding{} (see report above); annotate intentional sites \
+                     with `// mli-lint: allow(<rule>) <reason>`",
+                    report.diags.len(),
+                    if report.diags.len() == 1 { "" } else { "s" }
+                )));
+            }
+            Ok(())
+        }
         Some("help") | None => {
             println!("mli — MLI: An API for Distributed Machine Learning (reproduction)");
             println!();
@@ -630,6 +676,9 @@ pub fn run_cli(args: util::cli::Args) -> Result<()> {
             println!("        [--seed 7] [--kill-rate 0.1]    recovered run matches a failure-");
             println!("        [--restart-after R] [--spec-k K] free baseline (R=0: permanent)");
             println!("  loc                                   Fig 2a/3a lines-of-code tables");
+            println!("  lint [--deny] [--rule D001,..]        determinism/concurrency invariant");
+            println!("       [--json [file]] [--root DIR]     checker over rust/{{src,tests,benches}}");
+            println!("       [--list-rules]                   (see docs/lint.md)");
             println!("  help                                  this message");
             println!();
             println!("  --threads T   evaluate partitions on a T-thread work-stealing pool");

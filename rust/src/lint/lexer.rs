@@ -1,0 +1,449 @@
+//! A minimal hand-rolled Rust tokenizer for the lint pass.
+//!
+//! This is not a full Rust lexer — it is exactly enough to make the lint
+//! rules decidable on this codebase without external crates: it strips
+//! comments (collecting `mli-lint:` directives), strings (including raw
+//! and byte strings), char literals (disambiguated from lifetimes), and
+//! yields identifiers, numbers and punctuation with 1-based line numbers.
+//! Multi-char punctuation is merged only where a rule needs it (`::`,
+//! `->`, `=>`); everything else is one token per char.
+
+/// Token classes the rules dispatch on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `let`, `HashMap`, ...).
+    Ident,
+    /// `'a` — kept distinct so lifetimes never look like char literals.
+    Lifetime,
+    /// Integer or float literal (suffix included).
+    Number,
+    /// String / raw string / byte string / char literal (contents dropped:
+    /// rules must never match inside literals).
+    Literal,
+    /// Punctuation: single char, or one of the merged pairs `::` `->` `=>`.
+    Punct,
+}
+
+/// One lexed token.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    /// 1-based source line of the token's first character.
+    pub line: usize,
+}
+
+impl Token {
+    pub fn is(&self, kind: TokKind, text: &str) -> bool {
+        self.kind == kind && self.text == text
+    }
+}
+
+/// An inline lint directive collected from a `//` comment:
+/// `// mli-lint: allow(<RULE>) <reason>` or
+/// `// mli-lint: allow-file(<RULE>) <reason>`.
+#[derive(Debug, Clone)]
+pub struct Directive {
+    /// Rule id the directive names, e.g. "D001".
+    pub rule: String,
+    /// 1-based line the comment appears on.
+    pub line: usize,
+    /// True for `allow-file` (whole-file suppression).
+    pub file_wide: bool,
+}
+
+/// Lexer output: the token stream plus any lint directives found in
+/// comments along the way.
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub directives: Vec<Directive>,
+}
+
+/// Tokenize `src`. Unterminated constructs (string, block comment) simply
+/// consume to end-of-file — the linter is tolerant by design.
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut tokens = Vec::new();
+    let mut directives = Vec::new();
+
+    // Helper closures can't borrow line mutably alongside the main loop,
+    // so line accounting is done inline wherever a region is consumed.
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_whitespace() => {
+                i += 1;
+            }
+            '/' if i + 1 < b.len() && b[i + 1] == '/' => {
+                // line comment: scan for a lint directive, then skip
+                let start = i;
+                while i < b.len() && b[i] != '\n' {
+                    i += 1;
+                }
+                let text: String = b[start..i].iter().collect();
+                parse_directive(&text, line, &mut directives);
+            }
+            '/' if i + 1 < b.len() && b[i + 1] == '*' => {
+                // block comment, nested per Rust rules
+                let mut depth = 1usize;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == '\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == '/' && i + 1 < b.len() && b[i + 1] == '*' {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == '*' && i + 1 < b.len() && b[i + 1] == '/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            '"' => {
+                let tok_line = line;
+                i += 1;
+                while i < b.len() {
+                    match b[i] {
+                        '\\' => i += 2,
+                        '"' => {
+                            i += 1;
+                            break;
+                        }
+                        '\n' => {
+                            line += 1;
+                            i += 1;
+                        }
+                        _ => i += 1,
+                    }
+                }
+                tokens.push(Token {
+                    kind: TokKind::Literal,
+                    text: String::from("\"\""),
+                    line: tok_line,
+                });
+            }
+            'r' | 'b' if starts_raw_or_byte_string(&b, i) => {
+                let tok_line = line;
+                // skip the r/b/br prefix
+                while i < b.len() && (b[i] == 'r' || b[i] == 'b') {
+                    i += 1;
+                }
+                let mut hashes = 0usize;
+                while i < b.len() && b[i] == '#' {
+                    hashes += 1;
+                    i += 1;
+                }
+                if i < b.len() && b[i] == '"' {
+                    i += 1;
+                    if hashes == 0 {
+                        // raw string without hashes: plain `"` terminates,
+                        // no escapes
+                        while i < b.len() && b[i] != '"' {
+                            if b[i] == '\n' {
+                                line += 1;
+                            }
+                            i += 1;
+                        }
+                        i += 1; // closing quote
+                    } else {
+                        // terminated by `"` + `hashes` consecutive `#`
+                        'outer: while i < b.len() {
+                            if b[i] == '\n' {
+                                line += 1;
+                                i += 1;
+                                continue;
+                            }
+                            if b[i] == '"' {
+                                let mut k = 0usize;
+                                while k < hashes && i + 1 + k < b.len() && b[i + 1 + k] == '#' {
+                                    k += 1;
+                                }
+                                if k == hashes {
+                                    i += 1 + hashes;
+                                    break 'outer;
+                                }
+                            }
+                            i += 1;
+                        }
+                    }
+                }
+                tokens.push(Token {
+                    kind: TokKind::Literal,
+                    text: String::from("\"\""),
+                    line: tok_line,
+                });
+            }
+            '\'' => {
+                // lifetime or char literal. `'a` (ident char, no closing
+                // quote right after) is a lifetime; everything else is a
+                // char literal.
+                let tok_line = line;
+                let is_lifetime = i + 1 < b.len()
+                    && (b[i + 1].is_alphabetic() || b[i + 1] == '_')
+                    && !(i + 2 < b.len() && b[i + 2] == '\'');
+                if is_lifetime {
+                    let start = i;
+                    i += 1;
+                    while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                        i += 1;
+                    }
+                    tokens.push(Token {
+                        kind: TokKind::Lifetime,
+                        text: b[start..i].iter().collect(),
+                        line: tok_line,
+                    });
+                } else {
+                    i += 1;
+                    if i < b.len() && b[i] == '\\' {
+                        i += 2; // escape + escaped char
+                        // \u{...}
+                        if i < b.len() && b[i - 1] == 'u' && b[i] == '{' {
+                            while i < b.len() && b[i] != '}' {
+                                i += 1;
+                            }
+                            i += 1;
+                        }
+                    } else if i < b.len() {
+                        i += 1;
+                    }
+                    if i < b.len() && b[i] == '\'' {
+                        i += 1;
+                    }
+                    tokens.push(Token {
+                        kind: TokKind::Literal,
+                        text: String::from("''"),
+                        line: tok_line,
+                    });
+                }
+            }
+            c if c.is_ascii_digit() => {
+                let tok_line = line;
+                let start = i;
+                while i < b.len()
+                    && (b[i].is_ascii_alphanumeric()
+                        || b[i] == '_'
+                        || (b[i] == '.'
+                            && i + 1 < b.len()
+                            && b[i + 1].is_ascii_digit()
+                            && !b[start..i].contains(&'.')))
+                {
+                    i += 1;
+                }
+                tokens.push(Token {
+                    kind: TokKind::Number,
+                    text: b[start..i].iter().collect(),
+                    line: tok_line,
+                });
+            }
+            c if c.is_alphabetic() || c == '_' => {
+                let tok_line = line;
+                let start = i;
+                while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                tokens.push(Token {
+                    kind: TokKind::Ident,
+                    text: b[start..i].iter().collect(),
+                    line: tok_line,
+                });
+            }
+            _ => {
+                let tok_line = line;
+                // merge the pairs rules care about
+                let two: Option<&str> = if i + 1 < b.len() {
+                    match (c, b[i + 1]) {
+                        (':', ':') => Some("::"),
+                        ('-', '>') => Some("->"),
+                        ('=', '>') => Some("=>"),
+                        _ => None,
+                    }
+                } else {
+                    None
+                };
+                if let Some(t) = two {
+                    tokens.push(Token {
+                        kind: TokKind::Punct,
+                        text: t.to_string(),
+                        line: tok_line,
+                    });
+                    i += 2;
+                } else {
+                    tokens.push(Token {
+                        kind: TokKind::Punct,
+                        text: c.to_string(),
+                        line: tok_line,
+                    });
+                    i += 1;
+                }
+            }
+        }
+    }
+    Lexed { tokens, directives }
+}
+
+/// Does `r`, `b`, `rb`/`br` at `i` start a raw/byte string (and not an
+/// identifier like `result` or `bytes`)?
+fn starts_raw_or_byte_string(b: &[char], i: usize) -> bool {
+    let mut j = i;
+    // at most two prefix letters (r, b, br, rb — rustc only accepts r/b/br,
+    // but over-accepting here is harmless)
+    let mut letters = 0;
+    while j < b.len() && (b[j] == 'r' || b[j] == 'b') && letters < 2 {
+        j += 1;
+        letters += 1;
+    }
+    let mut k = j;
+    while k < b.len() && b[k] == '#' {
+        k += 1;
+    }
+    // must reach a quote, and `b"..."` (no hash) is a plain byte string;
+    // `r` requires either a hash or a quote right after
+    if k >= b.len() || b[k] != '"' {
+        return false;
+    }
+    // exclude identifiers ending in r/b followed by... not possible: we
+    // are called only when position i itself is 'r'/'b' starting a token,
+    // which the main loop guarantees (previous char was not ident-ish)
+    true
+}
+
+/// Parse `// mli-lint: allow(<RULE>) ...` / `allow-file(<RULE>) ...`.
+fn parse_directive(comment: &str, line: usize, out: &mut Vec<Directive>) {
+    let Some(pos) = comment.find("mli-lint:") else {
+        return;
+    };
+    let rest = comment[pos + "mli-lint:".len()..].trim_start();
+    let file_wide = rest.starts_with("allow-file(");
+    let open = if file_wide {
+        "allow-file("
+    } else if rest.starts_with("allow(") {
+        "allow("
+    } else {
+        return;
+    };
+    let body = &rest[open.len()..];
+    let Some(close) = body.find(')') else {
+        return;
+    };
+    let rule = body[..close].trim().to_string();
+    if !rule.is_empty() {
+        out.push(Directive {
+            rule,
+            line,
+            file_wide,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_stripped() {
+        let src = r##"
+// HashMap in a comment
+/* HashMap in /* a nested */ block */
+let s = "HashMap in a string";
+let r = r#"HashMap raw "quoted" here"#;
+let c = 'H';
+real_ident();
+"##;
+        let ids = idents(src);
+        assert!(!ids.contains(&"HashMap".to_string()), "{ids:?}");
+        assert!(ids.contains(&"real_ident".to_string()));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x }";
+        let lexed = lex(src);
+        let lifetimes: Vec<_> = lexed
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .collect();
+        assert_eq!(lifetimes.len(), 3);
+        // the code after a lifetime still lexes (a char-literal
+        // misparse would swallow `a>(x`)
+        assert!(lexed.tokens.iter().any(|t| t.is(TokKind::Ident, "str")));
+    }
+
+    #[test]
+    fn merged_puncts() {
+        let lexed = lex("fn f() -> std::io::Result<()> { match x { _ => 1 } }");
+        let puncts: Vec<_> = lexed
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Punct && t.text.len() == 2)
+            .map(|t| t.text.clone())
+            .collect();
+        assert!(puncts.contains(&"->".to_string()));
+        assert!(puncts.contains(&"::".to_string()));
+        assert!(puncts.contains(&"=>".to_string()));
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_constructs() {
+        let src = "let a = \"two\nlines\";\nmarker();";
+        let lexed = lex(src);
+        let marker = lexed
+            .tokens
+            .iter()
+            .find(|t| t.is(TokKind::Ident, "marker"))
+            .unwrap();
+        assert_eq!(marker.line, 3);
+    }
+
+    #[test]
+    fn directives_parsed() {
+        let src = "// mli-lint: allow(D001) lookup-only\nx();\n// mli-lint: allow-file(E001) generated\n";
+        let lexed = lex(src);
+        assert_eq!(lexed.directives.len(), 2);
+        assert_eq!(lexed.directives[0].rule, "D001");
+        assert_eq!(lexed.directives[0].line, 1);
+        assert!(!lexed.directives[0].file_wide);
+        assert!(lexed.directives[1].file_wide);
+        assert_eq!(lexed.directives[1].rule, "E001");
+    }
+
+    #[test]
+    fn byte_and_raw_strings() {
+        let src = "let x = b\"HashMap\"; let y = br#\"HashSet\"#; let z = rest;";
+        let ids = idents(src);
+        assert!(!ids.contains(&"HashMap".to_string()));
+        assert!(!ids.contains(&"HashSet".to_string()));
+        // `rest` starts with r but is an ident, not a raw string
+        assert!(ids.contains(&"rest".to_string()));
+    }
+
+    #[test]
+    fn numbers_with_suffixes_and_ranges() {
+        let lexed = lex("for i in 0..10u64 { let f = 1.5f32; }");
+        let nums: Vec<_> = lexed
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Number)
+            .map(|t| t.text.clone())
+            .collect();
+        assert_eq!(nums, vec!["0", "10u64", "1.5f32"]);
+    }
+}

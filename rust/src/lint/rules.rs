@@ -1,0 +1,793 @@
+//! The lint rules and the per-file analysis context they share.
+//!
+//! Every rule is a pure function over the token stream plus precomputed
+//! regions (test code, `use` declarations, `Result`-returning function
+//! bodies). Rules never look inside comments or string literals — the
+//! lexer already dropped them — so a rule firing always points at real
+//! code. See `docs/lint.md` for the rule inventory and rationale.
+
+use super::lexer::{TokKind, Token};
+
+/// One lint finding.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Repo-relative path with forward slashes (e.g. `rust/src/exec/pool.rs`).
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    /// Rule id, e.g. "D001".
+    pub rule: &'static str,
+    pub message: String,
+    pub suggestion: String,
+}
+
+/// All rule ids, in report order.
+pub const ALL_RULES: [&str; 5] = ["D001", "D002", "C001", "C002", "E001"];
+
+/// Short per-rule description (for `--list-rules` and the JSON header).
+pub fn rule_summary(rule: &str) -> &'static str {
+    match rule {
+        "D001" => "unordered HashMap/HashSet in a determinism-sensitive module",
+        "D002" => "wall-clock read inside a simulated-time module",
+        "C001" => "raw .lock().unwrap()/.expect() instead of lock_unpoisoned",
+        "C002" => "lock guard held across a ThreadPool submit/run call",
+        "E001" => "unwrap()/expect() inside a Result-returning library function",
+        _ => "unknown rule",
+    }
+}
+
+/// Precomputed per-file analysis context.
+pub struct FileCtx<'a> {
+    /// Repo-relative path, forward slashes.
+    pub rel: &'a str,
+    pub tokens: &'a [Token],
+    /// File lives under `rust/tests/` or `rust/benches/`.
+    pub is_test_file: bool,
+    /// Inclusive line ranges covered by `#[cfg(test)]` / `#[test]` items.
+    pub test_lines: Vec<(usize, usize)>,
+    /// Token-index ranges (start..=end) of `use` declarations.
+    pub use_spans: Vec<(usize, usize)>,
+    /// (body_start, body_end, returns_result) token-index ranges per fn.
+    pub fn_spans: Vec<(usize, usize, bool)>,
+}
+
+impl<'a> FileCtx<'a> {
+    pub fn new(rel: &'a str, tokens: &'a [Token]) -> FileCtx<'a> {
+        let is_test_file = rel.starts_with("rust/tests/") || rel.starts_with("rust/benches/");
+        FileCtx {
+            rel,
+            tokens,
+            is_test_file,
+            test_lines: find_test_regions(tokens),
+            use_spans: find_use_spans(tokens),
+            fn_spans: find_fn_spans(tokens),
+        }
+    }
+
+    /// True when `line` is test code (test file, or inside a
+    /// `#[cfg(test)]` / `#[test]` region).
+    pub fn in_test_code(&self, line: usize) -> bool {
+        self.is_test_file || self.test_lines.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+
+    fn in_use_decl(&self, idx: usize) -> bool {
+        self.use_spans.iter().any(|&(a, b)| a <= idx && idx <= b)
+    }
+
+    /// Does the *innermost* fn enclosing token `idx` return `Result`?
+    fn in_result_fn(&self, idx: usize) -> bool {
+        self.fn_spans
+            .iter()
+            .filter(|&&(a, b, _)| a <= idx && idx <= b)
+            .max_by_key(|&&(a, _, _)| a)
+            .map(|&(_, _, r)| r)
+            .unwrap_or(false)
+    }
+}
+
+/// Find line ranges of test items: an outer attribute containing the
+/// ident `test` (but not `not`, so `#[cfg(not(test))]` stays live code)
+/// marks the following item (to its matching `}` or terminating `;`).
+fn find_test_regions(tokens: &[Token]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 1 < tokens.len() {
+        if tokens[i].is(TokKind::Punct, "#") && tokens[i + 1].is(TokKind::Punct, "[") {
+            // scan the attribute body to its matching `]`
+            let mut j = i + 2;
+            let mut depth = 1usize;
+            let mut saw_test = false;
+            let mut saw_not = false;
+            while j < tokens.len() && depth > 0 {
+                match (&tokens[j].kind, tokens[j].text.as_str()) {
+                    (TokKind::Punct, "[") => depth += 1,
+                    (TokKind::Punct, "]") => depth -= 1,
+                    (TokKind::Ident, "test") => saw_test = true,
+                    (TokKind::Ident, "not") => saw_not = true,
+                    _ => {}
+                }
+                j += 1;
+            }
+            if saw_test && !saw_not {
+                // the region runs from the attribute to the end of the
+                // next item: first `{`..matching `}`, or a `;` if one
+                // comes first (e.g. `mod tests;`)
+                let start_line = tokens[i].line;
+                let mut k = j;
+                let mut end_line = start_line;
+                while k < tokens.len() {
+                    if tokens[k].is(TokKind::Punct, ";") {
+                        end_line = tokens[k].line;
+                        break;
+                    }
+                    if tokens[k].is(TokKind::Punct, "{") {
+                        let mut d = 1usize;
+                        let mut m = k + 1;
+                        while m < tokens.len() && d > 0 {
+                            match tokens[m].text.as_str() {
+                                "{" => d += 1,
+                                "}" => d -= 1,
+                                _ => {}
+                            }
+                            m += 1;
+                        }
+                        end_line = tokens[m.saturating_sub(1)].line;
+                        break;
+                    }
+                    k += 1;
+                }
+                out.push((start_line, end_line));
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Token-index spans of `use` declarations (from `use` to its `;`).
+fn find_use_spans(tokens: &[Token]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < tokens.len() {
+        if tokens[i].is(TokKind::Ident, "use") {
+            let start = i;
+            while i < tokens.len() && !tokens[i].is(TokKind::Punct, ";") {
+                i += 1;
+            }
+            out.push((start, i));
+        }
+        i += 1;
+    }
+    out
+}
+
+/// For every `fn`, the token span of its body and whether its declared
+/// return type mentions `Result`.
+fn find_fn_spans(tokens: &[Token]) -> Vec<(usize, usize, bool)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < tokens.len() {
+        if tokens[i].is(TokKind::Ident, "fn") {
+            // scan the signature: past the parameter list, then inspect
+            // the return type (if any) until the body `{` or a `;`
+            // (trait method without body)
+            let mut j = i + 1;
+            // find the opening paren of the parameter list
+            while j < tokens.len()
+                && !tokens[j].is(TokKind::Punct, "(")
+                && !tokens[j].is(TokKind::Punct, "{")
+                && !tokens[j].is(TokKind::Punct, ";")
+            {
+                j += 1;
+            }
+            if j >= tokens.len() || !tokens[j].is(TokKind::Punct, "(") {
+                i += 1;
+                continue;
+            }
+            // matching close paren
+            let mut d = 1usize;
+            j += 1;
+            while j < tokens.len() && d > 0 {
+                match tokens[j].text.as_str() {
+                    "(" => d += 1,
+                    ")" => d -= 1,
+                    _ => {}
+                }
+                j += 1;
+            }
+            // return type region: tokens until `{` or `;`
+            let mut returns_result = false;
+            let mut k = j;
+            while k < tokens.len()
+                && !tokens[k].is(TokKind::Punct, "{")
+                && !tokens[k].is(TokKind::Punct, ";")
+            {
+                if tokens[k].is(TokKind::Ident, "Result") {
+                    returns_result = true;
+                }
+                k += 1;
+            }
+            if k < tokens.len() && tokens[k].is(TokKind::Punct, "{") {
+                // body span via brace matching
+                let body_start = k;
+                let mut bd = 1usize;
+                let mut m = k + 1;
+                while m < tokens.len() && bd > 0 {
+                    match tokens[m].text.as_str() {
+                        "{" => bd += 1,
+                        "}" => bd -= 1,
+                        _ => {}
+                    }
+                    m += 1;
+                }
+                out.push((body_start, m.saturating_sub(1), returns_result));
+                i = body_start + 1; // recurse into the body for nested fns
+                continue;
+            }
+            i = k;
+        }
+        i += 1;
+    }
+    out
+}
+
+// ---- rules ---------------------------------------------------------------
+
+/// D001: unordered `HashMap`/`HashSet` in determinism-sensitive modules.
+/// Iterating either feeds RandomState order into merges/exports, breaking
+/// the bitwise-determinism contract. `use` declarations and test code are
+/// exempt; lookup-only maps get an `allow` with the reason documented.
+pub fn d001(ctx: &FileCtx<'_>, out: &mut Vec<Diagnostic>) {
+    const SENSITIVE: [&str; 5] = [
+        "rust/src/engine/",
+        "rust/src/optim/",
+        "rust/src/algorithms/",
+        "rust/src/trace/",
+        "rust/src/metrics/",
+    ];
+    if !SENSITIVE.iter().any(|p| ctx.rel.starts_with(p)) {
+        return;
+    }
+    for (i, t) in ctx.tokens.iter().enumerate() {
+        if t.kind != TokKind::Ident || (t.text != "HashMap" && t.text != "HashSet") {
+            continue;
+        }
+        if ctx.in_use_decl(i) || ctx.in_test_code(t.line) {
+            continue;
+        }
+        out.push(Diagnostic {
+            file: ctx.rel.to_string(),
+            line: t.line,
+            rule: "D001",
+            message: format!(
+                "unordered `{}` in a determinism-sensitive module (merge/export \
+                 paths must not depend on RandomState iteration order)",
+                t.text
+            ),
+            suggestion: "use BTreeMap/BTreeSet or the engine's OrderedMap, or sort \
+                         before iterating; for a lookup-only map add \
+                         `// mli-lint: allow(D001) <reason>`"
+                .to_string(),
+        });
+    }
+}
+
+/// D002: wall-clock reads (`Instant::now`, `SystemTime::now`,
+/// `Stopwatch::start`) inside the simulated-time modules. The `SimCluster`
+/// ledger is analytic — leaking real time into it silently breaks
+/// simulated-vs-wall attribution. Legitimately-wall-clock sites (retry
+/// budgets, real task timing charged by design) carry `allow` annotations.
+pub fn d002(ctx: &FileCtx<'_>, out: &mut Vec<Diagnostic>) {
+    const SENSITIVE: [&str; 2] = ["rust/src/cluster/", "rust/src/engine/"];
+    if !SENSITIVE.iter().any(|p| ctx.rel.starts_with(p)) {
+        return;
+    }
+    let toks = ctx.tokens;
+    for i in 0..toks.len().saturating_sub(2) {
+        let (a, b, c) = (&toks[i], &toks[i + 1], &toks[i + 2]);
+        if a.kind != TokKind::Ident || !b.is(TokKind::Punct, "::") || c.kind != TokKind::Ident {
+            continue;
+        }
+        let hit = match (a.text.as_str(), c.text.as_str()) {
+            ("Instant", "now") | ("SystemTime", "now") => true,
+            ("Stopwatch", "start") => true,
+            _ => false,
+        };
+        if !hit || ctx.in_test_code(a.line) {
+            continue;
+        }
+        out.push(Diagnostic {
+            file: ctx.rel.to_string(),
+            line: a.line,
+            rule: "D002",
+            message: format!(
+                "wall-clock read `{}::{}` inside a simulated-time module",
+                a.text, c.text
+            ),
+            suggestion: "charge simulated time through the SimCluster ledger instead; \
+                         if this site is wall-clock by design (retry budget, measured \
+                         task cost) add `// mli-lint: allow(D002) <reason>`"
+                .to_string(),
+        });
+    }
+}
+
+/// C001: `.lock().unwrap()` / `.lock().expect(..)`. A panicking pool task
+/// poisons any mutex it held; unwrapping the poison error aborts unrelated
+/// threads. `util::lock_unpoisoned` (or `lockdep::TrackedMutex`) recovers
+/// instead — see the failure contract in `exec`.
+pub fn c001(ctx: &FileCtx<'_>, out: &mut Vec<Diagnostic>) {
+    let toks = ctx.tokens;
+    for i in 0..toks.len().saturating_sub(5) {
+        if toks[i].is(TokKind::Punct, ".")
+            && toks[i + 1].is(TokKind::Ident, "lock")
+            && toks[i + 2].is(TokKind::Punct, "(")
+            && toks[i + 3].is(TokKind::Punct, ")")
+            && toks[i + 4].is(TokKind::Punct, ".")
+            && toks[i + 5].kind == TokKind::Ident
+            && (toks[i + 5].text == "unwrap" || toks[i + 5].text == "expect")
+        {
+            out.push(Diagnostic {
+                file: ctx.rel.to_string(),
+                line: toks[i + 5].line,
+                rule: "C001",
+                message: format!(
+                    "raw `.lock().{}()` — unwrapping a poisoned mutex aborts \
+                     threads that did nothing wrong",
+                    toks[i + 5].text
+                ),
+                suggestion: "use `crate::util::lock_unpoisoned(&mutex)` (poison \
+                             recovery) or `util::lockdep::TrackedMutex` (recovery + \
+                             debug lock-order checking)"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// C002: a mutex guard bound by `let` is still live when a `ThreadPool`
+/// submit/run-style call occurs in the same scope. Blocking a stage on a
+/// held lock invites the classic guard-across-await deadlock shape (a
+/// worker task needing the same lock can never finish). Lexical
+/// approximation: a guard dies at its scope's `}` or an explicit
+/// `drop(guard)`.
+pub fn c002(ctx: &FileCtx<'_>, out: &mut Vec<Diagnostic>) {
+    if ctx.is_test_file {
+        return;
+    }
+    const POOL_CALLS: [&str; 5] = ["run", "try_run", "try_run_speculative", "submit", "spawn"];
+    let toks = ctx.tokens;
+    // live guards: (name, depth_bound_at, activation_token_index)
+    let mut guards: Vec<(String, usize, usize)> = Vec::new();
+    let mut depth = 0usize;
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = &toks[i];
+        match (t.kind, t.text.as_str()) {
+            (TokKind::Punct, "{") => depth += 1,
+            (TokKind::Punct, "}") => {
+                depth = depth.saturating_sub(1);
+                guards.retain(|&(_, d, _)| d <= depth);
+            }
+            (TokKind::Ident, "let") => {
+                // does this statement bind a lock guard?
+                // binder: `let [mut] <ident> = ...;` (tuple/struct patterns
+                // are not tracked)
+                let mut j = i + 1;
+                if j < toks.len() && toks[j].is(TokKind::Ident, "mut") {
+                    j += 1;
+                }
+                if j < toks.len() && toks[j].kind == TokKind::Ident {
+                    let name = toks[j].text.clone();
+                    // statement end: `;` back at this depth
+                    let mut d = 0i64;
+                    let mut k = j + 1;
+                    let mut end = None;
+                    let mut locks = false;
+                    while k < toks.len() {
+                        match toks[k].text.as_str() {
+                            "{" | "(" | "[" => d += 1,
+                            "}" | ")" | "]" => d -= 1,
+                            ";" if d == 0 => {
+                                end = Some(k);
+                                break;
+                            }
+                            _ => {}
+                        }
+                        // only a depth-0 lock call makes the binding a
+                        // guard; a lock inside a nested closure (e.g.
+                        // `let job = Box::new(move || { ..lock().. })`)
+                        // is acquired later, not held by this binding
+                        if d == 0
+                            && (toks[k].is(TokKind::Ident, "lock_unpoisoned")
+                                || (toks[k].is(TokKind::Punct, ".")
+                                    && k + 3 < toks.len()
+                                    && toks[k + 1].is(TokKind::Ident, "lock")
+                                    && toks[k + 2].is(TokKind::Punct, "(")
+                                    && toks[k + 3].is(TokKind::Punct, ")")))
+                        {
+                            locks = true;
+                        }
+                        if d < 0 {
+                            break; // malformed / end of enclosing block
+                        }
+                        k += 1;
+                    }
+                    if locks {
+                        if let Some(end) = end {
+                            guards.push((name, depth, end));
+                        }
+                    }
+                }
+            }
+            (TokKind::Ident, "drop") => {
+                // `drop(<guard>)` releases it early
+                if i + 3 < toks.len()
+                    && toks[i + 1].is(TokKind::Punct, "(")
+                    && toks[i + 2].kind == TokKind::Ident
+                    && toks[i + 3].is(TokKind::Punct, ")")
+                {
+                    let name = &toks[i + 2].text;
+                    guards.retain(|(g, _, _)| g != name);
+                }
+            }
+            (TokKind::Punct, ".") => {
+                if i + 2 < toks.len()
+                    && toks[i + 1].kind == TokKind::Ident
+                    && POOL_CALLS.contains(&toks[i + 1].text.as_str())
+                    && toks[i + 2].is(TokKind::Punct, "(")
+                {
+                    let line = toks[i + 1].line;
+                    let live: Vec<&str> = guards
+                        .iter()
+                        .filter(|&&(_, _, act)| act < i)
+                        .map(|(g, _, _)| g.as_str())
+                        .collect();
+                    if !live.is_empty() && !ctx.in_test_code(line) {
+                        out.push(Diagnostic {
+                            file: ctx.rel.to_string(),
+                            line,
+                            rule: "C002",
+                            message: format!(
+                                "pool call `.{}(...)` while lock guard{} [{}] still live",
+                                toks[i + 1].text,
+                                if live.len() > 1 { "s" } else { "" },
+                                live.join(", ")
+                            ),
+                            suggestion: "drop the guard (or narrow its scope with a \
+                                         block) before submitting work to the pool; \
+                                         a worker needing the same lock deadlocks the \
+                                         stage"
+                                .to_string(),
+                        });
+                    }
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+}
+
+/// E001: `.unwrap()` / `.expect(..)` inside a function that returns
+/// `Result` — the typed `Error` should propagate with `?` instead of
+/// panicking past the caller's error handling. Test code is exempt;
+/// `.lock().unwrap()` is C001's finding, not double-reported here.
+pub fn e001(ctx: &FileCtx<'_>, out: &mut Vec<Diagnostic>) {
+    if ctx.is_test_file {
+        return;
+    }
+    let toks = ctx.tokens;
+    for i in 0..toks.len().saturating_sub(2) {
+        if !toks[i].is(TokKind::Punct, ".") {
+            continue;
+        }
+        let name = &toks[i + 1];
+        if name.kind != TokKind::Ident || (name.text != "unwrap" && name.text != "expect") {
+            continue;
+        }
+        if !toks[i + 2].is(TokKind::Punct, "(") {
+            continue;
+        }
+        // `.lock().unwrap()` is C001's domain
+        if i >= 3
+            && toks[i - 3].is(TokKind::Ident, "lock")
+            && toks[i - 2].is(TokKind::Punct, "(")
+            && toks[i - 1].is(TokKind::Punct, ")")
+        {
+            continue;
+        }
+        // a call whose result feeds `?` propagates, it doesn't panic —
+        // this also covers same-named user methods returning Result
+        // (e.g. the JSON parser's own `self.expect(b'{')?`)
+        let mut d = 1usize;
+        let mut j = i + 3;
+        while j < toks.len() && d > 0 {
+            match toks[j].text.as_str() {
+                "(" => d += 1,
+                ")" => d -= 1,
+                _ => {}
+            }
+            j += 1;
+        }
+        if j < toks.len() && toks[j].is(TokKind::Punct, "?") {
+            continue;
+        }
+        if ctx.in_test_code(name.line) || !ctx.in_result_fn(i) {
+            continue;
+        }
+        out.push(Diagnostic {
+            file: ctx.rel.to_string(),
+            line: name.line,
+            rule: "E001",
+            message: format!(
+                "`.{}(..)` inside a Result-returning function — a panic here \
+                 bypasses the typed Error path",
+                name.text
+            ),
+            suggestion: "propagate with `?` (ok_or_else(..) for Options); if the \
+                         invariant genuinely cannot fail, add \
+                         `// mli-lint: allow(E001) <reason>`"
+                .to_string(),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn run_rule(
+        rel: &str,
+        src: &str,
+        rule: fn(&FileCtx<'_>, &mut Vec<Diagnostic>),
+    ) -> Vec<Diagnostic> {
+        let lexed = lex(src);
+        let ctx = FileCtx::new(rel, &lexed.tokens);
+        let mut out = Vec::new();
+        rule(&ctx, &mut out);
+        out
+    }
+
+    // -- D001 --------------------------------------------------------------
+
+    #[test]
+    fn d001_fires_in_sensitive_module() {
+        let diags = run_rule(
+            "rust/src/engine/foo.rs",
+            "fn f() { let m: HashMap<u32, u32> = HashMap::new(); }",
+            d001,
+        );
+        assert_eq!(diags.len(), 2);
+        assert_eq!(diags[0].rule, "D001");
+        assert_eq!(diags[0].line, 1);
+    }
+
+    #[test]
+    fn d001_ignores_use_decls_tests_and_other_modules() {
+        // use declaration: exempt
+        assert!(run_rule(
+            "rust/src/engine/foo.rs",
+            "use std::collections::HashMap;\n",
+            d001
+        )
+        .is_empty());
+        // cfg(test) region: exempt
+        assert!(run_rule(
+            "rust/src/engine/foo.rs",
+            "#[cfg(test)]\nmod tests {\n fn f() { let m = HashMap::new(); }\n}\n",
+            d001
+        )
+        .is_empty());
+        // non-sensitive module: exempt
+        assert!(run_rule(
+            "rust/src/data/foo.rs",
+            "fn f() { let m = HashMap::new(); }",
+            d001
+        )
+        .is_empty());
+        // comments / strings never fire (lexer strips them)
+        assert!(run_rule(
+            "rust/src/engine/foo.rs",
+            "// HashMap\nfn f() { let s = \"HashMap\"; }",
+            d001
+        )
+        .is_empty());
+    }
+
+    // -- D002 --------------------------------------------------------------
+
+    #[test]
+    fn d002_fires_on_wall_clock_in_sim_modules() {
+        let diags = run_rule(
+            "rust/src/cluster/foo.rs",
+            "fn f() { let t = Instant::now(); let s = Stopwatch::start(); }",
+            d002,
+        );
+        assert_eq!(diags.len(), 2);
+        assert!(diags.iter().all(|d| d.rule == "D002"));
+    }
+
+    #[test]
+    fn d002_ignores_tests_and_exec() {
+        assert!(run_rule(
+            "rust/src/exec/foo.rs",
+            "fn f() { let t = Instant::now(); }",
+            d002
+        )
+        .is_empty());
+        assert!(run_rule(
+            "rust/src/cluster/foo.rs",
+            "#[test]\nfn t() { let t = Instant::now(); }",
+            d002
+        )
+        .is_empty());
+    }
+
+    // -- C001 --------------------------------------------------------------
+
+    #[test]
+    fn c001_fires_on_raw_lock_unwrap_even_multiline() {
+        let diags = run_rule(
+            "rust/src/foo.rs",
+            "fn f() { let g = m.lock().unwrap(); }",
+            c001,
+        );
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].rule, "C001");
+        // chained across lines (the metrics::add shape)
+        let diags = run_rule(
+            "rust/src/foo.rs",
+            "fn f() {\n let g = m\n .lock()\n .expect(\"poisoned\");\n}",
+            c001,
+        );
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].line, 4);
+    }
+
+    #[test]
+    fn c001_negative_cases() {
+        // lock_unpoisoned and unwrap_or_else are the sanctioned spellings
+        assert!(run_rule(
+            "rust/src/foo.rs",
+            "fn f() { let g = lock_unpoisoned(&m); }",
+            c001
+        )
+        .is_empty());
+        assert!(run_rule(
+            "rust/src/foo.rs",
+            "fn f() { let g = m.lock().unwrap_or_else(|e| e.into_inner()); }",
+            c001
+        )
+        .is_empty());
+    }
+
+    // -- C002 --------------------------------------------------------------
+
+    #[test]
+    fn c002_fires_when_guard_live_across_pool_call() {
+        let diags = run_rule(
+            "rust/src/foo.rs",
+            "fn f() { let g = lock_unpoisoned(&m); pool.try_run(4, |i| i); }",
+            c002,
+        );
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].rule, "C002");
+        assert!(diags[0].message.contains("g"), "{}", diags[0].message);
+    }
+
+    #[test]
+    fn c002_respects_drop_and_scope() {
+        // dropped before the call: fine
+        assert!(run_rule(
+            "rust/src/foo.rs",
+            "fn f() { let g = lock_unpoisoned(&m); drop(g); pool.run(4, |i| i); }",
+            c002
+        )
+        .is_empty());
+        // guard scoped to an inner block: fine
+        assert!(run_rule(
+            "rust/src/foo.rs",
+            "fn f() { { let g = lock_unpoisoned(&m); } pool.run(4, |i| i); }",
+            c002
+        )
+        .is_empty());
+        // pool call inside the guard's own initializer: the guard is not
+        // held yet
+        assert!(run_rule(
+            "rust/src/foo.rs",
+            "fn f() { let v = s.lock().len(); }",
+            c002
+        )
+        .is_empty());
+        // a lock inside a nested closure does not make the binding a
+        // guard (the try_run job-box shape)
+        assert!(run_rule(
+            "rust/src/foo.rs",
+            "fn f() { let job = Box::new(move || { *lock_unpoisoned(&m) = 1; }); \
+             pool.submit(job); }",
+            c002
+        )
+        .is_empty());
+    }
+
+    // -- E001 --------------------------------------------------------------
+
+    #[test]
+    fn e001_fires_only_in_result_fns() {
+        let diags = run_rule(
+            "rust/src/foo.rs",
+            "fn f() -> Result<u32> { let v = x.unwrap(); Ok(v) }",
+            e001,
+        );
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].rule, "E001");
+        // non-Result fn: allowed
+        assert!(run_rule(
+            "rust/src/foo.rs",
+            "fn f() -> u32 { x.unwrap() }",
+            e001
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn e001_inner_fn_shadows_outer_result() {
+        // the innermost fn decides: a non-Result helper inside a Result fn
+        // may unwrap
+        let src = "fn outer() -> Result<()> {\n fn helper() -> u32 { x.unwrap() }\n Ok(())\n}";
+        assert!(run_rule("rust/src/foo.rs", src, e001).is_empty());
+        // and the reverse nests correctly too
+        let src = "fn outer() {\n fn helper() -> Result<u32> { Ok(x.unwrap()) }\n}";
+        assert_eq!(run_rule("rust/src/foo.rs", src, e001).len(), 1);
+    }
+
+    #[test]
+    fn e001_skips_lock_unwrap_and_tests() {
+        // C001's finding, not E001's
+        assert!(run_rule(
+            "rust/src/foo.rs",
+            "fn f() -> Result<()> { let g = m.lock().unwrap(); Ok(()) }",
+            e001
+        )
+        .is_empty());
+        assert!(run_rule(
+            "rust/src/foo.rs",
+            "#[cfg(test)]\nmod tests {\n fn f() -> Result<()> { Ok(x.unwrap()) }\n}",
+            e001
+        )
+        .is_empty());
+        // unwrap_or / unwrap_or_default are fine
+        assert!(run_rule(
+            "rust/src/foo.rs",
+            "fn f() -> Result<u32> { Ok(x.unwrap_or(0)) }",
+            e001
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn e001_allows_question_mark_propagation() {
+        // a same-named user method whose Result feeds `?` propagates —
+        // the JSON parser's own `self.expect(b'{')?` shape
+        assert!(run_rule(
+            "rust/src/foo.rs",
+            "fn f(&mut self) -> Result<()> { self.expect(b'{')?; Ok(()) }",
+            e001
+        )
+        .is_empty());
+        // without the `?` it still fires
+        assert_eq!(
+            run_rule(
+                "rust/src/foo.rs",
+                "fn f() -> Result<()> { x.expect(\"boom\"); Ok(()) }",
+                e001
+            )
+            .len(),
+            1
+        );
+    }
+}

@@ -312,7 +312,7 @@ pub fn svd(a: &DenseMatrix) -> Result<(DenseMatrix, Vec<f64>, DenseMatrix)> {
             (norm, j)
         })
         .collect();
-    sv.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    sv.sort_by(|a, b| b.0.total_cmp(&a.0));
     let mut u_out = DenseMatrix::zeros(m, n);
     let mut vt_out = DenseMatrix::zeros(n, n);
     let mut s_out = Vec::with_capacity(n);
@@ -392,7 +392,7 @@ pub fn eigen_sym(a: &DenseMatrix) -> Result<(Vec<f64>, DenseMatrix)> {
         }
     }
     let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (d.get(i, i), i)).collect();
-    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    pairs.sort_by(|a, b| b.0.total_cmp(&a.0));
     let vals: Vec<f64> = pairs.iter().map(|&(v, _)| v).collect();
     let mut vecs = DenseMatrix::zeros(n, n);
     for (newj, &(_, oldj)) in pairs.iter().enumerate() {

@@ -41,6 +41,7 @@ impl CsrMatrix {
         for (r, c, v) in triplets {
             if last == Some((r, c)) {
                 // duplicate (r, c): sum contributions
+                // mli-lint: allow(E001) last == Some((r, c)) implies a prior push
                 *values.last_mut().unwrap() += v;
             } else {
                 indices.push(c);

@@ -6,6 +6,7 @@ use std::fmt::Write as _;
 use std::sync::Mutex;
 
 use crate::util;
+use crate::util::lock_unpoisoned;
 
 /// A named collection of counters and timing series. Mutex-guarded
 /// (`Send + Sync`) so `exec` pool workers and the driver can record into
@@ -26,32 +27,28 @@ impl Metrics {
     }
 
     pub fn add(&self, name: &str, v: u64) {
-        *self
-            .counters
-            .lock()
-            .unwrap()
+        *lock_unpoisoned(&self.counters)
             .entry(name.to_string())
             .or_insert(0) += v;
     }
 
     pub fn counter(&self, name: &str) -> u64 {
-        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+        lock_unpoisoned(&self.counters)
+            .get(name)
+            .copied()
+            .unwrap_or(0)
     }
 
     /// Append a sample (seconds, losses, whatever) to a named series.
     pub fn observe(&self, name: &str, v: f64) {
-        self.series
-            .lock()
-            .unwrap()
+        lock_unpoisoned(&self.series)
             .entry(name.to_string())
             .or_default()
             .push(v);
     }
 
     pub fn series(&self, name: &str) -> Vec<f64> {
-        self.series
-            .lock()
-            .unwrap()
+        lock_unpoisoned(&self.series)
             .get(name)
             .cloned()
             .unwrap_or_default()
@@ -65,14 +62,14 @@ impl Metrics {
     /// Render everything as an aligned text report.
     pub fn report(&self) -> String {
         let mut out = String::new();
-        let counters = self.counters.lock().unwrap();
+        let counters = lock_unpoisoned(&self.counters);
         if !counters.is_empty() {
             out.push_str("counters:\n");
             for (k, v) in counters.iter() {
                 let _ = writeln!(out, "  {k:<40} {v}");
             }
         }
-        let series = self.series.lock().unwrap();
+        let series = lock_unpoisoned(&self.series);
         if !series.is_empty() {
             out.push_str("series (n / mean / median / stddev):\n");
             for (k, s) in series.iter() {

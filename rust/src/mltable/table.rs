@@ -108,6 +108,9 @@ impl MLTable {
         let schema = self.schema.project(idxs)?;
         let idxs = idxs.to_vec();
         let data = self.data.map(move |r| {
+            // idxs were validated by schema.project above; this per-row
+            // closure runs lazily and has no Result channel to propagate
+            // mli-lint: allow(E001) validated by schema.project; lazy closure
             r.project(&idxs).expect("validated projection")
         });
         Ok(MLTable { data, schema })

@@ -26,6 +26,7 @@ use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
+use crate::util::lock_unpoisoned;
 use crate::xla;
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
 
@@ -242,11 +243,13 @@ impl Runtime {
     /// Process-wide runtime, shared across all worker threads.
     pub fn global() -> Result<Arc<Runtime>> {
         static GLOBAL: Mutex<Option<Arc<Runtime>>> = Mutex::new(None);
-        let mut g = GLOBAL.lock().unwrap();
-        if g.is_none() {
-            *g = Some(Arc::new(Runtime::new(Runtime::artifact_dir())?));
+        let mut g = lock_unpoisoned(&GLOBAL);
+        if let Some(rt) = g.as_ref() {
+            return Ok(rt.clone());
         }
-        Ok(g.as_ref().unwrap().clone())
+        let rt = Arc::new(Runtime::new(Runtime::artifact_dir())?);
+        *g = Some(rt.clone());
+        Ok(rt)
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -261,7 +264,7 @@ impl Runtime {
     /// Fetch (compiling + caching on first use) an executable.
     pub fn executable(&self, entry: &str, variant: &str) -> Result<Arc<Executable>> {
         let key = format!("{entry}__{variant}");
-        if let Some(e) = self.cache.lock().unwrap().get(&key) {
+        if let Some(e) = lock_unpoisoned(&self.cache).get(&key) {
             return Ok(e.clone());
         }
         let spec = self
@@ -282,7 +285,7 @@ impl Runtime {
             client: self.client.clone(),
             spec,
         });
-        self.cache.lock().unwrap().insert(key, e.clone());
+        lock_unpoisoned(&self.cache).insert(key, e.clone());
         Ok(e)
     }
 
@@ -296,17 +299,14 @@ impl Runtime {
     /// Record one execution in the metrics counter (callers on the raw
     /// buffer path count themselves).
     pub fn count_exec(&self, entry: &str, variant: &str) {
-        *self
-            .exec_count
-            .lock()
-            .unwrap()
+        *lock_unpoisoned(&self.exec_count)
             .entry(format!("{entry}__{variant}"))
             .or_insert(0) += 1;
     }
 
     /// Number of compiled executables currently cached.
     pub fn cached_executables(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        lock_unpoisoned(&self.cache).len()
     }
 }
 

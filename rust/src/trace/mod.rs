@@ -38,6 +38,8 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::util::lock_unpoisoned;
+
 /// One completed wall-clock interval.
 #[derive(Debug, Clone)]
 pub struct SpanEvent {
@@ -97,7 +99,7 @@ impl Tracer {
     /// Swap the sink (None disables the tracer).
     pub fn set_sink(&self, sink: Option<Arc<dyn TraceSink>>) {
         let on = sink.is_some();
-        *self.sink.lock().unwrap_or_else(|e| e.into_inner()) = sink;
+        *lock_unpoisoned(&self.sink) = sink;
         self.enabled.store(on, Ordering::Relaxed);
     }
 
@@ -137,7 +139,7 @@ impl Tracer {
             dur_ns: self.now_ns().saturating_sub(start_ns),
             args: args.to_vec(),
         };
-        let sink = self.sink.lock().unwrap_or_else(|e| e.into_inner());
+        let sink = lock_unpoisoned(&self.sink);
         if let Some(s) = sink.as_ref() {
             s.record_span(ev);
         }
@@ -148,7 +150,7 @@ impl Tracer {
         if !self.is_enabled() {
             return;
         }
-        let sink = self.sink.lock().unwrap_or_else(|e| e.into_inner());
+        let sink = lock_unpoisoned(&self.sink);
         if let Some(s) = sink.as_ref() {
             s.add_counter(name, delta);
         }
@@ -165,14 +167,11 @@ pub struct MemorySink {
 
 impl TraceSink for MemorySink {
     fn record_span(&self, span: SpanEvent) {
-        self.spans.lock().unwrap_or_else(|e| e.into_inner()).push(span);
+        lock_unpoisoned(&self.spans).push(span);
     }
 
     fn add_counter(&self, name: &str, delta: u64) {
-        *self
-            .counters
-            .lock()
-            .unwrap_or_else(|e| e.into_inner())
+        *lock_unpoisoned(&self.counters)
             .entry(name.to_string())
             .or_insert(0) += delta;
     }
@@ -180,24 +179,19 @@ impl TraceSink for MemorySink {
 
 impl MemorySink {
     pub fn spans(&self) -> Vec<SpanEvent> {
-        self.spans.lock().unwrap_or_else(|e| e.into_inner()).clone()
+        lock_unpoisoned(&self.spans).clone()
     }
 
     pub fn counters(&self) -> BTreeMap<String, u64> {
-        self.counters
-            .lock()
-            .unwrap_or_else(|e| e.into_inner())
-            .clone()
+        lock_unpoisoned(&self.counters).clone()
     }
 
     pub fn span_count(&self) -> usize {
-        self.spans.lock().unwrap_or_else(|e| e.into_inner()).len()
+        lock_unpoisoned(&self.spans).len()
     }
 
     pub fn counter(&self, name: &str) -> u64 {
-        self.counters
-            .lock()
-            .unwrap_or_else(|e| e.into_inner())
+        lock_unpoisoned(&self.counters)
             .get(name)
             .copied()
             .unwrap_or(0)

@@ -339,6 +339,7 @@ impl<'a> Parser<'a> {
                     let rest = &self.src[self.pos..];
                     let st = std::str::from_utf8(rest)
                         .map_err(|_| Error::Parse("invalid utf-8 in string".into()))?;
+                    // mli-lint: allow(E001) rest is non-empty (bump saw a byte)
                     let c = st.chars().next().unwrap();
                     s.push(c);
                     self.pos += c.len_utf8();
@@ -355,6 +356,7 @@ impl<'a> Parser<'a> {
         while matches!(self.peek(), Some(b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')) {
             self.pos += 1;
         }
+        // mli-lint: allow(E001) the matched bytes are ASCII, always valid UTF-8
         let text = std::str::from_utf8(&self.src[start..self.pos]).unwrap();
         text.parse::<f64>()
             .map(Json::Num)

@@ -1,0 +1,444 @@
+//! Runtime lock-order cycle detection (debug builds only).
+//!
+//! [`TrackedMutex`] is a drop-in replacement for `std::sync::Mutex` used by
+//! the concurrency-heavy subsystems (the `exec` pool and queues). Under
+//! `debug_assertions` every acquisition is recorded in a process-wide
+//! lock-order graph: an edge `a -> b` means "some thread acquired `b`
+//! while holding `a`". At acquire time the tracker checks whether the new
+//! edge would close a cycle — the static witness of a potential deadlock —
+//! and panics with *both* acquisition chains (the recorded one and the
+//! current thread's) so the inversion is diagnosable from the panic
+//! message alone. Re-locking a mutex already held by the current thread
+//! (guaranteed self-deadlock with std's non-reentrant mutex) panics too.
+//!
+//! In release builds the tracker compiles away entirely: `TrackedMutex` is
+//! a newtype over `Mutex` and `lock()` is exactly
+//! [`super::lock_unpoisoned`] (poison recovery, no bookkeeping).
+//!
+//! This is the dynamic half of the repo's concurrency checking; the static
+//! half is `mli lint` (rules C001/C002 — see `docs/lint.md`). The
+//! detector is exercised for free by the exec/fault integration suites,
+//! which drive every pool lock through real contention.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// A named mutex whose acquisitions are order-checked in debug builds.
+///
+/// The name is a static label for panic messages ("exec.park", ...); it
+/// does not need to be unique — cycle detection keys on the instance.
+pub struct TrackedMutex<T> {
+    inner: Mutex<T>,
+    name: &'static str,
+    #[cfg(debug_assertions)]
+    id: u64,
+}
+
+/// Guard returned by [`TrackedMutex::lock`]. Dropping it releases the
+/// mutex and (in debug builds) pops it from the thread's held-lock stack.
+pub struct TrackedGuard<'a, T> {
+    // Option so condvar waits can move the inner guard out without
+    // tripping this type's Drop bookkeeping; None only transiently.
+    guard: Option<MutexGuard<'a, T>>,
+    #[cfg(debug_assertions)]
+    id: u64,
+}
+
+impl<T> TrackedMutex<T> {
+    pub fn new(name: &'static str, value: T) -> TrackedMutex<T> {
+        TrackedMutex {
+            inner: Mutex::new(value),
+            name,
+            #[cfg(debug_assertions)]
+            id: dep::new_id(),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Acquire, recovering from poisoning (same policy as
+    /// [`super::lock_unpoisoned`]). Debug builds record the acquisition in
+    /// the global lock-order graph and panic if it closes a cycle.
+    pub fn lock(&self) -> TrackedGuard<'_, T> {
+        #[cfg(debug_assertions)]
+        dep::acquire(self.id, self.name);
+        let guard = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        TrackedGuard {
+            guard: Some(guard),
+            #[cfg(debug_assertions)]
+            id: self.id,
+        }
+    }
+
+    /// Condvar wait. The mutex is released for the duration of the wait
+    /// and re-acquired (with a fresh order check) on wakeup, mirroring
+    /// what `Condvar::wait` does to the underlying mutex.
+    pub fn wait<'a>(&'a self, cv: &Condvar, mut g: TrackedGuard<'a, T>) -> TrackedGuard<'a, T> {
+        let inner = g.take_inner();
+        #[cfg(debug_assertions)]
+        dep::release(self.id);
+        drop(g);
+        let inner = cv.wait(inner).unwrap_or_else(|e| e.into_inner());
+        #[cfg(debug_assertions)]
+        dep::acquire(self.id, self.name);
+        TrackedGuard {
+            guard: Some(inner),
+            #[cfg(debug_assertions)]
+            id: self.id,
+        }
+    }
+
+    /// Condvar wait with a timeout; the bool is "timed out".
+    pub fn wait_timeout<'a>(
+        &'a self,
+        cv: &Condvar,
+        mut g: TrackedGuard<'a, T>,
+        dur: Duration,
+    ) -> (TrackedGuard<'a, T>, bool) {
+        let inner = g.take_inner();
+        #[cfg(debug_assertions)]
+        dep::release(self.id);
+        drop(g);
+        let (inner, timeout) = cv
+            .wait_timeout(inner, dur)
+            .unwrap_or_else(|e| e.into_inner());
+        #[cfg(debug_assertions)]
+        dep::acquire(self.id, self.name);
+        (
+            TrackedGuard {
+                guard: Some(inner),
+                #[cfg(debug_assertions)]
+                id: self.id,
+            },
+            timeout.timed_out(),
+        )
+    }
+}
+
+impl<T> Drop for TrackedMutex<T> {
+    fn drop(&mut self) {
+        // Purge this instance from the graph so a recycled address (or a
+        // later test in the same process) can never inherit stale edges.
+        #[cfg(debug_assertions)]
+        dep::forget_lock(self.id);
+    }
+}
+
+impl<'a, T> TrackedGuard<'a, T> {
+    fn take_inner(&mut self) -> MutexGuard<'a, T> {
+        match self.guard.take() {
+            Some(g) => g,
+            // Unreachable by construction: `guard` is None only inside the
+            // wait methods, which consume `self`.
+            None => panic!("lockdep: guard already consumed"),
+        }
+    }
+}
+
+impl<T> std::ops::Deref for TrackedGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        match &self.guard {
+            Some(g) => g,
+            None => panic!("lockdep: guard already consumed"),
+        }
+    }
+}
+
+impl<T> std::ops::DerefMut for TrackedGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        match &mut self.guard {
+            Some(g) => g,
+            None => panic!("lockdep: guard already consumed"),
+        }
+    }
+}
+
+impl<T> Drop for TrackedGuard<'_, T> {
+    fn drop(&mut self) {
+        #[cfg(debug_assertions)]
+        if self.guard.is_some() {
+            dep::release(self.id);
+        }
+    }
+}
+
+/// The debug-only acquisition registry: a process-wide lock-order graph
+/// plus a per-thread stack of currently held tracked locks.
+#[cfg(debug_assertions)]
+mod dep {
+    use std::cell::RefCell;
+    use std::collections::BTreeMap;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Mutex;
+
+    static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+    /// `edges[a][b]` = description of the first time `b` was acquired
+    /// while `a` was held.
+    struct Graph {
+        edges: BTreeMap<u64, BTreeMap<u64, String>>,
+        names: BTreeMap<u64, &'static str>,
+    }
+
+    static GRAPH: Mutex<Option<Graph>> = Mutex::new(None);
+
+    thread_local! {
+        static HELD: RefCell<Vec<(u64, &'static str)>> = const { RefCell::new(Vec::new()) };
+    }
+
+    pub(super) fn new_id() -> u64 {
+        NEXT_ID.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn with_graph<R>(f: impl FnOnce(&mut Graph) -> R) -> R {
+        let mut g = GRAPH.lock().unwrap_or_else(|e| e.into_inner());
+        let g = g.get_or_insert_with(|| Graph {
+            edges: BTreeMap::new(),
+            names: BTreeMap::new(),
+        });
+        f(g)
+    }
+
+    /// Shortest-path search (BFS) from `from` to `to` over recorded edges.
+    /// Returns the edge list of the path when one exists.
+    fn path(g: &Graph, from: u64, to: u64) -> Option<Vec<(u64, u64)>> {
+        let mut prev: BTreeMap<u64, u64> = BTreeMap::new();
+        let mut queue = std::collections::VecDeque::new();
+        queue.push_back(from);
+        while let Some(n) = queue.pop_front() {
+            if n == to {
+                let mut chain = Vec::new();
+                let mut cur = to;
+                while cur != from {
+                    let p = prev[&cur];
+                    chain.push((p, cur));
+                    cur = p;
+                }
+                chain.reverse();
+                return Some(chain);
+            }
+            if let Some(succ) = g.edges.get(&n) {
+                for &m in succ.keys() {
+                    if m != from && !prev.contains_key(&m) {
+                        prev.insert(m, n);
+                        queue.push_back(m);
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    /// Record that the current thread is acquiring lock `id`; panics on a
+    /// same-thread relock or when the new held->id edge closes a cycle.
+    pub(super) fn acquire(id: u64, name: &'static str) {
+        HELD.with(|h| {
+            let mut held = h.borrow_mut();
+            if held.iter().any(|&(i, _)| i == id) {
+                panic!(
+                    "lock-order: relocking '{name}' already held by this thread \
+                     (self-deadlock); held: {:?}",
+                    held.iter().map(|&(_, n)| n).collect::<Vec<_>>()
+                );
+            }
+            if !held.is_empty() {
+                let thread = std::thread::current();
+                let tname = thread.name().unwrap_or("<unnamed>").to_string();
+                with_graph(|g| {
+                    g.names.insert(id, name);
+                    for &(h_id, h_name) in held.iter() {
+                        g.names.insert(h_id, h_name);
+                        if g.edges.get(&h_id).is_some_and(|m| m.contains_key(&id)) {
+                            continue;
+                        }
+                        // would h_id -> id close a cycle (a path id -> h_id)?
+                        if let Some(chain) = path(g, id, h_id) {
+                            let mut msg = format!(
+                                "lock-order cycle detected: thread '{tname}' is acquiring \
+                                 '{name}' while holding '{h_name}', but the reverse order \
+                                 is already on record:\n"
+                            );
+                            for (a, b) in &chain {
+                                let how = g
+                                    .edges
+                                    .get(a)
+                                    .and_then(|m| m.get(b))
+                                    .map(String::as_str)
+                                    .unwrap_or("<edge>");
+                                msg.push_str(&format!("  recorded: {how}\n"));
+                            }
+                            msg.push_str(&format!(
+                                "  new:      '{name}' acquired while holding '{h_name}' \
+                                 (thread '{tname}', held stack: {:?})",
+                                held.iter().map(|&(_, n)| n).collect::<Vec<_>>()
+                            ));
+                            panic!("{msg}");
+                        }
+                        g.edges.entry(h_id).or_default().insert(
+                            id,
+                            format!(
+                                "'{name}' acquired while holding '{h_name}' \
+                                 (thread '{tname}')"
+                            ),
+                        );
+                    }
+                });
+            }
+            held.push((id, name));
+        });
+    }
+
+    /// The current thread released lock `id`.
+    pub(super) fn release(id: u64) {
+        HELD.with(|h| {
+            let mut held = h.borrow_mut();
+            if let Some(pos) = held.iter().rposition(|&(i, _)| i == id) {
+                held.remove(pos);
+            }
+        });
+    }
+
+    /// A tracked mutex was dropped: remove its node and every edge
+    /// touching it so later allocations can't inherit stale ordering.
+    pub(super) fn forget_lock(id: u64) {
+        with_graph(|g| {
+            g.edges.remove(&id);
+            g.names.remove(&id);
+            for m in g.edges.values_mut() {
+                m.remove(&id);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_and_mutate() {
+        let m = TrackedMutex::new("t.basic", 1u64);
+        *m.lock() += 41;
+        assert_eq!(*m.lock(), 42);
+    }
+
+    #[test]
+    fn consistent_order_is_fine_across_threads() {
+        // a -> b taken in the same order from two threads: no cycle.
+        let a = Arc::new(TrackedMutex::new("t.order.a", ()));
+        let b = Arc::new(TrackedMutex::new("t.order.b", ()));
+        let (a2, b2) = (a.clone(), b.clone());
+        let t = std::thread::spawn(move || {
+            let ga = a2.lock();
+            let gb = b2.lock();
+            drop(gb);
+            drop(ga);
+        });
+        t.join().unwrap();
+        let ga = a.lock();
+        let gb = b.lock();
+        drop(gb);
+        drop(ga);
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "lockdep is debug-only")]
+    #[should_panic(expected = "lock-order cycle detected")]
+    fn inverted_order_panics_with_both_chains() {
+        // Deliberate inversion: a -> b on the first pass, then b -> a.
+        // Deterministic on one thread — the graph records a -> b, and the
+        // second pass's b-held acquire of a closes the cycle.
+        let a = TrackedMutex::new("t.cycle.a", ());
+        let b = TrackedMutex::new("t.cycle.b", ());
+        {
+            let _ga = a.lock();
+            let _gb = b.lock();
+        }
+        let _gb = b.lock();
+        let _ga = a.lock(); // panics here
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "lockdep is debug-only")]
+    #[should_panic(expected = "self-deadlock")]
+    fn relock_same_mutex_panics() {
+        let m = TrackedMutex::new("t.relock", ());
+        let _g1 = m.lock();
+        let _g2 = m.lock();
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "lockdep is debug-only")]
+    #[should_panic(expected = "lock-order cycle detected")]
+    fn transitive_cycle_detected() {
+        // a -> b and b -> c recorded; then c-held acquire of a must close
+        // the 3-node cycle through the recorded chain.
+        let a = TrackedMutex::new("t.tri.a", ());
+        let b = TrackedMutex::new("t.tri.b", ());
+        let c = TrackedMutex::new("t.tri.c", ());
+        {
+            let _ga = a.lock();
+            let _gb = b.lock();
+        }
+        {
+            let _gb = b.lock();
+            let _gc = c.lock();
+        }
+        let _gc = c.lock();
+        let _ga = a.lock(); // panics here
+    }
+
+    #[test]
+    fn drop_purges_edges_so_no_ghost_cycles() {
+        // First pair records a -> b, then both mutexes are dropped. A
+        // fresh pair acquired in the reverse order must NOT trip on the
+        // dead pair's edge.
+        {
+            let a = TrackedMutex::new("t.ghost.a", ());
+            let b = TrackedMutex::new("t.ghost.b", ());
+            let _ga = a.lock();
+            let _gb = b.lock();
+        }
+        let a = TrackedMutex::new("t.ghost.a2", ());
+        let b = TrackedMutex::new("t.ghost.b2", ());
+        let _gb = b.lock();
+        let _ga = a.lock();
+    }
+
+    #[test]
+    fn condvar_wait_timeout_releases_and_reacquires() {
+        let m = TrackedMutex::new("t.cv", 0u32);
+        let cv = Condvar::new();
+        let g = m.lock();
+        let (g, timed_out) = m.wait_timeout(&cv, g, Duration::from_millis(5));
+        assert!(timed_out);
+        drop(g);
+        // the lock must be fully released/reusable afterwards
+        *m.lock() += 1;
+        assert_eq!(*m.lock(), 1);
+    }
+
+    #[test]
+    fn condvar_wait_wakes_on_notify() {
+        let pair = Arc::new((TrackedMutex::new("t.cv.notify", false), Condvar::new()));
+        let pair2 = pair.clone();
+        let t = std::thread::spawn(move || {
+            let (m, cv) = &*pair2;
+            *m.lock() = true;
+            cv.notify_all();
+        });
+        let (m, cv) = &*pair;
+        let mut g = m.lock();
+        while !*g {
+            let (ng, _) = m.wait_timeout(cv, g, Duration::from_millis(50));
+            g = ng;
+        }
+        assert!(*g);
+        drop(g);
+        t.join().unwrap();
+    }
+}

@@ -6,9 +6,21 @@
 
 pub mod cli;
 pub mod json;
+pub mod lockdep;
 pub mod prop;
 pub mod rng;
 pub mod timer;
+
+/// Lock a mutex, recovering from poisoning. Poisoning only means "some
+/// task panicked while holding the guard"; every structure we guard
+/// (deques, completion counts, metrics, caches) is valid at every point a
+/// panic can unwind through, so the data is safe to reuse and recovery is
+/// the correct policy — the panic itself is reported through the owning
+/// layer's typed error (e.g. [`crate::exec::ExecError`]), not via lock
+/// poisoning.
+pub fn lock_unpoisoned<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Mean of a slice (0.0 for empty).
 pub fn mean(xs: &[f64]) -> f64 {

@@ -205,8 +205,13 @@ impl ALS {
         let tracer = cluster.tracer();
         let half_t0 = tracer.start();
         cluster.begin_round();
-        // Fig. A9: ctx.broadcast(fixedFactor)
-        cluster.charge_broadcast(self.params.topology, (fixed.rows * k * 4) as u64);
+        // Fig. A9: ctx.broadcast(fixedFactor) — through the network fault
+        // layer; close the round before propagating a link failure
+        if let Err(e) = cluster.net_broadcast(self.params.topology, (fixed.rows * k * 4) as u64)
+        {
+            cluster.end_round();
+            return Err(e);
+        }
         if self.params.disk_spill {
             // Mahout profile: fresh Hadoop job per half-round — JVM spawn,
             // re-read this machine's ratings shard from HDFS, and write
@@ -245,8 +250,9 @@ impl ALS {
         }
 
         // updated factor slices gather to master + broadcast next round
-        cluster.charge_allreduce(self.params.topology, (n * k * 4) as u64);
+        let sent = cluster.net_allreduce(self.params.topology, (n * k * 4) as u64);
         cluster.end_round();
+        sent?;
         if let Some(t0) = half_t0 {
             tracer.span("als-half-round", "optim", 0, t0, &[("rows", n as f64)]);
         }

@@ -259,8 +259,12 @@ impl Algorithm for KMeans {
 
         for _it in 0..self.params.iters {
             cluster.begin_round();
-            // broadcast centroids
-            cluster.charge_broadcast(self.params.topology, (k * d * 4) as u64);
+            // broadcast centroids through the network fault layer; close
+            // the round before propagating a link failure
+            if let Err(e) = cluster.net_broadcast(self.params.topology, (k * d * 4) as u64) {
+                cluster.end_round();
+                return Err(e);
+            }
             let mut gsums = vec![0.0f64; k * d];
             let mut gcounts = vec![0.0f64; k];
             let mut gsse = 0.0f64;
@@ -320,8 +324,9 @@ impl Algorithm for KMeans {
                 gsse += sse;
             }
             // gather statistics at master: k*d sums + k counts per machine
-            cluster.charge_allreduce(self.params.topology, ((k * d + k) * 4) as u64);
+            let sent = cluster.net_allreduce(self.params.topology, ((k * d + k) * 4) as u64);
             cluster.end_round();
+            sent?;
 
             for c in 0..k {
                 if gcounts[c] > 0.0 {

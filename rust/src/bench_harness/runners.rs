@@ -90,6 +90,9 @@ pub fn logreg_scaling_with(
     let mut total_losses = 0usize;
     let mut total_recoveries = 0u64;
     let mut total_tasks = 0u64;
+    let mut net_drops = 0u64;
+    let mut net_retries = 0u64;
+    let mut net_waits = 0u64;
     for &m in &cfg.machines {
         let n_total = match mode {
             ScalingMode::Weak => cfg.rows * m,
@@ -123,7 +126,13 @@ pub fn logreg_scaling_with(
                     backend: cfg.backend.clone(),
                 })
                 .train(&data.table, &cluster)
-                .map(|_| cluster.total_sim_seconds())
+                .map(|_| {
+                    let ns = cluster.net_stats();
+                    net_drops += ns.drops;
+                    net_retries += ns.retries;
+                    net_waits += ns.partition_waits;
+                    cluster.total_sim_seconds()
+                })
             })
             .collect::<Result<_>>()?;
         let mli = SystemRun {
@@ -198,7 +207,8 @@ pub fn logreg_scaling_with(
     }
     table.note(format!(
         "failure accounting across the sweep: {total_losses} partitions lost, \
-         {total_recoveries} lineage recoveries, {total_tasks} engine tasks run"
+         {total_recoveries} lineage recoveries, {total_tasks} engine tasks run; \
+         net faults: {net_drops} drops, {net_retries} retries, {net_waits} partition waits"
     ));
     Ok(table)
 }
@@ -286,6 +296,9 @@ pub fn als_scaling_with(
     let mut mli_base: Option<f64> = None;
     let mut total_kills = 0u64;
     let mut total_restarts = 0u64;
+    let mut net_drops = 0u64;
+    let mut net_retries = 0u64;
+    let mut net_waits = 0u64;
     for &m in &cfg.machines {
         let t = match mode {
             ScalingMode::Weak => m,
@@ -330,6 +343,10 @@ pub fn als_scaling_with(
                 let (kills, restarts) = cluster.fault_stats();
                 total_kills += kills;
                 total_restarts += restarts;
+                let ns = cluster.net_stats();
+                net_drops += ns.drops;
+                net_retries += ns.retries;
+                net_waits += ns.partition_waits;
                 r
             })
             .collect::<Result<_>>()?;
@@ -365,7 +382,8 @@ pub fn als_scaling_with(
         ]);
     }
     table.note(format!(
-        "node faults across the MLI runs: {total_kills} kills, {total_restarts} restarts"
+        "node faults across the MLI runs: {total_kills} kills, {total_restarts} restarts; \
+         net faults: {net_drops} drops, {net_retries} retries, {net_waits} partition waits"
     ));
     Ok(table)
 }

@@ -19,12 +19,17 @@
 
 pub mod fault;
 pub mod machine;
+pub mod netfault;
 pub mod network;
 pub mod sim;
 pub mod topology;
 
 pub use fault::{FaultEvent, FaultKind, FaultPlan};
 pub use machine::MachineSpec;
+pub use netfault::{
+    LinkState, NetChaosConfig, NetFaultEvent, NetFaultKind, NetFaultPlan, NetStats,
+    PartitionPolicy,
+};
 pub use network::NetworkModel;
 pub use sim::{RoundStats, SimCluster, SimLedger, StragglerModel};
 pub use topology::CommTopology;

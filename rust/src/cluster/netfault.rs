@@ -1,0 +1,497 @@
+//! Network-failure schedules for the simulated cluster.
+//!
+//! [`super::fault::FaultPlan`] models machines dying; a [`NetFaultPlan`]
+//! models the *links between them* failing — the dominant failure and
+//! straggler source in real data-center clusters. Four fault kinds are
+//! scheduled as round-scoped windows, applied by the cluster at round
+//! boundaries ([`super::SimCluster::begin_round`]) alongside the node
+//! fault plan:
+//!
+//! * **Drop** — messages are lost with some probability per delivery
+//!   attempt; the sender retries under its [`crate::engine::RetryPolicy`].
+//! * **Duplicate** — delivered messages arrive twice; the receiver dedups,
+//!   so only bandwidth (and a counter) is charged — math never changes.
+//! * **Degrade** — a link runs at multiplied latency / divided bandwidth.
+//! * **Partition** — a group of machines splits off; no message crosses
+//!   the cut while the window is open.
+//!
+//! Determinism contract: per-message fault decisions come from
+//! [`msg_roll`], a *pure hash* of (seed, round, message id, attempt) —
+//! never a shared mutable RNG stream — so drop/duplicate outcomes are
+//! identical for any host thread count and any interleaving of charge
+//! calls. Whenever retries eventually succeed, trained models are
+//! bitwise-identical to the failure-free baseline: faults move simulated
+//! time and counters, never values or merge order.
+
+use crate::util::lockdep::TrackedMutex;
+use crate::util::rng::Rng;
+
+/// What a scheduled network fault does to the fleet's links while active.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NetFaultKind {
+    /// Messages on links touching `machine` (every link when `None`) are
+    /// dropped with probability `prob` per delivery attempt.
+    Drop { machine: Option<usize>, prob: f64 },
+    /// Delivered messages on links touching `machine` (every link when
+    /// `None`) are duplicated with probability `prob`.
+    Duplicate { machine: Option<usize>, prob: f64 },
+    /// Links touching `machine` (every link when `None`) degrade: latency
+    /// is multiplied by `latency_x`, bandwidth divided by `bandwidth_div`.
+    Degrade {
+        machine: Option<usize>,
+        latency_x: f64,
+        bandwidth_div: f64,
+    },
+    /// The listed machines split from the rest of the fleet; no message
+    /// crosses the cut while the window is open. The "master side" is the
+    /// side containing machine 0.
+    Partition { minority: Vec<usize> },
+}
+
+impl NetFaultKind {
+    /// Short label for spans and log lines.
+    pub fn label(&self) -> &'static str {
+        match self {
+            NetFaultKind::Drop { .. } => "drop",
+            NetFaultKind::Duplicate { .. } => "duplicate",
+            NetFaultKind::Degrade { .. } => "degrade",
+            NetFaultKind::Partition { .. } => "partition",
+        }
+    }
+}
+
+/// One scheduled network fault window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetFaultEvent {
+    /// Round (0-based, counted over `SimCluster::begin_round` calls) at
+    /// which the window opens, before any work of that round runs.
+    pub round: usize,
+    /// Rounds the window stays open (0 is treated as 1).
+    pub rounds: usize,
+    pub kind: NetFaultKind,
+}
+
+/// What a sender does when the destination is on the other side of an
+/// active partition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PartitionPolicy {
+    /// Block until the window closes: the message still succeeds, and the
+    /// sender is charged `heal_in x` the per-message timeout of simulated
+    /// wait time (the cut outlives every in-flight retry, so the wait is
+    /// gated by rounds-to-heal, not attempts).
+    #[default]
+    WaitOut,
+    /// Fail fast: cut-off machines are treated like dead ones by
+    /// [`super::SimCluster::assign_machine`], so work re-places onto the
+    /// master's side; a direct send across the cut is a typed
+    /// `Error::NetFault`.
+    Replace,
+}
+
+/// Message-level accounting across a run (see `SimCluster::net_stats`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NetStats {
+    /// Logical transfers attempted through the fault layer.
+    pub sends: u64,
+    /// Delivery attempts lost to an active drop window.
+    pub drops: u64,
+    /// Retry attempts (every drop that wasn't the last allowed attempt).
+    pub retries: u64,
+    /// Duplicate deliveries (deduped by the receiver; bandwidth only).
+    pub dups: u64,
+    /// Messages that waited out a partition window (`WaitOut`).
+    pub partition_waits: u64,
+    /// Placements re-routed off a cut-off machine (`Replace`).
+    pub replacements: u64,
+}
+
+/// Tunables for [`NetFaultPlan::random`] chaos schedules.
+#[derive(Debug, Clone)]
+pub struct NetChaosConfig {
+    /// Per-round probability that a one-round fleet-wide drop window opens.
+    pub drop_windows: f64,
+    /// Link drop probability inside a drop window.
+    pub drop_prob: f64,
+    /// Per-round probability that a one-round duplicate window opens.
+    pub dup_windows: f64,
+    /// Duplicate probability inside a duplicate window.
+    pub dup_prob: f64,
+    /// Per-round probability that a one-round single-machine degrade
+    /// window opens (the degraded machine is drawn from the schedule RNG).
+    pub degrade_windows: f64,
+    /// Latency multiplier inside a degrade window.
+    pub latency_x: f64,
+    /// Bandwidth divisor inside a degrade window.
+    pub bandwidth_div: f64,
+    /// Round at which the one partition window opens (0 disables it; a
+    /// value below 1 is pushed to 1 so round 0 stays fault-free).
+    pub partition_round: usize,
+    /// Rounds the partition window stays open.
+    pub partition_rounds: usize,
+}
+
+impl Default for NetChaosConfig {
+    fn default() -> Self {
+        NetChaosConfig {
+            drop_windows: 0.5,
+            drop_prob: 0.25,
+            dup_windows: 0.4,
+            dup_prob: 0.2,
+            degrade_windows: 0.3,
+            latency_x: 4.0,
+            bandwidth_div: 4.0,
+            partition_round: 2,
+            partition_rounds: 2,
+        }
+    }
+}
+
+/// A schedule of link-fault windows, applied by the cluster at round
+/// boundaries. Shared (`Arc`) between the driver that authors it and the
+/// cluster that drains it. The seed feeds every per-message [`msg_roll`].
+pub struct NetFaultPlan {
+    seed: u64,
+    events: TrackedMutex<Vec<NetFaultEvent>>,
+}
+
+impl NetFaultPlan {
+    pub fn new(seed: u64) -> NetFaultPlan {
+        NetFaultPlan {
+            seed,
+            events: TrackedMutex::new("netfault.events", Vec::new()),
+        }
+    }
+
+    /// The seed driving per-message fault decisions.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Schedule one fault window.
+    pub fn schedule(&self, ev: NetFaultEvent) {
+        self.events.lock().push(ev);
+    }
+
+    /// Sugar: a `kind` window open for `rounds` rounds starting at `round`.
+    pub fn window(&self, round: usize, rounds: usize, kind: NetFaultKind) {
+        self.schedule(NetFaultEvent { round, rounds, kind });
+    }
+
+    /// Seeded random chaos schedule mixing drop, duplicate, degrade, and
+    /// one partition window over rounds `1..rounds` (round 0 is always
+    /// spared so a job can land its initial broadcast). Identical seeds
+    /// yield identical schedules; the same seed also drives the
+    /// per-message rolls, so a whole chaos run replays bit-for-bit.
+    pub fn random(
+        seed: u64,
+        machines: usize,
+        rounds: usize,
+        cfg: &NetChaosConfig,
+    ) -> NetFaultPlan {
+        let plan = NetFaultPlan::new(seed);
+        let mut rng = Rng::new(seed).split(0x6e65_7466); // "netf"
+        for round in 1..rounds {
+            if cfg.drop_windows > 0.0 && rng.f64() < cfg.drop_windows {
+                plan.window(
+                    round,
+                    1,
+                    NetFaultKind::Drop { machine: None, prob: cfg.drop_prob },
+                );
+            }
+            if cfg.dup_windows > 0.0 && rng.f64() < cfg.dup_windows {
+                plan.window(
+                    round,
+                    1,
+                    NetFaultKind::Duplicate { machine: None, prob: cfg.dup_prob },
+                );
+            }
+            if cfg.degrade_windows > 0.0 && rng.f64() < cfg.degrade_windows {
+                let machine = Some(rng.below(machines.max(1)));
+                plan.window(
+                    round,
+                    1,
+                    NetFaultKind::Degrade {
+                        machine,
+                        latency_x: cfg.latency_x,
+                        bandwidth_div: cfg.bandwidth_div,
+                    },
+                );
+            }
+        }
+        if cfg.partition_rounds > 0 && cfg.partition_round > 0 && machines > 1 {
+            // cut off the top quarter of the fleet (at least one machine,
+            // never machine 0 — the master side must stay the majority)
+            let k = (machines / 4).max(1).min(machines - 1);
+            let minority: Vec<usize> = (machines - k..machines).collect();
+            plan.window(
+                cfg.partition_round.max(1),
+                cfg.partition_rounds,
+                NetFaultKind::Partition { minority },
+            );
+        }
+        plan
+    }
+
+    /// Drain and return every window opening at or before `round`, in
+    /// schedule order. Called by the cluster once per `begin_round`.
+    pub fn take_due(&self, round: usize) -> Vec<NetFaultEvent> {
+        let mut events = self.events.lock();
+        let mut due = Vec::new();
+        let mut i = 0;
+        while i < events.len() {
+            if events[i].round <= round {
+                due.push(events.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        due
+    }
+
+    /// Windows not yet opened.
+    pub fn remaining(&self) -> usize {
+        self.events.lock().len()
+    }
+}
+
+/// Pure per-message uniform draw in [0, 1): a hash of (seed, round,
+/// message id, attempt, salt), not a shared RNG stream. Fresh randomness
+/// per retry attempt means a dropped message can succeed on retry; the
+/// hash form means the outcome is independent of host thread count and of
+/// how charge calls interleave across subsystems.
+pub fn msg_roll(seed: u64, round: usize, msg: u64, attempt: usize, salt: u64) -> f64 {
+    let mut x = seed ^ 0x6e65_7466_6175_6c74; // "netfault"
+    for v in [round as u64, msg, attempt as u64, salt] {
+        x = (x ^ v).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        x ^= x >> 29;
+    }
+    Rng::new(x).f64()
+}
+
+/// Salt values separating the independent per-message draw families.
+pub const ROLL_DROP: u64 = 1;
+pub const ROLL_DUP: u64 = 2;
+
+/// Effective quality of one link under the active fault windows.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkQuality {
+    pub drop_p: f64,
+    pub dup_p: f64,
+    pub latency_x: f64,
+    pub bandwidth_div: f64,
+}
+
+/// Snapshot of the fleet's per-link fault state for one round, rebuilt by
+/// the cluster at each round boundary from the open windows. Pure data —
+/// cheap to clone out of the cluster's lock so the send path never holds
+/// it across a charge.
+#[derive(Debug, Clone)]
+pub struct LinkState {
+    pub round: usize,
+    seed: u64,
+    drop_all: f64,
+    dup_all: f64,
+    drop_m: Vec<f64>,
+    dup_m: Vec<f64>,
+    latency_x: Vec<f64>,
+    bandwidth_div: Vec<f64>,
+    minority: Vec<bool>,
+    /// Rounds until the last open partition window closes (0 = none).
+    pub heal_in: usize,
+    active: bool,
+}
+
+/// Combine independent drop/duplicate probabilities: 1 - prod(1 - p_i).
+fn combine_p(a: f64, b: f64) -> f64 {
+    1.0 - (1.0 - a.clamp(0.0, 1.0)) * (1.0 - b.clamp(0.0, 1.0))
+}
+
+impl LinkState {
+    /// A fault-free fleet (the state outside any window).
+    pub fn inactive(machines: usize) -> LinkState {
+        LinkState {
+            round: 0,
+            seed: 0,
+            drop_all: 0.0,
+            dup_all: 0.0,
+            drop_m: vec![0.0; machines],
+            dup_m: vec![0.0; machines],
+            latency_x: vec![1.0; machines],
+            bandwidth_div: vec![1.0; machines],
+            minority: vec![false; machines],
+            heal_in: 0,
+            active: false,
+        }
+    }
+
+    /// Fold the open windows (`(close_round_exclusive, kind)`) into one
+    /// per-round snapshot. Overlapping drop/duplicate windows combine as
+    /// independent losses; overlapping degrades take the worst multiplier.
+    pub fn build(
+        seed: u64,
+        machines: usize,
+        round: usize,
+        windows: &[(usize, NetFaultKind)],
+    ) -> LinkState {
+        let mut ls = LinkState::inactive(machines);
+        ls.round = round;
+        ls.seed = seed;
+        for (until, kind) in windows {
+            ls.active = true;
+            match kind {
+                NetFaultKind::Drop { machine, prob } => match machine {
+                    Some(m) if *m < machines => ls.drop_m[*m] = combine_p(ls.drop_m[*m], *prob),
+                    Some(_) => {}
+                    None => ls.drop_all = combine_p(ls.drop_all, *prob),
+                },
+                NetFaultKind::Duplicate { machine, prob } => match machine {
+                    Some(m) if *m < machines => ls.dup_m[*m] = combine_p(ls.dup_m[*m], *prob),
+                    Some(_) => {}
+                    None => ls.dup_all = combine_p(ls.dup_all, *prob),
+                },
+                NetFaultKind::Degrade { machine, latency_x, bandwidth_div } => {
+                    let lx = latency_x.max(1.0);
+                    let bd = bandwidth_div.max(1.0);
+                    match machine {
+                        Some(m) if *m < machines => {
+                            ls.latency_x[*m] = ls.latency_x[*m].max(lx);
+                            ls.bandwidth_div[*m] = ls.bandwidth_div[*m].max(bd);
+                        }
+                        Some(_) => {}
+                        None => {
+                            for m in 0..machines {
+                                ls.latency_x[m] = ls.latency_x[m].max(lx);
+                                ls.bandwidth_div[m] = ls.bandwidth_div[m].max(bd);
+                            }
+                        }
+                    }
+                }
+                NetFaultKind::Partition { minority } => {
+                    for &m in minority {
+                        if m < machines {
+                            ls.minority[m] = true;
+                        }
+                    }
+                    ls.heal_in = ls.heal_in.max(until.saturating_sub(round));
+                }
+            }
+        }
+        ls
+    }
+
+    /// Any window open this round?
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Do `a` and `b` sit on opposite sides of an active cut?
+    pub fn partitioned(&self, a: usize, b: usize) -> bool {
+        self.minority[a] != self.minority[b]
+    }
+
+    /// Is `m` on the same side of the cut as machine 0 (the master)?
+    pub fn same_side_as_master(&self, m: usize) -> bool {
+        self.minority[m] == self.minority[0]
+    }
+
+    /// Effective quality of the `a`–`b` link: endpoint-scoped and
+    /// fleet-wide drop/duplicate probabilities combine as independent
+    /// losses; the slower endpoint gates latency and bandwidth.
+    pub fn quality(&self, a: usize, b: usize) -> LinkQuality {
+        LinkQuality {
+            drop_p: combine_p(self.drop_all, combine_p(self.drop_m[a], self.drop_m[b])),
+            dup_p: combine_p(self.dup_all, combine_p(self.dup_m[a], self.dup_m[b])),
+            latency_x: self.latency_x[a].max(self.latency_x[b]),
+            bandwidth_div: self.bandwidth_div[a].max(self.bandwidth_div[b]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_due_drains_in_schedule_order() {
+        let p = NetFaultPlan::new(1);
+        p.window(2, 1, NetFaultKind::Drop { machine: None, prob: 0.5 });
+        p.window(1, 2, NetFaultKind::Partition { minority: vec![3] });
+        p.window(1, 1, NetFaultKind::Duplicate { machine: Some(0), prob: 0.1 });
+        assert_eq!(p.take_due(0), vec![]);
+        let due = p.take_due(1);
+        assert_eq!(due.len(), 2);
+        assert_eq!(due[0].kind.label(), "partition");
+        assert_eq!(due[1].kind.label(), "duplicate");
+        assert_eq!(p.remaining(), 1);
+        assert_eq!(p.take_due(9).len(), 1);
+    }
+
+    #[test]
+    fn random_schedule_is_seed_deterministic_and_spares_round_zero() {
+        let cfg = NetChaosConfig::default();
+        let a = NetFaultPlan::random(7, 8, 10, &cfg).take_due(usize::MAX);
+        let b = NetFaultPlan::random(7, 8, 10, &cfg).take_due(usize::MAX);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        assert!(a.iter().all(|e| e.round >= 1));
+        let c = NetFaultPlan::random(8, 8, 10, &cfg).take_due(usize::MAX);
+        assert_ne!(a, c);
+        // exactly one partition window, never cutting machine 0
+        let parts: Vec<_> = a
+            .iter()
+            .filter_map(|e| match &e.kind {
+                NetFaultKind::Partition { minority } => Some(minority.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(parts.len(), 1);
+        assert!(!parts[0].contains(&0) && !parts[0].is_empty());
+    }
+
+    #[test]
+    fn msg_roll_is_pure_and_uniform() {
+        assert_eq!(msg_roll(7, 3, 42, 1, ROLL_DROP), msg_roll(7, 3, 42, 1, ROLL_DROP));
+        assert_ne!(msg_roll(7, 3, 42, 1, ROLL_DROP), msg_roll(7, 3, 42, 2, ROLL_DROP));
+        assert_ne!(msg_roll(7, 3, 42, 1, ROLL_DROP), msg_roll(7, 3, 43, 1, ROLL_DROP));
+        assert_ne!(msg_roll(7, 3, 42, 1, ROLL_DROP), msg_roll(7, 3, 42, 1, ROLL_DUP));
+        let mean: f64 =
+            (0..4000).map(|i| msg_roll(1, 0, i, 0, ROLL_DROP)).sum::<f64>() / 4000.0;
+        assert!((mean - 0.5).abs() < 0.03, "roll mean {mean}");
+        assert!((0..1000).all(|i| {
+            let r = msg_roll(9, i, i as u64, 0, ROLL_DUP);
+            (0.0..1.0).contains(&r)
+        }));
+    }
+
+    #[test]
+    fn link_state_combines_windows() {
+        let windows = vec![
+            (5, NetFaultKind::Drop { machine: None, prob: 0.5 }),
+            (5, NetFaultKind::Drop { machine: Some(1), prob: 0.5 }),
+            (5, NetFaultKind::Degrade { machine: Some(2), latency_x: 4.0, bandwidth_div: 8.0 }),
+            (6, NetFaultKind::Partition { minority: vec![3] }),
+        ];
+        let ls = LinkState::build(7, 4, 2, &windows);
+        assert!(ls.is_active());
+        // link 0-1: global 0.5 + endpoint 0.5 combine to 0.75
+        let q = ls.quality(0, 1);
+        assert!((q.drop_p - 0.75).abs() < 1e-12, "{}", q.drop_p);
+        assert_eq!(q.latency_x, 1.0);
+        // link 0-2: degraded endpoint gates
+        let q2 = ls.quality(0, 2);
+        assert_eq!(q2.latency_x, 4.0);
+        assert_eq!(q2.bandwidth_div, 8.0);
+        assert!((q2.drop_p - 0.5).abs() < 1e-12);
+        // partition: 3 is cut off from the master side for 4 more rounds
+        assert!(ls.partitioned(0, 3) && ls.partitioned(2, 3));
+        assert!(!ls.partitioned(0, 2));
+        assert!(ls.same_side_as_master(1) && !ls.same_side_as_master(3));
+        assert_eq!(ls.heal_in, 4);
+        // no windows -> inactive
+        assert!(!LinkState::build(7, 4, 2, &[]).is_active());
+    }
+}

@@ -38,6 +38,14 @@ impl NetworkModel {
         self.latency_s + bytes as f64 / self.bandwidth_bps
     }
 
+    /// Message time over a degraded link: latency multiplied by
+    /// `latency_x`, bandwidth divided by `bandwidth_div` (both >= 1 under
+    /// a `cluster::netfault` degrade window; 1/1 reproduces
+    /// [`NetworkModel::msg_time`] exactly).
+    pub fn msg_time_scaled(&self, bytes: u64, latency_x: f64, bandwidth_div: f64) -> f64 {
+        self.latency_s * latency_x + bytes as f64 * bandwidth_div / self.bandwidth_bps
+    }
+
     /// Time to write `bytes` through the HDFS replication pipeline.
     pub fn hdfs_write_time(&self, bytes: u64) -> f64 {
         bytes as f64 * self.hdfs_replication as f64 / self.disk_bps
@@ -70,6 +78,19 @@ mod tests {
         assert!((t_big - 1.0).abs() < 0.01);
         // monotone in size
         assert!(n.msg_time(1000) < n.msg_time(1_000_000));
+    }
+
+    #[test]
+    fn scaled_msg_time_degrades_and_reduces() {
+        let n = NetworkModel::ec2_2013();
+        // unit multipliers reproduce the healthy link bit-for-bit
+        assert_eq!(n.msg_time_scaled(1 << 20, 1.0, 1.0), n.msg_time(1 << 20));
+        // 4x latency on a tiny message ~ 2 ms
+        assert!((n.msg_time_scaled(1, 4.0, 1.0) - 2.0e-3).abs() < 1e-5);
+        // quartered bandwidth on a big message ~ 4x the transfer term
+        let base = n.msg_time(125_000_000) - n.latency_s;
+        let slow = n.msg_time_scaled(125_000_000, 1.0, 4.0) - n.latency_s;
+        assert!((slow / base - 4.0).abs() < 1e-9);
     }
 
     #[test]

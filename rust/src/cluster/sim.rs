@@ -18,14 +18,27 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use std::time::Duration;
+
 use super::fault::{FaultKind, FaultPlan};
 use super::machine::MachineSpec;
+use super::netfault::{
+    msg_roll, LinkState, NetFaultKind, NetFaultPlan, NetStats, PartitionPolicy, ROLL_DROP,
+    ROLL_DUP,
+};
 use super::network::NetworkModel;
 use super::topology::CommTopology;
+use crate::engine::RetryPolicy;
 use crate::error::{Error, Result};
 use crate::exec::{lock_unpoisoned, ThreadPool};
 use crate::trace::Tracer;
+use crate::util::lockdep::TrackedMutex;
 use crate::util::timer::Stopwatch;
+
+/// A message's delivery timeout is this many multiples of its (degraded)
+/// one-way time: the sender declares a drop after the ack window passes
+/// and either backs off and retries or gives up under its `RetryPolicy`.
+const NET_TIMEOUT_FACTOR: f64 = 4.0;
 
 /// Per-round accounting.
 #[derive(Debug, Clone, Default)]
@@ -46,6 +59,9 @@ pub struct RoundStats {
     /// per-machine sums above can't distinguish one slow task from many
     /// fast ones).
     pub task_times: Vec<(usize, f64)>,
+    /// Logical messages allocated this round (per-round sequence counter;
+    /// the (round, message id) pair seeds each message's fault rolls).
+    pub net_msgs: u64,
 }
 
 impl RoundStats {
@@ -138,6 +154,30 @@ enum MachineHealth {
 /// invalidated. See `Dataset::bind_cluster`.
 type LossListener = Box<dyn Fn(usize) + Send + Sync>;
 
+/// Link-fault state for the open round (network-failure model). The
+/// `windows` vec holds `(close_round_exclusive, kind)` for every window
+/// still open; `link` is the per-round snapshot rebuilt from it at each
+/// `begin_round` and cloned out of the lock by the send path.
+struct NetState {
+    seed: u64,
+    windows: Vec<(usize, NetFaultKind)>,
+    link: LinkState,
+    policy: PartitionPolicy,
+    retry: RetryPolicy,
+}
+
+/// Per-call message accounting, flushed into the cluster's atomics (and
+/// the tracer) once per logical collective/transfer rather than per
+/// message, so counter updates stay race-free under concurrent charges.
+#[derive(Debug, Clone, Copy, Default)]
+struct SendTally {
+    sends: u64,
+    drops: u64,
+    retries: u64,
+    dups: u64,
+    partition_waits: u64,
+}
+
 /// A simulated cluster: machine fleet + network + time ledger.
 ///
 /// Interior mutability is mutex-guarded (`Send + Sync`) so that tasks
@@ -162,6 +202,19 @@ pub struct SimCluster {
     speculation: Mutex<Option<f64>>,
     fault_kills: AtomicU64,
     fault_restarts: AtomicU64,
+    /// Link-fault state for the open round (`net` stays the healthy
+    /// analytic model; this layers per-round drop/dup/degrade/partition
+    /// windows on top of it).
+    netstate: TrackedMutex<NetState>,
+    /// Scheduled link faults, drained at round boundaries alongside
+    /// `faults`.
+    netfaults: Mutex<Option<Arc<NetFaultPlan>>>,
+    net_sends: AtomicU64,
+    net_drops: AtomicU64,
+    net_retries: AtomicU64,
+    net_dups: AtomicU64,
+    net_partition_waits: AtomicU64,
+    net_replacements: AtomicU64,
 }
 
 impl SimCluster {
@@ -182,6 +235,29 @@ impl SimCluster {
             speculation: Mutex::new(None),
             fault_kills: AtomicU64::new(0),
             fault_restarts: AtomicU64::new(0),
+            netstate: TrackedMutex::new(
+                "sim.netstate",
+                NetState {
+                    seed: 0,
+                    windows: Vec::new(),
+                    link: LinkState::inactive(machines),
+                    policy: PartitionPolicy::default(),
+                    // messages are cheap to retry compared to recomputing a
+                    // partition, so the per-message budget allows far more
+                    // attempts than the task-level default of 4
+                    retry: RetryPolicy {
+                        max_attempts: 16,
+                        ..RetryPolicy::default()
+                    },
+                },
+            ),
+            netfaults: Mutex::new(None),
+            net_sends: AtomicU64::new(0),
+            net_drops: AtomicU64::new(0),
+            net_retries: AtomicU64::new(0),
+            net_dups: AtomicU64::new(0),
+            net_partition_waits: AtomicU64::new(0),
+            net_replacements: AtomicU64::new(0),
         }
     }
 
@@ -205,19 +281,62 @@ impl SimCluster {
 
     /// Failure-aware placement: partition `p`'s primary machine when it
     /// is alive, otherwise the first alive machine scanning up from the
-    /// primary. The fallback is a pure function of (partition, health
-    /// vector), so re-assignment is deterministic for any host thread
-    /// count. Errors with [`Error::FaultRecovery`] when the whole fleet
-    /// is down.
+    /// primary. Under [`PartitionPolicy::Replace`] with an active network
+    /// partition, machines cut off from the master's side are skipped the
+    /// same way dead ones are (they're unreachable, so placing work there
+    /// would stall the round). The fallback is a pure function of
+    /// (partition, health vector, link state), so re-assignment is
+    /// deterministic for any host thread count. Errors with
+    /// [`Error::FaultRecovery`] when the whole fleet is down, and with
+    /// [`Error::NetFault`] when machines are alive but all behind the cut.
     pub fn assign_machine(&self, partition: usize) -> Result<usize> {
         let n = self.specs.len();
         let primary = partition % n;
-        let h = lock_unpoisoned(&self.health);
-        for k in 0..n {
-            let m = (primary + k) % n;
-            if h[m] == MachineHealth::Up {
-                return Ok(m);
+        // snapshot the cut (if any) before taking the health lock; the
+        // two locks are never held together
+        let unreachable: Option<Vec<bool>> = {
+            let ns = self.netstate.lock();
+            if ns.policy == PartitionPolicy::Replace && ns.link.is_active() {
+                Some((0..n).map(|m| !ns.link.same_side_as_master(m)).collect())
+            } else {
+                None
             }
+        };
+        let (chosen, primary_up, alive_but_cut) = {
+            let h = lock_unpoisoned(&self.health);
+            let mut chosen = None;
+            let mut alive_but_cut = false;
+            for k in 0..n {
+                let m = (primary + k) % n;
+                if h[m] != MachineHealth::Up {
+                    continue;
+                }
+                match &unreachable {
+                    Some(cut) if cut[m] => alive_but_cut = true,
+                    _ => {
+                        chosen = Some(m);
+                        break;
+                    }
+                }
+            }
+            (chosen, h[primary] == MachineHealth::Up, alive_but_cut)
+        };
+        if let Some(m) = chosen {
+            // re-routed off an alive-but-unreachable primary: that's a
+            // network replacement, not a node-fault one
+            if m != primary
+                && primary_up
+                && unreachable.as_ref().is_some_and(|cut| cut[primary])
+            {
+                self.net_replacements.fetch_add(1, Ordering::Relaxed);
+            }
+            return Ok(m);
+        }
+        if alive_but_cut {
+            return Err(Error::NetFault(format!(
+                "no reachable machine for partition {partition}: every alive \
+                 machine is behind the active network partition"
+            )));
         }
         Err(Error::FaultRecovery(format!(
             "no machine alive to place partition {partition} (all {n} down)"
@@ -418,6 +537,327 @@ impl SimCluster {
         (launched, wins)
     }
 
+    // -- network-failure model --------------------------------------------
+
+    /// Attach a [`NetFaultPlan`]; due link-fault windows open at each
+    /// `begin_round` (alongside `with_faults` node kills) and the plan's
+    /// seed drives every per-message drop/duplicate roll.
+    pub fn with_netfaults(self, plan: Arc<NetFaultPlan>) -> SimCluster {
+        self.netstate.lock().seed = plan.seed();
+        *lock_unpoisoned(&self.netfaults) = Some(plan);
+        self
+    }
+
+    /// Choose what senders do when a partition cuts them off from their
+    /// destination (default [`PartitionPolicy::WaitOut`]).
+    pub fn with_partition_policy(self, p: PartitionPolicy) -> SimCluster {
+        self.netstate.lock().policy = p;
+        self
+    }
+
+    pub fn partition_policy(&self) -> PartitionPolicy {
+        self.netstate.lock().policy
+    }
+
+    /// Swap the per-message retry policy (attempts / backoff / timeout
+    /// budget, all in simulated seconds on this path). The default allows
+    /// 16 attempts — messages are cheap to retry compared to tasks.
+    pub fn set_net_retry_policy(&self, r: RetryPolicy) {
+        self.netstate.lock().retry = r;
+    }
+
+    /// Message-level accounting so far (drops, retries, duplicates,
+    /// partition waits/replacements).
+    pub fn net_stats(&self) -> NetStats {
+        NetStats {
+            sends: self.net_sends.load(Ordering::Relaxed),
+            drops: self.net_drops.load(Ordering::Relaxed),
+            retries: self.net_retries.load(Ordering::Relaxed),
+            dups: self.net_dups.load(Ordering::Relaxed),
+            partition_waits: self.net_partition_waits.load(Ordering::Relaxed),
+            replacements: self.net_replacements.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Apply the link-fault schedule at a round boundary: expire windows
+    /// that have healed, open windows due this round, and rebuild the
+    /// per-round [`LinkState`] snapshot the send path reads.
+    fn apply_due_netfaults(&self, round: usize) {
+        let plan = lock_unpoisoned(&self.netfaults).clone();
+        let machines = self.specs.len();
+        let opened: Vec<&'static str> = {
+            let mut ns = self.netstate.lock();
+            ns.windows.retain(|(until, _)| *until > round);
+            let mut opened = Vec::new();
+            if let Some(plan) = &plan {
+                for ev in plan.take_due(round) {
+                    opened.push(ev.kind.label());
+                    ns.windows.push((round + ev.rounds.max(1), ev.kind));
+                }
+            }
+            if ns.windows.is_empty() && !ns.link.is_active() && opened.is_empty() {
+                return; // steady healthy state: skip the rebuild
+            }
+            ns.link = LinkState::build(ns.seed, machines, round, &ns.windows);
+            opened
+        };
+        // spans are emitted after the netstate lock is dropped
+        let tracer = self.tracer();
+        if tracer.is_enabled() {
+            for label in opened {
+                if let Some(t0) = tracer.start() {
+                    tracer.span(
+                        format!("netfault:{label}-round-{round}"),
+                        "fault",
+                        0,
+                        t0,
+                        &[],
+                    );
+                }
+                tracer.count("net.windows", 1);
+            }
+        }
+    }
+
+    /// Clone the send path's inputs out of the netstate lock (never held
+    /// across a charge).
+    fn net_snapshot(&self) -> (LinkState, RetryPolicy, PartitionPolicy) {
+        let ns = self.netstate.lock();
+        (ns.link.clone(), ns.retry, ns.policy)
+    }
+
+    /// Allocate `n` message ids in the open round's sequence; the
+    /// (round, id) pair makes every message's fault rolls unique and
+    /// deterministic. Charges are driver-side and sequential, so ids are
+    /// stable for any host thread count.
+    fn reserve_msgs(&self, n: u64) -> Result<u64> {
+        let mut l = lock_unpoisoned(&self.ledger);
+        let cur = l
+            .current
+            .as_mut()
+            .ok_or_else(|| Error::Engine("net transfer outside an open round".into()))?;
+        let base = cur.net_msgs;
+        cur.net_msgs += n;
+        Ok(base)
+    }
+
+    /// Charge `secs` of communication and `bytes` moved to the open round.
+    fn charge_net(&self, secs: f64, bytes: u64) -> Result<()> {
+        let mut l = lock_unpoisoned(&self.ledger);
+        let cur = l
+            .current
+            .as_mut()
+            .ok_or_else(|| Error::Engine("net transfer outside an open round".into()))?;
+        cur.comm_s += secs;
+        cur.net_bytes += bytes;
+        Ok(())
+    }
+
+    /// Flush a call's message tally into the run totals and the tracer.
+    fn flush_tally(&self, t: SendTally) {
+        self.net_sends.fetch_add(t.sends, Ordering::Relaxed);
+        self.net_drops.fetch_add(t.drops, Ordering::Relaxed);
+        self.net_retries.fetch_add(t.retries, Ordering::Relaxed);
+        self.net_dups.fetch_add(t.dups, Ordering::Relaxed);
+        self.net_partition_waits
+            .fetch_add(t.partition_waits, Ordering::Relaxed);
+        let tracer = self.tracer();
+        if tracer.is_enabled() {
+            if t.sends > 0 {
+                tracer.count("net.sends", t.sends);
+            }
+            if t.drops > 0 {
+                tracer.count("net.drops", t.drops);
+            }
+            if t.retries > 0 {
+                tracer.count("net.retries", t.retries);
+            }
+            if t.dups > 0 {
+                tracer.count("net.dups", t.dups);
+            }
+            if t.partition_waits > 0 {
+                tracer.count("net.partition.waits", t.partition_waits);
+            }
+        }
+    }
+
+    /// Deliver one logical message over the faulted link model. Returns
+    /// the simulated seconds charged and the bytes that crossed the wire
+    /// (duplicates pay twice). Faults only ever move *time* and counters —
+    /// never payloads — so results stay bitwise-identical to the healthy
+    /// run whenever every message eventually lands.
+    #[allow(clippy::too_many_arguments)]
+    fn send_one(
+        &self,
+        ls: &LinkState,
+        retry: &RetryPolicy,
+        policy: PartitionPolicy,
+        src: usize,
+        dst: usize,
+        bytes: u64,
+        msg: u64,
+        tally: &mut SendTally,
+    ) -> Result<(f64, u64)> {
+        tally.sends += 1;
+        let q = ls.quality(src, dst);
+        // one-way time over the (possibly degraded) link, and the ack
+        // window after which the sender declares the attempt lost
+        let one = self.net.msg_time_scaled(bytes, q.latency_x, q.bandwidth_div);
+        let timeout = one * NET_TIMEOUT_FACTOR;
+        let mut secs = 0.0;
+        let mut moved = 0u64;
+        if ls.partitioned(src, dst) {
+            match policy {
+                PartitionPolicy::Replace => {
+                    return Err(Error::NetFault(format!(
+                        "partition: {src}->{dst} is cut for {} more round(s)",
+                        ls.heal_in.max(1)
+                    )));
+                }
+                PartitionPolicy::WaitOut => {
+                    // the cut outlives any retry budget; the sender blocks
+                    // until the window heals, probing once per remaining
+                    // round, then delivers below
+                    secs += ls.heal_in.max(1) as f64 * timeout;
+                    tally.partition_waits += 1;
+                }
+            }
+        }
+        let mut attempt = 1usize;
+        loop {
+            if msg_roll(ls.seed(), ls.round, msg, attempt, ROLL_DROP) >= q.drop_p {
+                // delivered: charge the transfer; a duplicate delivery
+                // consumes the link a second time but is deduped by the
+                // receiver (values never change)
+                secs += one;
+                moved += bytes;
+                if msg_roll(ls.seed(), ls.round, msg, attempt, ROLL_DUP) < q.dup_p {
+                    secs += one;
+                    moved += bytes;
+                    tally.dups += 1;
+                }
+                return Ok((secs, moved));
+            }
+            // lost: the sender burns the ack window discovering it
+            tally.drops += 1;
+            secs += timeout;
+            match retry.next_backoff(attempt, Duration::from_secs_f64(secs)) {
+                Some(backoff) => {
+                    secs += backoff.as_secs_f64();
+                    tally.retries += 1;
+                    attempt += 1;
+                }
+                None => {
+                    return Err(Error::NetFault(format!(
+                        "message {msg} ({src}->{dst}, {bytes} B) dropped \
+                         {attempt} time(s); retry budget exhausted \
+                         (drop_p={:.2}, round {})",
+                        q.drop_p, ls.round
+                    )));
+                }
+            }
+        }
+    }
+
+    /// Master broadcast through the fault layer: identical to
+    /// [`SimCluster::charge_broadcast`] while no window is open; under
+    /// active faults it decomposes into per-link master->m messages, each
+    /// with retry/timeout semantics. (Modeling simplification: a faulted
+    /// collective serializes its per-link messages, an upper bound on the
+    /// topology's healthy schedule.)
+    pub fn net_broadcast(&self, topo: CommTopology, bytes: u64) -> Result<()> {
+        let (ls, retry, policy) = self.net_snapshot();
+        if !ls.is_active() {
+            self.charge_broadcast(topo, bytes);
+            return Ok(());
+        }
+        let m = self.specs.len();
+        let base = self.reserve_msgs(m.saturating_sub(1) as u64)?;
+        let mut tally = SendTally::default();
+        let mut secs = 0.0;
+        let mut moved = 0u64;
+        let mut result = Ok(());
+        for (i, dst) in (1..m).enumerate() {
+            // under Replace, cut-off destinations are skipped: their work
+            // was re-placed onto the master's side by assign_machine
+            if policy == PartitionPolicy::Replace && ls.partitioned(0, dst) {
+                continue;
+            }
+            match self.send_one(&ls, &retry, policy, 0, dst, bytes, base + i as u64, &mut tally)
+            {
+                Ok((s, b)) => {
+                    secs += s;
+                    moved += b;
+                }
+                Err(e) => {
+                    result = Err(e);
+                    break;
+                }
+            }
+        }
+        self.flush_tally(tally);
+        self.charge_net(secs, moved)?;
+        result
+    }
+
+    /// Model allreduce through the fault layer: identical to
+    /// [`SimCluster::charge_allreduce`] while no window is open; under
+    /// active faults it decomposes into m->master gather messages plus a
+    /// master->m broadcast, each with retry/timeout semantics.
+    pub fn net_allreduce(&self, topo: CommTopology, bytes: u64) -> Result<()> {
+        let (ls, retry, policy) = self.net_snapshot();
+        if !ls.is_active() {
+            self.charge_allreduce(topo, bytes);
+            return Ok(());
+        }
+        let m = self.specs.len();
+        let base = self.reserve_msgs(2 * m.saturating_sub(1) as u64)?;
+        let mut tally = SendTally::default();
+        let mut secs = 0.0;
+        let mut moved = 0u64;
+        let mut result = Ok(());
+        'outer: for (leg, flip) in [(0u64, false), (1u64, true)] {
+            for (i, peer) in (1..m).enumerate() {
+                if policy == PartitionPolicy::Replace && ls.partitioned(0, peer) {
+                    continue;
+                }
+                let (src, dst) = if flip { (0, peer) } else { (peer, 0) };
+                let msg = base + leg * m.saturating_sub(1) as u64 + i as u64;
+                match self.send_one(&ls, &retry, policy, src, dst, bytes, msg, &mut tally) {
+                    Ok((s, b)) => {
+                        secs += s;
+                        moved += b;
+                    }
+                    Err(e) => {
+                        result = Err(e);
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        self.flush_tally(tally);
+        self.charge_net(secs, moved)?;
+        result
+    }
+
+    /// One point-to-point transfer (shuffle bucket move) through the
+    /// fault layer; an alpha-beta message while no window is open.
+    pub fn net_transfer(&self, src: usize, dst: usize, bytes: u64) -> Result<()> {
+        if src == dst {
+            return Ok(()); // local move: no wire
+        }
+        let (ls, retry, policy) = self.net_snapshot();
+        if !ls.is_active() {
+            return self.charge_net(self.net.msg_time(bytes), bytes);
+        }
+        let msg = self.reserve_msgs(1)?;
+        let mut tally = SendTally::default();
+        let sent = self.send_one(&ls, &retry, policy, src, dst, bytes, msg, &mut tally);
+        self.flush_tally(tally);
+        let (secs, moved) = sent?;
+        self.charge_net(secs, moved)
+    }
+
     // -- memory model ---------------------------------------------------
 
     /// Charge `bytes` of resident memory on a machine; simulated OOM if
@@ -465,6 +905,7 @@ impl SimCluster {
             l.rounds
         };
         self.apply_due_faults(round_idx);
+        self.apply_due_netfaults(round_idx);
     }
 
     /// Execute `f` on behalf of `machine`, really timing it and charging
@@ -607,9 +1048,27 @@ impl SimCluster {
     /// enabled), fold the round into the total, and return its stats.
     pub fn end_round(&self) -> RoundStats {
         let spec_k = self.speculation();
+        // under an active network partition, machines behind the cut are
+        // excluded from hosting speculative backups — a backup the master
+        // can't reach would never win the round
+        let reachable: Option<Vec<bool>> = {
+            let ns = self.netstate.lock();
+            if ns.link.is_active() {
+                Some(
+                    (0..self.specs.len())
+                        .map(|m| ns.link.same_side_as_master(m))
+                        .collect(),
+                )
+            } else {
+                None
+            }
+        };
         let alive: Vec<bool> = lock_unpoisoned(&self.health)
             .iter()
-            .map(|h| *h == MachineHealth::Up)
+            .enumerate()
+            .map(|(m, h)| {
+                *h == MachineHealth::Up && reachable.as_ref().is_none_or(|r| r[m])
+            })
             .collect();
         let (cur, t, wall_s, round_idx, launched, wins) = {
             let mut l = lock_unpoisoned(&self.ledger);
@@ -949,6 +1408,229 @@ mod tests {
         c2.charge_compute(1, 10.0);
         assert!((c2.end_round().round_time(&c2.specs) - 10.0).abs() < 1e-9);
         assert_eq!(c2.speculation_stats(), (0, 0));
+    }
+
+    #[test]
+    fn net_paths_match_analytic_charges_when_healthy() {
+        // no plan attached: net_* wrappers must charge bit-for-bit what
+        // the analytic methods do
+        let a = SimCluster::ec2(4);
+        a.begin_round();
+        a.charge_broadcast(CommTopology::StarGatherBroadcast, 1_000_000);
+        a.charge_allreduce(CommTopology::StarGatherBroadcast, 1_000_000);
+        let sa = a.end_round();
+        let b = SimCluster::ec2(4);
+        b.begin_round();
+        b.net_broadcast(CommTopology::StarGatherBroadcast, 1_000_000).unwrap();
+        b.net_allreduce(CommTopology::StarGatherBroadcast, 1_000_000).unwrap();
+        let sb = b.end_round();
+        assert_eq!(sa.comm_s, sb.comm_s);
+        assert_eq!(sa.net_bytes, sb.net_bytes);
+        assert_eq!(b.net_stats(), NetStats::default());
+        // point-to-point healthy transfer is one alpha-beta message
+        let c = SimCluster::ec2(4);
+        c.begin_round();
+        c.net_transfer(0, 3, 1_000_000).unwrap();
+        let sc = c.end_round();
+        assert_eq!(sc.comm_s, c.net.msg_time(1_000_000));
+        assert_eq!(sc.net_bytes, 1_000_000);
+    }
+
+    #[test]
+    fn drop_window_charges_retries_and_is_deterministic() {
+        let run = || {
+            let plan = Arc::new(NetFaultPlan::new(42));
+            plan.window(0, 1, NetFaultKind::Drop { machine: None, prob: 0.5 });
+            let c = SimCluster::ec2(8).with_netfaults(plan);
+            c.begin_round();
+            c.net_allreduce(CommTopology::StarGatherBroadcast, 100_000).unwrap();
+            let s = c.end_round();
+            (s.comm_s, s.net_bytes, c.net_stats())
+        };
+        let (comm, bytes, stats) = run();
+        // at p=0.5 over 14 messages some drops are near-certain, and each
+        // drop burns an ack window, so time exceeds the healthy charge
+        assert!(stats.drops > 0, "{stats:?}");
+        assert_eq!(stats.retries, stats.drops, "every drop retried: {stats:?}");
+        assert_eq!(stats.sends, 14);
+        let healthy = SimCluster::ec2(8);
+        healthy.begin_round();
+        healthy.net_allreduce(CommTopology::StarGatherBroadcast, 100_000).unwrap();
+        let hs = healthy.end_round();
+        assert!(comm > hs.comm_s, "faulted {comm} vs healthy {}", hs.comm_s);
+        // bit-for-bit replay under the same seed
+        let (comm2, bytes2, stats2) = run();
+        assert_eq!(comm.to_bits(), comm2.to_bits());
+        assert_eq!(bytes, bytes2);
+        assert_eq!(stats, stats2);
+    }
+
+    #[test]
+    fn duplicate_window_pays_bandwidth_twice() {
+        let plan = Arc::new(NetFaultPlan::new(7));
+        plan.window(0, 1, NetFaultKind::Duplicate { machine: None, prob: 1.0 });
+        let c = SimCluster::ec2(4).with_netfaults(plan);
+        c.begin_round();
+        c.net_broadcast(CommTopology::StarGatherBroadcast, 1_000).unwrap();
+        let s = c.end_round();
+        let stats = c.net_stats();
+        assert_eq!(stats.dups, 3, "{stats:?}");
+        assert_eq!(s.net_bytes, 2 * 3 * 1_000);
+        assert_eq!(stats.drops, 0);
+    }
+
+    #[test]
+    fn degrade_window_slows_the_link() {
+        let plan = Arc::new(NetFaultPlan::new(7));
+        plan.window(
+            0,
+            1,
+            NetFaultKind::Degrade { machine: Some(3), latency_x: 10.0, bandwidth_div: 10.0 },
+        );
+        let c = SimCluster::ec2(4).with_netfaults(plan);
+        c.begin_round();
+        c.net_transfer(0, 3, 1_000_000).unwrap(); // degraded endpoint
+        c.net_transfer(0, 1, 1_000_000).unwrap(); // untouched link
+        let s = c.end_round();
+        let slow = c.net.msg_time_scaled(1_000_000, 10.0, 10.0);
+        let fast = c.net.msg_time(1_000_000);
+        assert!((s.comm_s - (slow + fast)).abs() < 1e-12, "{}", s.comm_s);
+        assert_eq!(c.net_stats().drops, 0);
+    }
+
+    #[test]
+    fn partition_wait_out_charges_and_heals() {
+        let plan = Arc::new(NetFaultPlan::new(7));
+        plan.window(0, 2, NetFaultKind::Partition { minority: vec![3] });
+        let c = SimCluster::ec2(4).with_netfaults(plan);
+        c.begin_round();
+        c.net_transfer(0, 3, 1_000).unwrap();
+        c.net_transfer(0, 1, 1_000).unwrap();
+        let s0 = c.end_round();
+        let stats = c.net_stats();
+        assert_eq!(stats.partition_waits, 1, "{stats:?}");
+        // the cut transfer waited ~2 rounds of ack windows on top of its
+        // delivery; the same-side one paid only the alpha-beta time
+        assert!(s0.comm_s > 2.0 * c.net.msg_time(1_000), "{}", s0.comm_s);
+        // round 2: window closed, links healthy again
+        c.begin_round();
+        c.end_round();
+        c.begin_round();
+        c.net_transfer(0, 3, 1_000).unwrap();
+        let s2 = c.end_round();
+        assert_eq!(s2.comm_s, c.net.msg_time(1_000));
+        assert_eq!(c.net_stats().partition_waits, 1);
+    }
+
+    #[test]
+    fn partition_replace_reroutes_placement_and_fails_direct_sends() {
+        let plan = Arc::new(NetFaultPlan::new(7));
+        plan.window(0, 1, NetFaultKind::Partition { minority: vec![2, 3] });
+        let c = SimCluster::ec2(4)
+            .with_netfaults(plan)
+            .with_partition_policy(PartitionPolicy::Replace);
+        c.begin_round();
+        // placement: cut machines are skipped like dead ones
+        assert_eq!(c.assign_machine(0).unwrap(), 0);
+        assert_eq!(c.assign_machine(2).unwrap(), 0, "2 is cut; scan wraps to 0");
+        assert_eq!(c.assign_machine(3).unwrap(), 0);
+        assert_eq!(c.net_stats().replacements, 2);
+        // a direct send across the cut is a typed NetFault
+        let err = c.net_transfer(0, 3, 1_000).unwrap_err();
+        assert!(err.is_net_fault(), "got {err}");
+        // a broadcast skips the unreachable half but reaches machine 1
+        c.net_broadcast(CommTopology::StarGatherBroadcast, 1_000).unwrap();
+        assert_eq!(c.net_stats().sends, 2, "one failed transfer + one bcast leg");
+        c.end_round();
+        // master side dead + everything else cut: alive-but-unreachable
+        c.kill_machine(0, None);
+        c.kill_machine(1, None);
+        c.begin_round(); // reopens nothing; windows expired
+        c.end_round();
+        // re-open a cut for the error-path check
+        let plan2 = Arc::new(NetFaultPlan::new(8));
+        plan2.window(2, 1, NetFaultKind::Partition { minority: vec![2, 3] });
+        let c2 = SimCluster::ec2(4)
+            .with_netfaults(plan2)
+            .with_partition_policy(PartitionPolicy::Replace);
+        c2.kill_machine(0, None);
+        c2.kill_machine(1, None);
+        c2.begin_round();
+        c2.end_round();
+        c2.begin_round();
+        c2.end_round();
+        c2.begin_round(); // round 2: cut opens; machines 2,3 alive but cut
+        let err = c2.assign_machine(0).unwrap_err();
+        assert!(err.is_net_fault(), "alive-but-cut must be NetFault, got {err}");
+        c2.end_round();
+    }
+
+    #[test]
+    fn total_drop_exhausts_retry_budget_with_typed_error() {
+        let plan = Arc::new(NetFaultPlan::new(7));
+        plan.window(0, 1, NetFaultKind::Drop { machine: None, prob: 1.0 });
+        let c = SimCluster::ec2(2).with_netfaults(plan);
+        c.set_net_retry_policy(RetryPolicy {
+            max_attempts: 3,
+            ..RetryPolicy::default()
+        });
+        c.begin_round();
+        let err = c.net_transfer(0, 1, 1_000).unwrap_err();
+        assert!(err.is_net_fault(), "got {err}");
+        assert!(err.to_string().contains("retry budget exhausted"), "got {err}");
+        let stats = c.net_stats();
+        assert_eq!(stats.drops, 3);
+        assert_eq!(stats.retries, 2, "last attempt has no retry after it");
+        c.end_round();
+    }
+
+    #[test]
+    fn netfault_windows_emit_spans_and_counters() {
+        let (tracer, sink) = Tracer::recording();
+        let plan = Arc::new(NetFaultPlan::new(3));
+        plan.window(0, 1, NetFaultKind::Drop { machine: None, prob: 0.75 });
+        let c = SimCluster::ec2(8).with_netfaults(plan).with_tracer(tracer);
+        // with p=0.75, 64 attempts make exhaustion vanishingly unlikely
+        // while 14 messages make at least one drop a statistical certainty
+        // (tiny backoff base keeps the summed backoffs inside the budget)
+        c.set_net_retry_policy(RetryPolicy {
+            max_attempts: 64,
+            backoff_base: Duration::from_micros(1),
+            ..RetryPolicy::default()
+        });
+        c.begin_round();
+        c.net_allreduce(CommTopology::StarGatherBroadcast, 50_000).unwrap();
+        c.end_round();
+        assert_eq!(sink.counter("net.windows"), 1);
+        assert_eq!(sink.counter("net.sends"), 14);
+        assert!(sink.counter("net.drops") > 0, "p=0.75 over 14 messages");
+        assert!(
+            sink.spans()
+                .iter()
+                .any(|s| s.name == "netfault:drop-round-0" && s.cat == "fault"),
+            "window span missing: {:?}",
+            sink.spans().iter().map(|s| s.name.clone()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn speculation_backups_avoid_cut_machines() {
+        // machine 3 straggles; machines 1,2 are behind the cut, so the
+        // backup must land on machine 0 (the only reachable peer)
+        let plan = Arc::new(NetFaultPlan::new(7));
+        plan.window(0, 1, NetFaultKind::Partition { minority: vec![1, 2] });
+        let c = SimCluster::ec2(4).with_netfaults(plan).with_speculation(2.0);
+        c.begin_round();
+        c.charge_compute(0, 1.0);
+        c.charge_compute(1, 0.1);
+        c.charge_compute(2, 0.1);
+        c.charge_compute(3, 10.0);
+        let stats = c.end_round();
+        assert_eq!(c.speculation_stats(), (1, 1));
+        // least-loaded *reachable* machine is 0 (1.0s) even though 1 and 2
+        // are idle-ish — they're behind the cut
+        assert!(stats.machine_compute_s[0] > 1.0, "{:?}", stats.machine_compute_s);
+        assert!((stats.machine_compute_s[1] - 0.1).abs() < 1e-9);
     }
 
     #[test]

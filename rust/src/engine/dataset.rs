@@ -219,21 +219,23 @@ impl<T: Clone + Send + Sync + 'static> Dataset<T> {
         for attempt in 0..attempts {
             if attempt > 0 {
                 // exponential backoff before each retry (scheduler
-                // re-launch delay), clamped to the remaining wall-clock
-                // budget so a large backoff can't overshoot the timeout
-                let backoff = policy.backoff_base * (1u32 << (attempt - 1).min(16));
-                let remaining = policy.timeout.saturating_sub(budget.elapsed());
-                std::thread::sleep(backoff.min(remaining));
-                if budget.elapsed() >= policy.timeout {
-                    let last = last_err
-                        .as_ref()
-                        .map(|e| e.to_string())
-                        .unwrap_or_else(|| "no prior error".into());
-                    return Err(Error::FaultRecovery(format!(
-                        "retry budget timed out after {attempt} attempts \
-                         (dataset {}, partition {p}): {last}",
-                        self.core.id
-                    )));
+                // re-launch delay); a backoff that cannot complete inside
+                // the remaining wall-clock budget is refused outright, so
+                // exhaustion is reported before a futile final sleep
+                // instead of after overshooting the timeout
+                match policy.next_backoff(attempt, budget.elapsed()) {
+                    Some(backoff) => std::thread::sleep(backoff),
+                    None => {
+                        let last = last_err
+                            .as_ref()
+                            .map(|e| e.to_string())
+                            .unwrap_or_else(|| "no prior error".into());
+                        return Err(Error::FaultRecovery(format!(
+                            "retry budget timed out after {attempt} attempts \
+                             (dataset {}, partition {p}): {last}",
+                            self.core.id
+                        )));
+                    }
                 }
             }
             self.core.ctx.tasks_run.fetch_add(1, Ordering::Relaxed);
@@ -849,6 +851,32 @@ mod tests {
         let err = d.collect().unwrap_err();
         assert!(err.is_fault_recovery(), "got: {err}");
         assert!(err.to_string().contains("timed out"), "got: {err}");
+    }
+
+    #[test]
+    fn retry_refuses_futile_final_sleep() {
+        use super::super::RetryPolicy;
+        use std::time::Duration;
+        let c = ctx();
+        // the first backoff (1s) already exceeds the whole 50ms budget; the
+        // old behaviour slept the clamped remainder before erroring, the
+        // fixed one reports exhaustion immediately
+        c.set_retry_policy(RetryPolicy {
+            max_attempts: 10,
+            backoff_base: Duration::from_secs(1),
+            timeout: Duration::from_millis(50),
+        });
+        let d = c.parallelize(vec![1], 1).map(|x| *x);
+        c.failures.fail_times(d.id(), 0, 1_000_000);
+        let sw = std::time::Instant::now();
+        let err = d.collect().unwrap_err();
+        assert!(err.is_fault_recovery(), "got: {err}");
+        assert!(err.to_string().contains("timed out"), "got: {err}");
+        assert!(
+            sw.elapsed() < Duration::from_millis(500),
+            "slept through a futile backoff: {:?}",
+            sw.elapsed()
+        );
     }
 
     #[test]

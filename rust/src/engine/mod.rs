@@ -76,6 +76,33 @@ impl Default for RetryPolicy {
     }
 }
 
+impl RetryPolicy {
+    /// Backoff before retry `attempt` (1-based): `backoff_base *
+    /// 2^(attempt-1)`, exponent capped so the shift can't overflow.
+    pub fn backoff_for(&self, attempt: usize) -> Duration {
+        self.backoff_base * (1u32 << (attempt.saturating_sub(1)).min(16))
+    }
+
+    /// The sleep to take after failed attempt `attempt` (1-based), given
+    /// `elapsed` budget already spent. `None` means the retry budget is
+    /// exhausted: the attempt limit is reached, the timeout has elapsed,
+    /// or the backoff could not complete inside the remaining budget —
+    /// sleeping through the rest of the budget only to report exhaustion
+    /// afterwards is futile, so exhaustion is reported *before* the
+    /// overshooting sleep rather than after it.
+    pub fn next_backoff(&self, attempt: usize, elapsed: Duration) -> Option<Duration> {
+        if attempt >= self.max_attempts {
+            return None;
+        }
+        let backoff = self.backoff_for(attempt);
+        let remaining = self.timeout.checked_sub(elapsed)?;
+        if backoff >= remaining {
+            return None;
+        }
+        Some(backoff)
+    }
+}
+
 /// Shared engine state: id allocator, failure plan, task metrics, and the
 /// optional task executor. All counters are atomics so partition tasks on
 /// pool workers can record into them directly.
@@ -252,6 +279,28 @@ mod tests {
         });
         assert_eq!(ctx.retry_policy().max_attempts, 2);
         assert_eq!(ctx.checkpoint_hits(), 0);
+    }
+
+    #[test]
+    fn backoff_never_overshoots_the_budget() {
+        let p = RetryPolicy {
+            max_attempts: 10,
+            backoff_base: Duration::from_millis(10),
+            timeout: Duration::from_millis(25),
+        };
+        assert_eq!(p.backoff_for(1), Duration::from_millis(10));
+        assert_eq!(p.backoff_for(2), Duration::from_millis(20));
+        // plenty of budget left: sleep the exponential backoff
+        assert_eq!(p.next_backoff(1, Duration::ZERO), Some(Duration::from_millis(10)));
+        // 20ms backoff vs 15ms remaining: refused, not clamped-and-slept
+        assert_eq!(p.next_backoff(2, Duration::from_millis(10)), None);
+        // budget already spent
+        assert_eq!(p.next_backoff(1, Duration::from_millis(25)), None);
+        assert_eq!(p.next_backoff(1, Duration::from_secs(9)), None);
+        // attempt limit
+        assert_eq!(p.next_backoff(10, Duration::ZERO), None);
+        // huge attempt index saturates the exponent instead of overflowing
+        assert!(p.backoff_for(1000) >= p.backoff_for(17));
     }
 
     #[test]

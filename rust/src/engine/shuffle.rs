@@ -14,6 +14,7 @@ use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 
 use super::dataset::Dataset;
+use crate::cluster::SimCluster;
 use crate::error::Result;
 
 /// Deterministic bucket for a key.
@@ -79,23 +80,58 @@ where
     K: Clone + Hash + Eq + Send + Sync + 'static,
     V: Clone + Send + Sync + 'static,
 {
+    shuffle_reduce_on(parent, parts, f, None)
+}
+
+/// [`shuffle_reduce`] with its bucket transfers routed through a
+/// simulated cluster's network fault layer: the shuffle runs as one
+/// cluster round, and each (source partition -> bucket) message goes
+/// through `SimCluster::net_transfer` with placement from
+/// `assign_machine` — so it is charged, retried against drop windows,
+/// degraded, or failed (`Error::NetFault`) by any active link faults.
+/// The merged *values* never travel through the fault layer: output is
+/// bitwise-identical to the plain shuffle whenever every message lands.
+pub fn shuffle_reduce_on<K, V>(
+    parent: &Dataset<(K, V)>,
+    parts: usize,
+    f: &impl Fn(V, V) -> V,
+    cluster: Option<&SimCluster>,
+) -> Result<Vec<Vec<(K, V)>>>
+where
+    K: Clone + Hash + Eq + Send + Sync + 'static,
+    V: Clone + Send + Sync + 'static,
+{
     // materialize parents (parallel when the context has an executor and
     // this runs on the driver thread; inline-serial inside a pool task)
     let src = parent.partitions()?;
-    let mut buckets: Vec<OrderedMap<K, V>> = (0..parts).map(|_| OrderedMap::new()).collect();
-    for part in &src {
-        // map-side combine
-        let mut local: OrderedMap<K, V> = OrderedMap::new();
-        for (k, v) in part.iter() {
-            local.upsert(k.clone(), v.clone(), f);
-        }
-        // shuffle into reduce-side buckets
-        for (k, v) in local.into_entries() {
-            let b = bucket_of(&k, parts);
-            buckets[b].upsert(k, v, f);
-        }
+    if let Some(c) = cluster {
+        c.begin_round();
     }
-    Ok(buckets.into_iter().map(|m| m.into_entries()).collect())
+    let result = (|| {
+        let mut buckets: Vec<OrderedMap<K, V>> =
+            (0..parts).map(|_| OrderedMap::new()).collect();
+        for (sp, part) in src.iter().enumerate() {
+            // map-side combine
+            let mut local: OrderedMap<K, V> = OrderedMap::new();
+            for (k, v) in part.iter() {
+                local.upsert(k.clone(), v.clone(), f);
+            }
+            let entries = local.into_entries();
+            if let Some(c) = cluster {
+                charge_bucket_transfers(c, sp, parts, entries.iter().map(|(k, _)| k))?;
+            }
+            // shuffle into reduce-side buckets
+            for (k, v) in entries {
+                let b = bucket_of(&k, parts);
+                buckets[b].upsert(k, v, f);
+            }
+        }
+        Ok(buckets.into_iter().map(|m| m.into_entries()).collect())
+    })();
+    if let Some(c) = cluster {
+        c.end_round();
+    }
+    result
 }
 
 /// Hash shuffle with grouping (no combine function).
@@ -107,18 +143,72 @@ where
     K: Clone + Hash + Eq + Send + Sync + 'static,
     V: Clone + Send + Sync + 'static,
 {
+    shuffle_group_on(parent, parts, None)
+}
+
+/// [`shuffle_group`] through a simulated cluster's network fault layer;
+/// see [`shuffle_reduce_on`] for the transfer semantics. Grouping ships
+/// every record (no map-side combine), so its messages are proportionally
+/// larger.
+pub fn shuffle_group_on<K, V>(
+    parent: &Dataset<(K, V)>,
+    parts: usize,
+    cluster: Option<&SimCluster>,
+) -> Result<Vec<Vec<(K, Vec<V>)>>>
+where
+    K: Clone + Hash + Eq + Send + Sync + 'static,
+    V: Clone + Send + Sync + 'static,
+{
     let src = parent.partitions()?;
-    let mut buckets: Vec<OrderedMap<K, Vec<V>>> =
-        (0..parts).map(|_| OrderedMap::new()).collect();
-    for part in &src {
-        for (k, v) in part.iter() {
-            buckets[bucket_of(k, parts)].upsert(k.clone(), vec![v.clone()], &|mut a, b| {
-                a.extend(b);
-                a
-            });
-        }
+    if let Some(c) = cluster {
+        c.begin_round();
     }
-    Ok(buckets.into_iter().map(|m| m.into_entries()).collect())
+    let result = (|| {
+        let mut buckets: Vec<OrderedMap<K, Vec<V>>> =
+            (0..parts).map(|_| OrderedMap::new()).collect();
+        for (sp, part) in src.iter().enumerate() {
+            if let Some(c) = cluster {
+                charge_bucket_transfers(c, sp, parts, part.iter().map(|(k, _)| k))?;
+            }
+            for (k, v) in part.iter() {
+                buckets[bucket_of(k, parts)].upsert(k.clone(), vec![v.clone()], &|mut a, b| {
+                    a.extend(b);
+                    a
+                });
+            }
+        }
+        Ok(buckets.into_iter().map(|m| m.into_entries()).collect())
+    })();
+    if let Some(c) = cluster {
+        c.end_round();
+    }
+    result
+}
+
+/// Charge one source partition's per-bucket shuffle messages through the
+/// cluster's fault-aware transfer path. Buckets are visited in index
+/// order and sizes estimated from the record count, so the charge
+/// sequence (and hence every per-message fault roll) is deterministic.
+fn charge_bucket_transfers<'a, K: Hash + 'a>(
+    cluster: &SimCluster,
+    src_partition: usize,
+    parts: usize,
+    keys: impl Iterator<Item = &'a K>,
+) -> Result<()> {
+    let mut counts = vec![0u64; parts];
+    for k in keys {
+        counts[bucket_of(k, parts)] += 1;
+    }
+    let record_bytes = std::mem::size_of::<K>().max(8) as u64 * 2;
+    let src_m = cluster.assign_machine(src_partition)?;
+    for (b, n) in counts.iter().enumerate() {
+        if *n == 0 {
+            continue;
+        }
+        let dst_m = cluster.assign_machine(b)?;
+        cluster.net_transfer(src_m, dst_m, n * record_bytes)?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]

@@ -55,6 +55,13 @@ pub enum Error {
     /// `mli lint --deny` found violations of the determinism /
     /// concurrency invariants (see `crate::lint` and docs/lint.md).
     Lint(String),
+
+    /// Network-level fault: a message's retry/timeout budget was
+    /// exhausted against a lossy or degraded link, or a destination sat
+    /// on the wrong side of a partition under the `Replace` policy.
+    /// Distinct from [`Error::FaultRecovery`] (node death) so callers
+    /// and the chaos harness can tell the two failure domains apart.
+    NetFault(String),
 }
 
 impl fmt::Display for Error {
@@ -73,6 +80,7 @@ impl fmt::Display for Error {
             Error::Exec(m) => write!(f, "executor error: {m}"),
             Error::FaultRecovery(m) => write!(f, "fault recovery failed: {m}"),
             Error::Lint(m) => write!(f, "lint failed: {m}"),
+            Error::NetFault(m) => write!(f, "network fault: {m}"),
         }
     }
 }
@@ -112,6 +120,12 @@ impl Error {
     pub fn is_fault_recovery(&self) -> bool {
         matches!(self, Error::FaultRecovery(_))
     }
+
+    /// True if this error is a network fault (retry budget exhausted on a
+    /// lossy/degraded link, or a partition cut under `Replace`).
+    pub fn is_net_fault(&self) -> bool {
+        matches!(self, Error::NetFault(_))
+    }
 }
 
 #[cfg(test)]
@@ -128,6 +142,15 @@ mod tests {
     fn oom_detection() {
         assert!(Error::Oom("68GB cap".into()).is_oom());
         assert!(!Error::Schema("x".into()).is_oom());
+    }
+
+    #[test]
+    fn net_fault_detection() {
+        let e = Error::NetFault("partition cut 0->7".into());
+        assert!(e.is_net_fault());
+        assert!(e.to_string().contains("network fault"));
+        assert!(!e.is_fault_recovery());
+        assert!(!Error::FaultRecovery("x".into()).is_net_fault());
     }
 
     #[test]

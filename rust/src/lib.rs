@@ -58,7 +58,10 @@ pub mod prelude {
         Algorithm, AlsParams, KMeansParams, LinearRegression, LinearSVM,
         LogisticRegression, Model, ALS, KMeans,
     };
-    pub use crate::cluster::{CommTopology, FaultKind, FaultPlan, SimCluster};
+    pub use crate::cluster::{
+        CommTopology, FaultKind, FaultPlan, NetChaosConfig, NetFaultKind, NetFaultPlan,
+        NetStats, PartitionPolicy, SimCluster,
+    };
     pub use crate::engine::{EngineContext, RetryPolicy};
     pub use crate::error::{Error, Result};
     pub use crate::exec::{TaskSet, ThreadPool};
@@ -279,6 +282,118 @@ fn chaos_als(o: &ChaosOpts) -> Result<()> {
     Ok(())
 }
 
+/// Extra knobs for `mli chaos --net`.
+struct NetChaosOpts {
+    drop_rate: f64,
+    dup_rate: f64,
+    degrade: f64,
+    partition_rounds: usize,
+    policy: cluster::PartitionPolicy,
+    trace_out: Option<String>,
+}
+
+/// `mli chaos --net`: train logreg twice — a failure-free baseline, then
+/// under a seeded network fault schedule (lossy links, duplicate
+/// deliveries, degraded links, one partition window) — and require the
+/// faulted run to produce bitwise-identical weights. Network faults are
+/// allowed to move only simulated time and fault counters, never values;
+/// the run fails typed if they don't, or if the schedule turned out to be
+/// a no-op (no drops/retries/partition activity observed).
+fn chaos_net(o: &ChaosOpts, net: &NetChaosOpts) -> Result<()> {
+    use algorithms::logreg::{Backend, LogRegParams};
+    use algorithms::{Algorithm, LogisticRegression};
+    use std::sync::Arc;
+
+    let n = 2048;
+    let d = 32;
+    let run = |plan: Option<Arc<cluster::NetFaultPlan>>,
+               tracer: Option<Arc<trace::Tracer>>|
+     -> Result<(localmatrix::MLVector, f64, cluster::NetStats)> {
+        let ctx = engine::EngineContext::new();
+        let data = data::dense_gen::generate(&ctx, n, d, o.machines, o.seed)?;
+        let mut c = cluster::SimCluster::ec2(o.machines).with_partition_policy(net.policy);
+        if o.threads > 0 {
+            c = c.with_executor(o.threads);
+        }
+        if let Some(p) = plan {
+            c = c.with_netfaults(p);
+        }
+        if let Some(t) = tracer {
+            c.set_tracer(t);
+        }
+        let algo = LogisticRegression::new(LogRegParams {
+            sgd: optim::SgdParams {
+                iters: o.iters,
+                track_loss: true,
+                ..Default::default()
+            },
+            backend: Backend::Rust,
+        });
+        let model = algo.train(&data.table, &c)?;
+        Ok((model.weights.clone(), c.total_sim_seconds(), c.net_stats()))
+    };
+
+    let (base_w, base_sim, _) = run(None, None)?;
+    let cfg = cluster::NetChaosConfig {
+        drop_prob: net.drop_rate,
+        dup_prob: net.dup_rate,
+        degrade_windows: net.degrade,
+        partition_rounds: net.partition_rounds,
+        ..Default::default()
+    };
+    let plan = cluster::NetFaultPlan::random(o.seed, o.machines, o.iters + 2, &cfg);
+    // pin one drop window at round 1 so "nonzero drops" never depends on
+    // the seed lottery; like every window it moves time, not values
+    if net.drop_rate > 0.0 {
+        plan.window(1, 1, cluster::NetFaultKind::Drop { machine: None, prob: net.drop_rate });
+    }
+    let scheduled = plan.remaining();
+    let (tracer, sink) = if net.trace_out.is_some() {
+        let (t, s) = trace::Tracer::recording();
+        (Some(t), Some(s))
+    } else {
+        (None, None)
+    };
+    let (w, sim_s, stats) = run(Some(Arc::new(plan)), tracer)?;
+    println!(
+        "chaos net: machines={} iters={} seed={} drop-rate={} dup-rate={} \
+         partition-rounds={} policy={:?} ({scheduled} windows scheduled)",
+        o.machines, o.iters, o.seed, net.drop_rate, net.dup_rate, net.partition_rounds,
+        net.policy
+    );
+    println!(
+        "  faulted run: {} sends, {} drops, {} retries, {} dup deliveries, \
+         {} partition waits, {} replacements, sim {sim_s:.3}s (baseline {base_sim:.3}s)",
+        stats.sends, stats.drops, stats.retries, stats.dups, stats.partition_waits,
+        stats.replacements
+    );
+    if w != base_w {
+        return Err(Error::NetFault(
+            "chaos net: weights diverged from failure-free baseline".into(),
+        ));
+    }
+    if net.drop_rate > 0.0 && (stats.drops == 0 || stats.retries == 0) {
+        return Err(Error::NetFault(format!(
+            "chaos net: schedule was a no-op ({} drops, {} retries observed)",
+            stats.drops, stats.retries
+        )));
+    }
+    if net.partition_rounds > 0 && stats.partition_waits + stats.replacements == 0 {
+        return Err(Error::NetFault(
+            "chaos net: partition window produced no waits or replacements".into(),
+        ));
+    }
+    println!(
+        "  OK: weights bitwise-identical to baseline; faults moved time only \
+         (+{:.3}s sim)",
+        sim_s - base_sim
+    );
+    if let Some(s) = &sink {
+        finish_trace(s, net.trace_out.as_deref())?;
+    }
+    Ok(())
+}
+
 /// CLI entry point shared by `rust/src/main.rs` (kept here so integration
 /// tests can drive the launcher without spawning a process).
 pub fn run_cli(args: util::cli::Args) -> Result<()> {
@@ -372,6 +487,12 @@ pub fn run_cli(args: util::cli::Args) -> Result<()> {
                     );
                     let (kills, restarts) = cluster.fault_stats();
                     println!("node faults: {kills} kills, {restarts} restarts");
+                    let ns = cluster.net_stats();
+                    println!(
+                        "net faults: {} drops, {} retries, {} dups, {} partition waits \
+                         ({} fault-path sends)",
+                        ns.drops, ns.retries, ns.dups, ns.partition_waits, ns.sends
+                    );
                     if let (Some(s), Some(p)) = (&sink, cluster.pool()) {
                         p.export_trace(s.as_ref());
                     }
@@ -396,6 +517,12 @@ pub fn run_cli(args: util::cli::Args) -> Result<()> {
                     println!("sim walltime: {:.3}s", cluster.total_sim_seconds());
                     let (kills, restarts) = cluster.fault_stats();
                     println!("node faults: {kills} kills, {restarts} restarts");
+                    let ns = cluster.net_stats();
+                    println!(
+                        "net faults: {} drops, {} retries, {} dups, {} partition waits \
+                         ({} fault-path sends)",
+                        ns.drops, ns.retries, ns.dups, ns.partition_waits, ns.sends
+                    );
                     if let (Some(s), Some(p)) = (&sink, cluster.pool()) {
                         p.export_trace(s.as_ref());
                     }
@@ -602,6 +729,34 @@ pub fn run_cli(args: util::cli::Args) -> Result<()> {
                 tolerance: args.get_f64("tolerance", 0.2)?,
                 spec_k: args.get_f64("spec-k", 0.0)?,
             };
+            if args.has_flag("net") {
+                // mli chaos --net [--drop-rate 0.25] [--dup-rate 0.2]
+                //     [--degrade 0.3] [--partition-rounds 2]
+                //     [--partition-policy wait|replace] [--trace-out F]
+                //
+                // Network fault schedule instead of machine kills: lossy
+                // links retry, partitions wait out (or re-place), and the
+                // trained weights must stay bitwise-identical to the
+                // failure-free baseline.
+                let policy = match args.get_str("partition-policy", "wait").as_str() {
+                    "wait" => cluster::PartitionPolicy::WaitOut,
+                    "replace" => cluster::PartitionPolicy::Replace,
+                    other => {
+                        return Err(Error::Config(format!(
+                            "unknown --partition-policy '{other}' (wait|replace)"
+                        )))
+                    }
+                };
+                let net = NetChaosOpts {
+                    drop_rate: args.get_f64("drop-rate", 0.25)?,
+                    dup_rate: args.get_f64("dup-rate", 0.2)?,
+                    degrade: args.get_f64("degrade", 0.3)?,
+                    partition_rounds: args.get_usize("partition-rounds", 2)?,
+                    policy,
+                    trace_out: args.get("trace-out").map(String::from),
+                };
+                return chaos_net(&o, &net);
+            }
             match args.get_str("algo", "logreg").as_str() {
                 "logreg" => chaos_logreg(&o),
                 "als" => chaos_als(&o),
@@ -675,6 +830,11 @@ pub fn run_cli(args: util::cli::Args) -> Result<()> {
             println!("  chaos [--algo logreg|als|both]        seeded kill schedule; asserts the");
             println!("        [--seed 7] [--kill-rate 0.1]    recovered run matches a failure-");
             println!("        [--restart-after R] [--spec-k K] free baseline (R=0: permanent)");
+            println!("  chaos --net [--drop-rate 0.25]        seeded network fault schedule");
+            println!("        [--dup-rate 0.2] [--degrade 0.3] (lossy links, duplicates, degraded");
+            println!("        [--partition-rounds 2]           links, one partition); asserts");
+            println!("        [--partition-policy wait|replace] weights stay bitwise-identical");
+            println!("        [--trace-out F]                  while faults move sim time only");
             println!("  loc                                   Fig 2a/3a lines-of-code tables");
             println!("  lint [--deny] [--rule D001,..]        determinism/concurrency invariant");
             println!("       [--json [file]] [--root DIR]     checker over rust/{{src,tests,benches}}");

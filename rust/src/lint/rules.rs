@@ -240,12 +240,13 @@ fn find_fn_spans(tokens: &[Token]) -> Vec<(usize, usize, bool)> {
 /// the bitwise-determinism contract. `use` declarations and test code are
 /// exempt; lookup-only maps get an `allow` with the reason documented.
 pub fn d001(ctx: &FileCtx<'_>, out: &mut Vec<Diagnostic>) {
-    const SENSITIVE: [&str; 5] = [
+    const SENSITIVE: [&str; 6] = [
         "rust/src/engine/",
         "rust/src/optim/",
         "rust/src/algorithms/",
         "rust/src/trace/",
         "rust/src/metrics/",
+        "rust/src/cluster/netfault",
     ];
     if !SENSITIVE.iter().any(|p| ctx.rel.starts_with(p)) {
         return;

@@ -77,8 +77,11 @@ impl GD {
             if let Some(t0) = merge_t0 {
                 tracer.span(format!("gd-merge-{it}"), "optim", 0, t0, &[]);
             }
-            cluster.charge_allreduce(params.topology, provider.model_bytes());
+            // gradient merge travels the fault-aware path; close the
+            // round before propagating a network failure
+            let sent = cluster.net_allreduce(params.topology, provider.model_bytes());
             cluster.end_round();
+            sent?;
             if let Some(t0) = round_t0 {
                 tracer.span(format!("gd-round-{it}"), "optim", 0, t0, &[]);
             }

@@ -79,10 +79,13 @@ impl SGD {
         let mut loss_history = Vec::new();
         let t0 = cluster.total_sim_seconds();
 
-        // initial model broadcast (small: zeros, but the real systems ship it)
+        // initial model broadcast (small: zeros, but the real systems
+        // ship it); routed through the network fault layer so a lossy or
+        // partitioned round 0 retries / waits / fails typed
         cluster.begin_round();
-        cluster.charge_broadcast(params.topology, provider.model_bytes());
+        let sent = cluster.net_broadcast(params.topology, provider.model_bytes());
         cluster.end_round();
+        sent?;
 
         let tracer = cluster.tracer();
         for it in 0..params.iters {
@@ -126,8 +129,12 @@ impl SGD {
             if let Some(t0) = merge_t0 {
                 tracer.span(format!("sgd-merge-{it}"), "optim", 0, t0, &[]);
             }
-            cluster.charge_allreduce(params.topology, provider.model_bytes());
+            // model merge travels the fault-aware path: the round is
+            // closed before a network failure propagates, so the ledger
+            // never wedges in an open round
+            let sent = cluster.net_allreduce(params.topology, provider.model_bytes());
             cluster.end_round();
+            sent?;
             if let Some(t0) = round_t0 {
                 tracer.span(format!("sgd-round-{it}"), "optim", 0, t0, &[]);
             }

@@ -86,6 +86,24 @@ pub fn render(spans: &[SpanEvent], counters: &BTreeMap<String, u64>) -> String {
         ));
     }
 
+    // Network fault attribution: the SimCluster's fault-aware send path
+    // records drop/retry/duplicate/partition counters when a NetFaultPlan
+    // is active; silent when the run was failure-free.
+    let net = |k: &str| counters.get(k).copied().unwrap_or(0);
+    let (drops, retries, dups, waits) = (
+        net("net.drops"),
+        net("net.retries"),
+        net("net.dups"),
+        net("net.partition.waits"),
+    );
+    if drops + retries + dups + waits > 0 {
+        out.push_str(&format!(
+            "net faults: {drops} drops, {retries} retries, {dups} dup deliveries, \
+             {waits} partition waits ({} messages sent)\n",
+            net("net.sends")
+        ));
+    }
+
     out
 }
 
@@ -121,6 +139,24 @@ mod tests {
     fn empty_trace_renders_placeholder() {
         let s = render(&[], &BTreeMap::new());
         assert!(s.contains("no spans recorded"));
+    }
+
+    #[test]
+    fn net_fault_line_appears_only_when_faults_fired() {
+        let clean = render(&[], &BTreeMap::new());
+        assert!(!clean.contains("net faults:"), "{clean}");
+        let mut counters = BTreeMap::new();
+        counters.insert("net.sends".to_string(), 40u64);
+        counters.insert("net.drops".to_string(), 5u64);
+        counters.insert("net.retries".to_string(), 5u64);
+        counters.insert("net.dups".to_string(), 2u64);
+        counters.insert("net.partition.waits".to_string(), 3u64);
+        let s = render(&[], &counters);
+        assert!(
+            s.contains("net faults: 5 drops, 5 retries, 2 dup deliveries"),
+            "{s}"
+        );
+        assert!(s.contains("3 partition waits (40 messages sent)"), "{s}");
     }
 
     #[test]

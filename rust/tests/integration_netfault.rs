@@ -1,0 +1,197 @@
+//! Network fault-tolerance integration tests: shuffle determinism under
+//! lossy and duplicating links, end-to-end training bitwise-equivalence
+//! under drop/degrade/partition windows, partition policies, typed
+//! exhaustion, and the `mli chaos --net` CLI.
+
+use std::sync::Arc;
+
+use mli::algorithms::logreg::{Backend, LogRegParams};
+use mli::algorithms::{Algorithm, LogisticRegression};
+use mli::data::dense_gen;
+use mli::engine::shuffle::{
+    shuffle_group, shuffle_group_on, shuffle_reduce, shuffle_reduce_on,
+};
+use mli::prelude::*;
+
+/// A word-count-shaped pair dataset: 400 keys spread over 8 partitions,
+/// with repeated keys so reduce actually merges.
+fn pairs(ctx: &EngineContext) -> mli::engine::Dataset<(u32, u64)> {
+    ctx.parallelize(
+        (0..400u32).map(|i| (i % 37, 1u64)).collect::<Vec<_>>(),
+        8,
+    )
+}
+
+fn lossy_cluster(drop_p: f64, dup_p: f64) -> SimCluster {
+    let plan = NetFaultPlan::new(11);
+    // windows open at round 0 and stay open: every shuffle round is faulted
+    if drop_p > 0.0 {
+        plan.window(0, 100, NetFaultKind::Drop { machine: None, prob: drop_p });
+    }
+    if dup_p > 0.0 {
+        plan.window(0, 100, NetFaultKind::Duplicate { machine: None, prob: dup_p });
+    }
+    SimCluster::ec2(4).with_netfaults(Arc::new(plan))
+}
+
+#[test]
+fn shuffle_reduce_is_bitwise_deterministic_under_drops_and_dups() {
+    let ctx = EngineContext::new();
+    let base = shuffle_reduce(&pairs(&ctx), 8, &|a, b| a + b).unwrap();
+
+    let c = lossy_cluster(0.4, 0.3);
+    let faulted = shuffle_reduce_on(&pairs(&ctx), 8, &|a, b| a + b, Some(&c)).unwrap();
+    assert_eq!(faulted, base, "lossy links must not change shuffle output");
+
+    let stats = c.net_stats();
+    assert!(stats.sends > 0, "bucket transfers must route through the fault layer");
+    assert!(stats.drops > 0, "drop window must cost deliveries: {stats:?}");
+    assert!(stats.retries > 0, "drops must be retried: {stats:?}");
+    assert!(stats.dups > 0, "duplicate window must fire: {stats:?}");
+    assert!(c.total_comm_seconds() > 0.0, "retries charge simulated comm time");
+
+    // identical seed + schedule => identical accounting, bit for bit
+    let c2 = lossy_cluster(0.4, 0.3);
+    let again = shuffle_reduce_on(&pairs(&ctx), 8, &|a, b| a + b, Some(&c2)).unwrap();
+    assert_eq!(again, base);
+    assert_eq!(c2.net_stats(), stats, "replay must be deterministic");
+    assert_eq!(c2.total_comm_seconds().to_bits(), c.total_comm_seconds().to_bits());
+}
+
+#[test]
+fn shuffle_group_is_bitwise_deterministic_under_drops_and_dups() {
+    let ctx = EngineContext::new();
+    let base = shuffle_group(&pairs(&ctx), 8).unwrap();
+
+    let c = lossy_cluster(0.4, 0.3);
+    let faulted = shuffle_group_on(&pairs(&ctx), 8, Some(&c)).unwrap();
+    assert_eq!(faulted, base, "grouping must be unchanged under link faults");
+    let stats = c.net_stats();
+    assert!(stats.drops > 0 && stats.retries > 0 && stats.dups > 0, "{stats:?}");
+}
+
+#[test]
+fn healthy_links_charge_exactly_like_the_analytic_path() {
+    // With no fault plan, shuffle_*_on must reproduce the failure-free
+    // ledger bit-for-bit (the fault layer only activates inside windows).
+    let ctx = EngineContext::new();
+    let c_on = SimCluster::ec2(4);
+    let c_plan = SimCluster::ec2(4).with_netfaults(Arc::new(NetFaultPlan::new(3)));
+    let a = shuffle_reduce_on(&pairs(&ctx), 8, &|a, b| a + b, Some(&c_on)).unwrap();
+    let b = shuffle_reduce_on(&pairs(&ctx), 8, &|a, b| a + b, Some(&c_plan)).unwrap();
+    assert_eq!(a, b);
+    assert_eq!(
+        c_on.total_comm_seconds().to_bits(),
+        c_plan.total_comm_seconds().to_bits(),
+        "an empty plan must not perturb the ledger"
+    );
+    assert_eq!(c_plan.net_stats(), NetStats::default());
+}
+
+fn train_logreg(
+    plan: Option<Arc<NetFaultPlan>>,
+    policy: PartitionPolicy,
+) -> (MLVector, f64, NetStats) {
+    let ctx = EngineContext::new();
+    let data = dense_gen::generate(&ctx, 1024, 16, 8, 5).unwrap();
+    let mut c = SimCluster::ec2(8).with_partition_policy(policy);
+    if let Some(p) = plan {
+        c = c.with_netfaults(p);
+    }
+    let algo = LogisticRegression::new(LogRegParams {
+        sgd: SgdParams {
+            iters: 6,
+            ..Default::default()
+        },
+        backend: Backend::Rust,
+    });
+    let model = algo.train(&data.table, &c).unwrap();
+    (model.weights, c.total_sim_seconds(), c.net_stats())
+}
+
+#[test]
+fn training_under_lossy_degraded_partitioned_links_is_bitwise_identical() {
+    let (base_w, base_sim, base_stats) = train_logreg(None, PartitionPolicy::WaitOut);
+    assert_eq!(base_stats, NetStats::default());
+
+    let plan = Arc::new(NetFaultPlan::new(23));
+    plan.window(1, 2, NetFaultKind::Drop { machine: None, prob: 0.3 });
+    plan.window(2, 1, NetFaultKind::Degrade { machine: Some(1), latency_x: 8.0, bandwidth_div: 4.0 });
+    plan.window(3, 2, NetFaultKind::Partition { minority: vec![6, 7] });
+    let (w, sim_s, stats) = train_logreg(Some(plan), PartitionPolicy::WaitOut);
+
+    assert_eq!(w, base_w, "network faults must move time, never values");
+    assert!(stats.drops > 0 && stats.retries > 0, "{stats:?}");
+    assert!(stats.partition_waits > 0, "WaitOut must wait out the cut: {stats:?}");
+    assert_eq!(stats.replacements, 0, "WaitOut never re-places work");
+    assert!(
+        sim_s > base_sim,
+        "faulted run must cost simulated time: {sim_s} vs {base_sim}"
+    );
+}
+
+#[test]
+fn replace_policy_reroutes_placement_and_stays_bitwise_identical() {
+    let (base_w, _, _) = train_logreg(None, PartitionPolicy::Replace);
+    let plan = Arc::new(NetFaultPlan::new(29));
+    plan.window(2, 2, NetFaultKind::Partition { minority: vec![6, 7] });
+    let (w, _, stats) = train_logreg(Some(plan), PartitionPolicy::Replace);
+    assert_eq!(w, base_w, "re-placement must not change merge order or values");
+    assert!(
+        stats.replacements > 0,
+        "partitions resident on cut machines must re-place: {stats:?}"
+    );
+    assert_eq!(stats.partition_waits, 0, "Replace never waits out the cut");
+}
+
+#[test]
+fn total_loss_surfaces_as_typed_net_fault() {
+    // A link that drops everything exhausts the per-message retry budget
+    // and fails the job with Error::NetFault — no panic, no hang.
+    let ctx = EngineContext::new();
+    let data = dense_gen::generate(&ctx, 256, 8, 4, 3).unwrap();
+    let plan = Arc::new(NetFaultPlan::new(31));
+    plan.window(0, 100, NetFaultKind::Drop { machine: None, prob: 1.0 });
+    let c = SimCluster::ec2(4).with_netfaults(plan);
+    let algo = LogisticRegression::new(LogRegParams {
+        sgd: SgdParams {
+            iters: 3,
+            ..Default::default()
+        },
+        backend: Backend::Rust,
+    });
+    let err = algo.train(&data.table, &c).unwrap_err();
+    assert!(err.is_net_fault(), "expected NetFault, got: {err}");
+    let stats = c.net_stats();
+    assert!(stats.drops > stats.retries, "final attempt is a drop, not a retry");
+}
+
+#[test]
+fn chaos_cli_smoke_net() {
+    // `mli chaos --net` end-to-end at CI scale: the subcommand itself
+    // asserts bitwise baseline equivalence and nonzero fault activity,
+    // returning Err (-> test failure) otherwise.
+    use mli::util::cli::Args;
+    let trace = std::env::temp_dir().join("mli-test-chaos-net-trace.json");
+    let argv: Vec<String> = [
+        "chaos",
+        "--net",
+        "--machines",
+        "8",
+        "--iters",
+        "4",
+        "--seed",
+        "7",
+        "--drop-rate",
+        "0.25",
+        "--trace-out",
+        trace.to_str().unwrap(),
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    mli::run_cli(Args::parse(&argv)).unwrap();
+    let json = std::fs::read_to_string(&trace).unwrap();
+    assert!(json.contains("net.drops"), "trace export must carry net counters");
+    let _ = std::fs::remove_file(&trace);
+}
